@@ -1,0 +1,50 @@
+"""Paper Figure 6: perplexity over wall-time for a larger-K LightLDA run
+(the paper's 1000-topic ClueWeb12 curve, at CPU scale)."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lightlda as lda
+from repro.core import perplexity as ppl
+from repro.data import corpus as corpus_mod
+
+
+def main(fast: bool = False, k: int = 100, sweeps: int = 60):
+    if fast:
+        k, sweeps = 50, 20
+    corp = corpus_mod.generate_lda_corpus(
+        seed=0, num_docs=1200 if not fast else 400, mean_doc_len=90,
+        vocab_size=4000 if not fast else 1500, num_topics=24)
+    cfg = lda.LDAConfig(num_topics=k, vocab_size=corp.vocab_size,
+                        block_tokens=8192)
+    st = lda.init_state(jax.random.PRNGKey(0), jnp.asarray(corp.w),
+                        jnp.asarray(corp.d), corp.num_docs, cfg)
+    sweep = jax.jit(lambda s, key: lda.sweep(s, key, cfg))
+    sweep(st, jax.random.PRNGKey(9))  # warm compile
+    key = jax.random.PRNGKey(1)
+    curve = []
+    t0 = time.time()
+    for i in range(sweeps):
+        key, sub = jax.random.split(key)
+        st = sweep(st, sub)
+        if (i + 1) % max(sweeps // 12, 1) == 0:
+            p = float(ppl.training_perplexity(
+                st.w, st.d, st.valid, st.ndk, st.nwk.to_dense(),
+                st.nk.value, cfg.alpha, cfg.beta))
+            el = time.time() - t0
+            curve.append({"sweep": i + 1, "elapsed_s": el, "perplexity": p})
+            print(f"convergence,K={k},sweep={i+1},t={el:.1f}s,ppl={p:.1f}")
+    os.makedirs("experiments/bench", exist_ok=True)
+    with open("experiments/bench/convergence.json", "w") as f:
+        json.dump(curve, f, indent=2)
+    assert curve[-1]["perplexity"] < curve[0]["perplexity"]
+    return curve
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""Kernel microbenchmarks + the paper's central O(1)-vs-O(K) claim.
+
+1. mh_sample / delta_push Pallas kernels vs their jnp oracles
+   (interpret=True on CPU -- correctness-path timing; on a TPU pass
+   interpret=False for hardware numbers).
+2. Amortized O(1) sampling (alias + MH) vs O(K) full-conditional collapsed
+   Gibbs: per-token cost as K grows.  LightLDA's whole point (paper
+   section 3) is the flat curve.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import alias as alias_mod
+from repro.core import lightlda as lda
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+
+def _time(fn, *args, iters=5, **kwargs):
+    out = fn(*args, **kwargs)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args, **kwargs)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6  # us
+
+
+def bench_kernel_vs_ref(fast: bool = False):
+    b, k, v = (4096, 64, 1000) if fast else (16384, 128, 5000)
+    cfg = lda.LDAConfig(num_topics=k, vocab_size=v, mh_steps=2)
+    key = jax.random.PRNGKey(0)
+    inp = {}
+    ks = jax.random.split(key, 11)
+    inp["z0"] = jax.random.randint(ks[0], (b,), 0, k, dtype=jnp.int32)
+    inp["nwk_rows"] = jax.random.randint(ks[1], (b, k), 0, 100)
+    inp["ndk_rows"] = jax.random.randint(ks[2], (b, k), 0, 30)
+    inp["nk"] = jax.random.randint(ks[3], (k,), 50, 10000)
+    inp["aprob_rows"] = jax.random.uniform(ks[4], (b, k))
+    inp["aalias_rows"] = jax.random.randint(ks[5], (b, k), 0, k,
+                                            dtype=jnp.int32)
+    rng = lda.MHRandoms(jax.random.uniform(ks[6], (2, b)),
+                        jax.random.uniform(ks[7], (2, b)),
+                        jax.random.randint(ks[8], (2, b), 0, k,
+                                           dtype=jnp.int32),
+                        jax.random.uniform(ks[9], (2, b)))
+
+    ref_t = _time(jax.jit(lambda r, **kw: kref.mh_sample_ref(r, cfg=cfg, **kw)),
+                  rng, **inp)
+    ker_t = _time(jax.jit(lambda r, **kw: kops.mh_sample(r, cfg=cfg, **kw)),
+                  rng, **inp)
+    print(f"kernels,mh_sample_ref,{ref_t:.0f},us_per_block")
+    print(f"kernels,mh_sample_pallas_interpret,{ker_t:.0f},us_per_block")
+
+    w = jax.random.randint(ks[10], (b,), 0, v, dtype=jnp.int32)
+    zn = jax.random.randint(ks[0], (b,), 0, k, dtype=jnp.int32)
+    chg = inp["z0"] != zn
+    ref_t = _time(jax.jit(lambda: kref.delta_push_ref(w, inp["z0"], zn, chg,
+                                                      v, k)))
+    ker_t = _time(jax.jit(lambda: kops.delta_push(w, inp["z0"], zn, chg,
+                                                  v, k)))
+    print(f"kernels,delta_push_ref,{ref_t:.0f},us_per_block")
+    print(f"kernels,delta_push_pallas_interpret,{ker_t:.0f},us_per_block")
+
+
+def bench_o1_vs_ok(fast: bool = False):
+    """Per-token sampling cost: MH-alias (O(1)) vs full conditional (O(K))."""
+    b = 8192
+    v = 500
+    rows = []
+    for k in ([64, 256] if fast else [32, 128, 512, 2048]):
+        key = jax.random.PRNGKey(k)
+        ks = jax.random.split(key, 8)
+        nwk_rows = jax.random.randint(ks[0], (b, k), 0, 50).astype(jnp.float32)
+        ndk_rows = jax.random.randint(ks[1], (b, k), 0, 20).astype(jnp.float32)
+        nk = jax.random.randint(ks[2], (k,), 100, 10_000).astype(jnp.float32)
+        z0 = jax.random.randint(ks[3], (b,), 0, k, dtype=jnp.int32)
+        cfg = lda.LDAConfig(num_topics=k, vocab_size=v, mh_steps=2)
+        aprob = jax.random.uniform(ks[4], (b, k))
+        aalias = jax.random.randint(ks[5], (b, k), 0, k, dtype=jnp.int32)
+        rng = lda.MHRandoms(jax.random.uniform(ks[6], (2, b)),
+                            jax.random.uniform(ks[7], (2, b)),
+                            jax.random.randint(ks[6], (2, b), 0, k,
+                                               dtype=jnp.int32),
+                            jax.random.uniform(ks[7], (2, b)))
+
+        def mh():
+            return lda.mh_chain(rng, z0, nwk_rows, ndk_rows, nk, aprob,
+                                aalias, cfg)
+
+        def full_conditional():
+            # O(K): materialise the full posterior row per token and sample
+            p = (ndk_rows + cfg.alpha) * (nwk_rows + cfg.beta) / (
+                nk[None, :] + v * cfg.beta)
+            return jax.random.categorical(jax.random.PRNGKey(0),
+                                          jnp.log(p + 1e-30), axis=-1)
+
+        t_mh = _time(jax.jit(mh)) / b * 1e3     # ns/token
+        t_fc = _time(jax.jit(full_conditional)) / b * 1e3
+        rows.append((k, t_mh, t_fc))
+        print(f"kernels,sampling_cost,K={k},mh_ns_per_token={t_mh:.1f},"
+              f"fullcond_ns_per_token={t_fc:.1f}")
+    # the O(K) cost must grow much faster than the amortized-O(1) MH cost
+    # NOTE: mh_chain still *gathers* pre-pulled K-rows, so its vectorised
+    # cost is not perfectly flat on CPU; the ratio is the measurement.
+    k0, mh0, fc0 = rows[0]
+    k1, mh1, fc1 = rows[-1]
+    print(f"kernels,sampling_growth,K={k0}->{k1},"
+          f"mh_x{mh1/max(mh0,1e-9):.1f},fullcond_x{fc1/max(fc0,1e-9):.1f}")
+
+
+def main(fast: bool = False):
+    bench_kernel_vs_ref(fast)
+    bench_o1_vs_ok(fast)
+
+
+if __name__ == "__main__":
+    main()

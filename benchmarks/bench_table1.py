@@ -1,0 +1,129 @@
+"""Paper Table 1: perplexity / runtime / shuffle-write for our LightLDA-PS
+vs the Spark EM and Spark Online analogues, sweeping corpus size
+(2.5% - 10%) and topic count (20 - 80), at CPU-tractable scale.
+
+Columns mirror the paper:
+  size, K, algo, perplexity, runtime_s, shuffle_bytes
+Shuffle bytes: LightLDA-PS pushes dense count deltas (no shuffle; we report
+the actual per-sweep delta volume), Spark-EM shuffles per-token K-float
+messages (GraphX model), Spark-Online shuffles nothing but broadcasts
+lambda [K, V] per batch (driver bottleneck -- reported as broadcast bytes).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lda_em as em
+from repro.core import lda_online as ov
+from repro.core import lightlda as lda
+from repro.core import perplexity as ppl
+from repro.data import corpus as corpus_mod
+
+BASE_DOCS = 2400
+VOCAB = 2000
+TRUE_K = 16
+ITERS = 30
+
+
+def _ppl_counts(w, d, valid, ndk, nwk, nk, alpha, beta):
+    return float(ppl.training_perplexity(w, d, valid, ndk, nwk, nk,
+                                         alpha, beta))
+
+
+def run_lightlda(corp, k, iters=ITERS):
+    cfg = lda.LDAConfig(num_topics=k, vocab_size=corp.vocab_size,
+                        block_tokens=8192)
+    st = lda.init_state(jax.random.PRNGKey(0), jnp.asarray(corp.w),
+                        jnp.asarray(corp.d), corp.num_docs, cfg)
+    sweep = jax.jit(lambda s, key: lda.sweep(s, key, cfg))
+    sweep(st, jax.random.PRNGKey(1))  # compile outside the timer
+    key = jax.random.PRNGKey(2)
+    t0 = time.time()
+    for _ in range(iters):
+        key, sub = jax.random.split(key)
+        st = sweep(st, sub)
+    jax.block_until_ready(st.z)
+    rt = time.time() - t0
+    p = _ppl_counts(st.w, st.d, st.valid, st.ndk, st.nwk.to_dense(),
+                    st.nk.value, cfg.alpha, cfg.beta)
+    # per-sweep push volume: one dense [V, K] int32 delta per worker flush
+    shuffle = corp.vocab_size * k * 4
+    return p, rt, shuffle
+
+
+def run_em(corp, k, iters=ITERS):
+    cfg = em.EMConfig(num_topics=k, vocab_size=corp.vocab_size)
+    w, d = jnp.asarray(corp.w), jnp.asarray(corp.d)
+    valid = jnp.ones(corp.num_tokens, bool)
+    st = em.init_state(jax.random.PRNGKey(0), w, d, valid, corp.num_docs, cfg)
+    step = jax.jit(lambda s: em.em_iteration(s, w, d, valid, corp.num_docs,
+                                             cfg))
+    step(st)
+    t0 = time.time()
+    for _ in range(iters):
+        st = step(st)
+    jax.block_until_ready(st.nk)
+    rt = time.time() - t0
+    p = _ppl_counts(w, d, valid, st.ndk, st.nwk, st.nk, cfg.alpha, cfg.beta)
+    return p, rt, em.shuffle_bytes_per_iter(corp.num_tokens, cfg)
+
+
+def run_online(corp, k, iters=ITERS):
+    cfg = ov.OnlineConfig(num_topics=k, vocab_size=corp.vocab_size,
+                          batch_docs=128)
+    st = ov.init_state(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    w, d = jnp.asarray(corp.w), jnp.asarray(corp.d)
+    valid = jnp.ones(corp.num_tokens, bool)
+    # pre-densify minibatches (pipeline work, off the clock like Spark's
+    # RDD cache)
+    batches = []
+    for _ in range(iters):
+        docs = rng.choice(corp.num_docs, cfg.batch_docs, replace=False)
+        batches.append(jnp.asarray(corpus_mod.doc_term_matrix(corp, docs)))
+    mask = jnp.ones(cfg.batch_docs)
+    step = jax.jit(lambda s, dw: ov.online_step(s, dw, mask,
+                                                corp.num_docs, cfg))
+    step(st, batches[0])
+    t0 = time.time()
+    for dw in batches:
+        st = step(st, dw)
+    jax.block_until_ready(st.lam)
+    rt = time.time() - t0
+    phi = ov.phi_from_state(st)
+    theta = ppl.fold_in_theta(w, d, valid, phi, corp.num_docs, cfg.alpha)
+    ll = ppl.log_likelihood(w, d, valid, theta, phi, corp.num_docs)
+    p = float(jnp.exp(-ll / corp.num_tokens))
+    broadcast = k * corp.vocab_size * 4  # lambda broadcast per batch
+    return p, rt, broadcast
+
+
+def main(fast: bool = False):
+    big = corpus_mod.generate_lda_corpus(
+        seed=0, num_docs=BASE_DOCS, mean_doc_len=80, vocab_size=VOCAB,
+        num_topics=TRUE_K)
+    rows = []
+    sizes = [0.25, 0.5, 0.75, 1.0]       # the paper's 2.5/5/7.5/10% ladder
+    ks = [20] if fast else [20, 40, 60, 80]
+    size_list = sizes[:2] if fast else sizes
+    for frac in size_list:
+        corp = big.subset(frac) if frac < 1.0 else big
+        for k in ([20] if frac < 1.0 else ks):
+            for name, fn in (("lightlda-ps", run_lightlda),
+                             ("spark-em", run_em),
+                             ("spark-online", run_online)):
+                p, rt, sh = fn(corp, k)
+                rows.append(dict(size=frac, K=k, algo=name, perplexity=p,
+                                 runtime_s=rt, shuffle_bytes=sh,
+                                 tokens=corp.num_tokens))
+                print(f"table1,size={frac},K={k},{name},"
+                      f"ppl={p:.1f},runtime={rt:.2f}s,comm={sh/1e6:.1f}MB")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Benchmark harness -- one module per paper table/figure.
+
+  table1       paper Table 1 (perplexity / runtime / shuffle, size x K sweep)
+  loadbalance  paper Figure 5 (cyclic vs blocked request spread)
+  convergence  paper Figure 6 (perplexity over time, larger K)
+  kernels      Pallas kernels vs refs + O(1)-vs-O(K) sampling cost
+  comm         Table 1 shuffle column, from compiled SPMD collectives
+  roofline     deliverable (g) report from dry-run artifacts
+
+``python -m benchmarks.run`` runs everything at reduced ("fast") sizes and
+prints CSV-ish lines; ``--full`` uses the paper-ladder sizes; ``--only X``
+runs one module.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (bench_comm, bench_convergence, bench_kernels,
+                        bench_loadbalance, bench_roofline, bench_table1)
+
+MODULES = {
+    "table1": bench_table1.main,
+    "loadbalance": bench_loadbalance.main,
+    "convergence": bench_convergence.main,
+    "kernels": bench_kernels.main,
+    "comm": bench_comm.main,
+    "roofline": bench_roofline.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    fast = not args.full
+    names = [args.only] if args.only else list(MODULES)
+    failures = []
+    for name in names:
+        print(f"=== bench:{name} (fast={fast}) ===", flush=True)
+        t0 = time.time()
+        try:
+            MODULES[name](fast=fast)
+            print(f"=== bench:{name} done in {time.time()-t0:.1f}s ===",
+                  flush=True)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print("FAILED benches:", failures)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

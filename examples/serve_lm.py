@@ -1,0 +1,18 @@
+"""Batched serving demo: prefill + cached decode with the engine, on a
+smoke-scale gemma3 (sliding-window + global layers -- both cache paths).
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import os
+import subprocess
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.dirname(HERE)
+
+if __name__ == "__main__":
+    cmd = [sys.executable, "-m", "repro.launch.serve",
+           "--arch", "gemma3-4b", "--smoke", "--batch", "8",
+           "--prompt-len", "32", "--gen", "48", "--temperature", "0.8"]
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    raise SystemExit(subprocess.call(cmd, env=env, cwd=ROOT))

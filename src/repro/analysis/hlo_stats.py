@@ -1,0 +1,381 @@
+"""Trip-count-aware statistics from optimized (partitioned) HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE regardless of trip
+count (verified empirically), which under-reports scanned-layer models by a
+factor of num_layers.  This module re-derives the roofline inputs by walking
+the HLO module:
+
+  * builds the computation call graph (while body/condition, fusion calls,
+    plain calls) and propagates a usage multiplier from ENTRY, where a while
+    body's multiplier is scaled by the trip count parsed from its condition
+    (the literal in the loop-bound compare);
+  * FLOPs: 2 * prod(result dims) * prod(contracting dims) for every ``dot``,
+    in whatever computation it lives, times the computation's multiplier
+    (convolutions are counted like dots over their reduced dims; elementwise
+    flops are ignored -- dots dominate these models);
+  * memory bytes: for every instruction at fusion granularity (fusion-called
+    computations are charged at the call site; their internals are
+    register/VMEM traffic on a real TPU), bytes = result + operands;
+    parameters / tuples / bitcasts are skipped;
+  * collective bytes: per kind, wire-weighted (DESIGN/roofline docstring).
+
+All shapes in the partitioned module are per-device, so every statistic this
+module returns is PER-DEVICE.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "s2": 1, "u2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape_dims(shape_str: str) -> List[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    shape: str          # result shape string
+    op: str
+    operands: List[str]
+    attrs: str          # text after the operand list
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction]
+    fused: bool = False  # called via a fusion op
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([a-z][\w\-]*)\((.*?)\)(.*)$")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*(?:\(.*\))?\s*->.*\{")
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HDR_RE.match(line.strip())
+            if m:
+                cur = Computation(m.group(2), [])
+                if m.group(1):
+                    entry = m.group(2)
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            _, name, shape, op, operands, attrs = m.groups()
+            ops = [o.strip().lstrip("%") for o in _split_operands(operands)]
+            cur.instructions.append(Instruction(name, shape, op, ops, attrs))
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps, entry
+
+
+def _split_operands(s: str) -> List[str]:
+    """Split a top-level comma list (operands may contain nested parens)."""
+    out, depth, start = [], 0, 0
+    for i, ch in enumerate(s):
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            out.append(s[start:i])
+            start = i + 1
+    tail = s[start:].strip()
+    if tail:
+        out.append(tail)
+    return out
+
+
+def _callee(attrs: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=%?([\w\.\-]+)", attrs)
+    return m.group(1) if m else None
+
+
+def _trip_count_text(comps: Dict[str, Computation], cond_name: str,
+                     raw_text: str) -> int:
+    """Trip count from the condition's loop-bound compare.
+
+    Finds the ROOT compare, resolves whichever operand is a constant
+    defined in the same block (LT bound N -> N trips; LE -> N+1).  Falls
+    back to the largest integer literal in the block, then 1.
+    """
+    cond = comps.get(cond_name)
+    if cond is not None:
+        consts = {}
+        for ins in cond.instructions:
+            if ins.op == "constant":
+                m = re.search(r"constant\((\d+)\)",
+                              f"{ins.op}({','.join(ins.operands)})")
+                if m:
+                    consts[ins.name] = int(m.group(1))
+        for ins in cond.instructions:
+            if ins.op == "compare":
+                m = re.search(r"direction=(\w+)", ins.attrs)
+                direction = m.group(1) if m else "LT"
+                for o in ins.operands:
+                    if o in consts:
+                        n = consts[o]
+                        return n + 1 if direction == "LE" else n
+    block = _comp_block(raw_text, cond_name)
+    consts2 = [int(x) for x in re.findall(r"constant\((\d+)\)", block)]
+    return max(consts2) if consts2 else 1
+
+
+def _comp_block(text: str, name: str) -> str:
+    # match "%name (" or "name (" at a line start
+    pat = re.compile(r"^(ENTRY\s+)?%?" + re.escape(name) + r"\s*[\( ]",
+                     re.MULTILINE)
+    m = pat.search(text)
+    if not m:
+        return ""
+    start = m.start()
+    end = text.find("\n}", start)
+    return text[start:end] if end != -1 else text[start:]
+
+
+@dataclasses.dataclass
+class Stats:
+    flops: float = 0.0
+    mem_bytes: float = 0.0
+    coll_wire_bytes: float = 0.0
+    coll_counts: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    coll_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+
+    def add(self, other: "Stats", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.mem_bytes += other.mem_bytes * mult
+        self.coll_wire_bytes += other.coll_wire_bytes * mult
+        for k in _COLLECTIVES:
+            self.coll_counts[k] += other.coll_counts[k] * mult
+            self.coll_bytes[k] += other.coll_bytes[k] * mult
+
+
+_SKIP_BYTES_OPS = {"parameter", "tuple", "get-tuple-element", "bitcast",
+                   "constant", "after-all", "copy-start", "copy-done"}
+
+# Ops charged for HBM traffic.  The CPU backend leaves many elementwise ops
+# unfused that a TPU compiler would fuse into neighbours; charging every raw
+# elementwise op would overstate HBM traffic several-fold, so only
+# memory-significant ops (fusions, contractions, data movement, reductions,
+# collectives) are counted.  This is an approximation of TPU fusion
+# granularity; it is held fixed across all configs so comparisons are fair.
+_MEM_OPS = {"fusion", "dot", "convolution", "reduce", "reduce-window",
+            "dynamic-slice", "dynamic-update-slice", "slice", "concatenate",
+            "transpose", "copy", "gather", "scatter", "pad", "sort",
+            "cholesky", "triangular-solve", "fft",
+            "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+            "collective-permute", "all-gather-start", "all-reduce-start"}
+
+
+def _dot_flops(ins: Instruction, shapes: Dict[str, str]) -> float:
+    out_dims = _first_shape_dims(ins.shape)
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    lhs = shapes.get(ins.operands[0], "") if ins.operands else ""
+    lhs_dims = _first_shape_dims(lhs)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+    contracted = 1
+    if m and lhs_dims:
+        for d in m.group(1).split(","):
+            if d:
+                idx = int(d)
+                if idx < len(lhs_dims):
+                    contracted *= lhs_dims[idx]
+    return 2.0 * out_n * contracted
+
+
+def top_collectives(text: str, k: int = 15, default_group: int = 16):
+    """Aggregate wire bytes per (collective kind, shape) with trip-count
+    multipliers -- the profile that drives the section-Perf hillclimb.
+    Returns [(wire_bytes, kind, shape, weighted_count), ...] desc."""
+    agg: Dict[Tuple[str, str], List[float]] = {}
+
+    def record(kind, shape, wire, mult):
+        key = (kind, shape)
+        if key not in agg:
+            agg[key] = [0.0, 0.0]
+        agg[key][0] += wire * mult
+        agg[key][1] += mult
+
+    comps, entry = parse_module(text)
+    if entry is None:
+        return []
+
+    def walk(cname: str, mult: float, depth=0):
+        comp = comps.get(cname)
+        if comp is None or depth > 16:
+            return
+        for ins in comp.instructions:
+            if ins.op == "while":
+                body = _callee(ins.attrs, "body")
+                cond = _callee(ins.attrs, "condition")
+                trip = _trip_count_text(comps, cond, text) if cond else 1
+                if body:
+                    walk(body, mult * trip, depth + 1)
+                continue
+            if ins.op in ("call", "fusion", "conditional"):
+                for key in ("to_apply", "calls", "true_computation",
+                            "false_computation"):
+                    cal = _callee(ins.attrs, key)
+                    if cal:
+                        walk(cal, mult, depth + 1)
+                continue
+            for kind in _COLLECTIVES:
+                if ins.op == kind or ins.op == kind + "-start":
+                    size = _shape_bytes(ins.shape)
+                    n = default_group
+                    gm = re.search(r"replica_groups=\{\{([\d,]+)\}", ins.attrs)
+                    if gm:
+                        n = max(len(gm.group(1).split(",")), 1)
+                    frac = (n - 1) / max(n, 1)
+                    wire = {"all-gather": size * frac,
+                            "all-reduce": 2 * size * frac,
+                            "reduce-scatter": size * frac * n,
+                            "all-to-all": size * frac,
+                            "collective-permute": size}[kind]
+                    record(kind, ins.shape.split("{")[0], wire, mult)
+
+    walk(entry, 1.0)
+    rows = [(v[0], kk[0], kk[1], v[1]) for kk, v in agg.items()]
+    rows.sort(reverse=True)
+    return rows[:k]
+
+
+def analyze_text(text: str, default_group: int = 16) -> Stats:
+    comps, entry = parse_module(text)
+    if entry is None:
+        # fall back: treat the largest computation as entry
+        entry = max(comps, key=lambda c: len(comps[c].instructions))
+
+    # mark fusion-called computations
+    for comp in comps.values():
+        for ins in comp.instructions:
+            if ins.op == "fusion":
+                callee = _callee(ins.attrs, "calls")
+                if callee and callee in comps:
+                    comps[callee].fused = True
+
+    shapes_by_comp: Dict[str, Dict[str, str]] = {}
+    for cname, comp in comps.items():
+        shapes_by_comp[cname] = {i.name: i.shape for i in comp.instructions}
+
+    memo: Dict[str, Stats] = {}
+
+    def coll_kind(op: str) -> Optional[str]:
+        for k in _COLLECTIVES:
+            if op == k or op == k + "-start":
+                return k
+        return None
+
+    def stats_of(cname: str, depth=0) -> Stats:
+        if cname in memo:
+            return memo[cname]
+        comp = comps[cname]
+        st = Stats()
+        shapes = shapes_by_comp[cname]
+        for ins in comp.instructions:
+            if ins.op == "while":
+                body = _callee(ins.attrs, "body")
+                cond = _callee(ins.attrs, "condition")
+                trip = _trip_count_text(comps, cond, text) if cond else 1
+                if body in comps and depth < 16:
+                    st.add(stats_of(body, depth + 1), trip)
+                continue
+            if ins.op in ("call",):
+                callee = _callee(ins.attrs, "to_apply")
+                if callee in comps and depth < 16:
+                    st.add(stats_of(callee, depth + 1), 1.0)
+                continue
+            if ins.op == "conditional":
+                for key in ("true_computation", "false_computation"):
+                    callee = _callee(ins.attrs, key)
+                    if callee in comps and depth < 16:
+                        st.add(stats_of(callee, depth + 1), 1.0)
+                continue
+            if ins.op == "fusion":
+                callee = _callee(ins.attrs, "calls")
+                if callee in comps and depth < 16:
+                    sub = stats_of(callee, depth + 1)
+                    st.flops += sub.flops           # dots inside fusions
+                    st.coll_wire_bytes += sub.coll_wire_bytes
+                # memory at the fusion boundary:
+                st.mem_bytes += _shape_bytes(ins.shape)
+                for o in ins.operands:
+                    st.mem_bytes += _shape_bytes(shapes.get(o, ""))
+                continue
+            if ins.op in ("dot", "convolution"):
+                st.flops += _dot_flops(ins, shapes)
+            kind = coll_kind(ins.op)
+            if kind:
+                size = _shape_bytes(ins.shape)
+                st.coll_counts[kind] += 1
+                st.coll_bytes[kind] += size
+                n = default_group
+                gm = re.search(r"replica_groups=\{\{([\d,]+)\}", ins.attrs)
+                if gm:
+                    n = max(len(gm.group(1).split(",")), 1)
+                else:
+                    gm2 = re.search(r"replica_groups=\[\d+,(\d+)\]", ins.attrs)
+                    if gm2:
+                        n = max(int(gm2.group(1)), 1)
+                frac = (n - 1) / max(n, 1)
+                if kind == "all-gather":
+                    st.coll_wire_bytes += size * frac
+                elif kind == "all-reduce":
+                    st.coll_wire_bytes += 2 * size * frac
+                elif kind == "reduce-scatter":
+                    st.coll_wire_bytes += size * frac * n
+                elif kind == "all-to-all":
+                    st.coll_wire_bytes += size * frac
+                else:
+                    st.coll_wire_bytes += size
+            if not comp.fused and ins.op in _MEM_OPS:
+                st.mem_bytes += _shape_bytes(ins.shape)
+                for o in ins.operands:
+                    st.mem_bytes += _shape_bytes(shapes.get(o, ""))
+        memo[cname] = st
+        return st
+
+    return stats_of(entry)

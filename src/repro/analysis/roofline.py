@@ -1,0 +1,226 @@
+"""Roofline analysis from compiled dry-run artifacts (deliverable g).
+
+For each (arch, shape, mesh) the dry-run produces a compiled executable; we
+derive the three roofline terms:
+
+    compute term    = HLO_FLOPs            / (chips * peak_FLOPs)
+    memory term     = HLO_bytes_accessed   / (chips * HBM_bw)
+    collective term = collective_bytes     / (chips * ICI_bw)
+
+``cost_analysis()`` supplies flops and bytes; collective bytes are NOT in
+cost_analysis, so we parse the optimized HLO text and sum the *operand*
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, weighted by the wire traffic each algorithm actually
+moves (ring algorithms move ~(n-1)/n of the buffer per hop direction; we
+use the standard per-device wire-byte approximations).
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link (per direction)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# shapes like bf16[2,16,128]{2,1,0} or (f32[8], f32[8])
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    bytes_by_kind: Dict[str, int]    # result-buffer bytes per kind
+    wire_bytes: int                  # per-device wire traffic estimate
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str, group_size_hint: int = 16
+                      ) -> CollectiveStats:
+    """Scan optimized HLO for collective ops and sum buffer sizes.
+
+    Each HLO line looks like
+      %all-reduce.3 = bf16[1024,512]{1,0} all-reduce(%x), replica_groups=...
+    The *result* shape is on the lhs; for collectives the result size is the
+    full (gathered/reduced) buffer.  Wire-byte weights per device:
+      all-gather      (n-1)/n * result
+      all-reduce      2*(n-1)/n * buffer
+      reduce-scatter  (n-1)/n * input  (== result * (n-1))
+      all-to-all      (n-1)/n * buffer
+      collective-permute   1 * buffer
+    Group size n is parsed from replica_groups when present.
+    """
+    counts = {k: 0 for k in _COLLECTIVES}
+    bytes_by_kind = {k: 0 for k in _COLLECTIVES}
+    wire = 0.0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+(\w[\w-]*)\(", stripped)
+        if not m:
+            continue
+        shape_str, op = m.groups()
+        kind = None
+        for k in _COLLECTIVES:
+            if op == k or op == k + "-start" or op == k + "-done":
+                kind = k
+                break
+        if kind is None:
+            continue
+        if op.endswith("-done"):
+            continue  # counted at -start
+        size = _shape_bytes(shape_str)
+        counts[kind] += 1
+        bytes_by_kind[kind] += size
+        # group size from replica_groups={{...}}
+        n = group_size_hint
+        gm = re.search(r"replica_groups=\{\{([\d,]+)\}", stripped)
+        if gm:
+            n = max(len(gm.group(1).split(",")), 1)
+        frac = (n - 1) / max(n, 1)
+        if kind == "all-gather":
+            wire += size * frac
+        elif kind == "all-reduce":
+            wire += 2 * size * frac
+        elif kind == "reduce-scatter":
+            wire += size * frac * n   # result is the scattered shard
+        elif kind == "all-to-all":
+            wire += size * frac
+        elif kind == "collective-permute":
+            wire += size
+    return CollectiveStats(counts, bytes_by_kind, int(wire))
+
+
+@dataclasses.dataclass
+class Roofline:
+    name: str
+    chips: int
+    hlo_flops: float          # whole-program FLOPs (all chips)
+    hlo_bytes: float          # whole-program bytes accessed
+    collective_wire_bytes: float  # per-chip wire bytes
+    collective_counts: Dict[str, int]
+    model_flops: float        # 6*N*D (active params for MoE)
+    per_device_hbm_bytes: float = 0.0
+    raw_cost_flops: float = 0.0   # cost_analysis() as reported (body-once)
+    raw_cost_bytes: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_wire_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    def row(self) -> dict:
+        return {
+            "name": self.name,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes,
+            "collective_wire_bytes": self.collective_wire_bytes,
+            "collective_counts": self.collective_counts,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "per_device_hbm_bytes": self.per_device_hbm_bytes,
+            "raw_cost_flops": self.raw_cost_flops,
+            "raw_cost_bytes": self.raw_cost_bytes,
+        }
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6 * N_active * D for train, 2 * N_active * D for
+    forward-only (prefill), 2 * N_active per token for decode."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch   # decode: one token per sequence
+
+
+def analyze(name: str, compiled, lowered_text: str, chips: int,
+            cfg=None, shape=None, mem_bytes: float = 0.0) -> Roofline:
+    """Derive per-device roofline terms.
+
+    The partitioned HLO's shapes are per-device, and cost_analysis counts
+    while bodies once (verified), so the authoritative numbers come from the
+    trip-count-aware walker in hlo_stats; raw cost_analysis numbers are kept
+    in the row for reference.
+    """
+    from repro.analysis import hlo_stats
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    raw_flops = float(cost.get("flops", 0.0))
+    raw_bytes = float(cost.get("bytes accessed", 0.0))
+    st = hlo_stats.analyze_text(lowered_text)
+    mf = model_flops(cfg, shape) if cfg is not None and shape is not None else 0.0
+    r = Roofline(name, chips, st.flops * chips, st.mem_bytes * chips,
+                 st.coll_wire_bytes,
+                 {k: int(v) for k, v in st.coll_counts.items() if v},
+                 mf, mem_bytes)
+    r.raw_cost_flops = raw_flops
+    r.raw_cost_bytes = raw_bytes
+    return r
+
+
+def fmt_table(rows: List[dict]) -> str:
+    hdr = (f"{'pair':42s} {'chips':>5s} {'t_comp':>10s} {'t_mem':>10s} "
+           f"{'t_coll':>10s} {'bound':>10s} {'MF/HF':>6s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['name']:42s} {r['chips']:5d} "
+            f"{r['t_compute_s']:10.3e} {r['t_memory_s']:10.3e} "
+            f"{r['t_collective_s']:10.3e} {r['bottleneck']:>10s} "
+            f"{r['useful_flops_ratio']:6.2f}")
+    return "\n".join(lines)

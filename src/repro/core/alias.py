@@ -1,0 +1,134 @@
+"""Vose alias tables in JAX (paper section 3, reference [14]).
+
+LightLDA's amortized O(1) word-proposal draws come from alias tables built
+once per block from the (stale) word-topic counts.  This module implements
+
+  * ``build_alias``        -- exact Vose construction for one probability row,
+  * ``build_alias_rows``   -- vmapped construction for a [V, K] block,
+  * ``alias_sample``       -- O(1) draw given (prob, alias) rows and uniforms.
+
+Construction uses the classic two-stack algorithm expressed as a bounded
+``lax.fori_loop``: each iteration retires exactly one "small" entry and each
+index can enter the small stack at most once (initially, or when a large
+donor's residual drops below 1), so ``2K`` iterations always suffice.  The
+stacks are fixed-size index arrays + counters, which makes the whole thing
+jit- and vmap-friendly (no dynamic shapes).
+
+The kernel variant lives in kernels/alias_build.py; this file is also its
+reference oracle.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AliasTable(NamedTuple):
+    """Alias table rows.  ``prob[i]`` is the acceptance probability of bucket
+    ``i``; on rejection the draw is ``alias[i]``."""
+
+    prob: jax.Array   # [..., K] float32
+    alias: jax.Array  # [..., K] int32
+
+
+def build_alias(p: jax.Array) -> AliasTable:
+    """Exact Vose construction for a single unnormalised weight row ``p[K]``.
+
+    Returns (prob, alias) with the invariant that sampling bucket
+    ``i ~ U{0..K-1}`` and accepting with ``prob[i]`` (else ``alias[i]``)
+    draws exactly from ``p / p.sum()``.
+    """
+    k = p.shape[0]
+    psum = jnp.maximum(p.sum(), 1e-30)
+    q = p.astype(jnp.float32) * (k / psum)   # scaled weights, mean 1
+
+    is_small = q < 1.0
+    idx = jnp.arange(k, dtype=jnp.int32)
+
+    # Fixed-capacity stacks: positions via cumulative counts; entries that do
+    # not belong to a stack scatter to the out-of-range slot ``k`` and are
+    # dropped.
+    small_pos = jnp.cumsum(is_small) - 1
+    large_pos = jnp.cumsum(~is_small) - 1
+    small_stack = jnp.zeros((k,), jnp.int32).at[
+        jnp.where(is_small, small_pos, k)].set(idx, mode="drop")
+    large_stack = jnp.zeros((k,), jnp.int32).at[
+        jnp.where(~is_small, large_pos, k)].set(idx, mode="drop")
+    n_small = jnp.sum(is_small).astype(jnp.int32)
+    n_large = (k - n_small).astype(jnp.int32)
+
+    prob = jnp.ones((k,), jnp.float32)
+    alias = idx  # default: self-alias (prob 1)
+
+    def body(_, carry):
+        q, prob, alias, small_stack, large_stack, n_small, n_large = carry
+        active = (n_small > 0) & (n_large > 0)
+
+        s = small_stack[jnp.maximum(n_small - 1, 0)]
+        l = large_stack[jnp.maximum(n_large - 1, 0)]
+
+        new_prob = prob.at[s].set(jnp.where(active, q[s], prob[s]))
+        new_alias = alias.at[s].set(jnp.where(active, l, alias[s]))
+        q_l = q[l] + q[s] - 1.0
+        new_q = q.at[l].set(jnp.where(active, q_l, q[l]))
+
+        n_small_after = jnp.where(active, n_small - 1, n_small)
+        # Donor exhausted below 1: move it from the large to the small stack.
+        demote = active & (q_l < 1.0)
+        n_large_after = jnp.where(demote, n_large - 1, n_large)
+        small_stack = small_stack.at[n_small_after].set(
+            jnp.where(demote, l, small_stack[jnp.minimum(n_small_after, k - 1)]),
+            mode="drop")
+        n_small_after = jnp.where(demote, n_small_after + 1, n_small_after)
+
+        return (new_q, new_prob, new_alias, small_stack, large_stack,
+                n_small_after, n_large_after)
+
+    carry = (q, prob, alias, small_stack, large_stack, n_small, n_large)
+    carry = jax.lax.fori_loop(0, 2 * k, body, carry)
+    _, prob, alias, _, _, _, _ = carry
+    return AliasTable(jnp.clip(prob, 0.0, 1.0), alias)
+
+
+@jax.jit
+def build_alias_rows(p_rows: jax.Array) -> AliasTable:
+    """Vose construction vmapped over rows: ``p_rows`` is ``[V, K]``."""
+    return jax.vmap(build_alias)(p_rows)
+
+
+def alias_sample(prob: jax.Array, alias: jax.Array, u: jax.Array) -> jax.Array:
+    """O(1) alias draw.
+
+    ``prob``/``alias`` are the table rows *already gathered per draw*
+    ([..., K]); ``u`` is uniform [0,1) of the batch shape.  Uses the
+    single-uniform trick: the integer part picks the bucket, the fractional
+    remainder (rescaled) is the accept coin -- one random number per draw,
+    as in the LightLDA implementation.
+    """
+    k = prob.shape[-1]
+    scaled = u * k
+    bucket = jnp.minimum(scaled.astype(jnp.int32), k - 1)
+    coin = scaled - bucket  # fresh U[0,1), independent of bucket
+    p = jnp.take_along_axis(prob, bucket[..., None], axis=-1)[..., 0]
+    a = jnp.take_along_axis(alias, bucket[..., None], axis=-1)[..., 0]
+    return jnp.where(coin < p, bucket, a)
+
+
+def alias_pmf(table: AliasTable) -> jax.Array:
+    """Exact pmf induced by an alias table (for testing): each bucket i
+    contributes prob[i]/K to i and (1-prob[i])/K to alias[i]."""
+    prob, alias = table
+    k = prob.shape[-1]
+    direct = prob / k
+    spill = (1.0 - prob) / k
+
+    def one(direct_row, spill_row, alias_row):
+        pmf = direct_row
+        return pmf.at[alias_row].add(spill_row)
+
+    if prob.ndim == 1:
+        return one(direct, spill, alias)
+    return jax.vmap(one)(direct, spill, alias)

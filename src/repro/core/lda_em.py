@@ -1,0 +1,93 @@
+"""Baseline 1: (variational) EM LDA -- the analogue of Spark MLlib's
+``EMLDAOptimizer`` (paper section 4, "Spark EM").
+
+MLlib's EM optimizer follows Asuncion et al. (2009) [paper ref 2]: keep
+*expected* count tables, and alternate
+
+  E-step:  γ_ik ∝ (n_{d_i k} + α) · (n_{w_i k} + β) / (n_k + Vβ)
+  M-step:  n_dk = Σ_{i: d_i=d} γ_ik,   n_wk = Σ_{i: w_i=w} γ_ik,  n_k = Σ_w n_wk
+
+over token-level responsibilities γ.  In Spark this is a GraphX message-
+passing job whose per-iteration *shuffle* materialises the γ messages --
+that shuffle is exactly the "Shuffle write (GB)" column of paper Table 1
+that the parameter-server architecture eliminates.  Here the same algorithm
+is a couple of segment-sums; we additionally report the bytes that a
+map-reduce realisation would shuffle (``shuffle_bytes_per_iter``) so the
+benchmark can reproduce the paper's comparison.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class EMConfig:
+    num_topics: int
+    vocab_size: int
+    alpha: float = 0.1
+    beta: float = 0.01
+
+    @property
+    def K(self):
+        return self.num_topics
+
+    @property
+    def V(self):
+        return self.vocab_size
+
+
+class EMState(NamedTuple):
+    gamma: jax.Array   # [N, K] token responsibilities
+    ndk: jax.Array     # [D, K] expected doc-topic counts
+    nwk: jax.Array     # [V, K] expected word-topic counts
+    nk: jax.Array      # [K]
+
+
+def init_state(key: jax.Array, w: jax.Array, d: jax.Array, valid: jax.Array,
+               num_docs: int, cfg: EMConfig) -> EMState:
+    n = w.shape[0]
+    gamma = jax.random.dirichlet(key, jnp.ones((cfg.K,)), (n,)).astype(jnp.float32)
+    gamma = gamma * valid[:, None]
+    return _m_step(gamma, w, d, num_docs, cfg)
+
+
+def _m_step(gamma, w, d, num_docs, cfg: EMConfig) -> EMState:
+    ndk = jnp.zeros((num_docs, cfg.K), jnp.float32).at[d].add(gamma)
+    nwk = jnp.zeros((cfg.V, cfg.K), jnp.float32).at[w].add(gamma)
+    nk = nwk.sum(0)
+    return EMState(gamma, ndk, nwk, nk)
+
+
+@partial(jax.jit, static_argnames=("num_docs", "cfg"))
+def em_iteration(state: EMState, w, d, valid, num_docs: int,
+                 cfg: EMConfig) -> EMState:
+    # E-step (CVB0-style: subtract the token's own responsibility so each
+    # token sees counts excluding itself, as MLlib/Asuncion'09 do).
+    ndk_i = jnp.take(state.ndk, d, axis=0) - state.gamma
+    nwk_i = jnp.take(state.nwk, w, axis=0) - state.gamma
+    nk_i = state.nk[None, :] - state.gamma
+    resp = (ndk_i + cfg.alpha) * (nwk_i + cfg.beta) / (nk_i + cfg.V * cfg.beta)
+    resp = jnp.maximum(resp, 0.0)
+    resp = resp / jnp.maximum(resp.sum(-1, keepdims=True), 1e-30)
+    resp = resp * valid[:, None]
+    # M-step
+    return _m_step(resp, w, d, num_docs, cfg)
+
+
+def shuffle_bytes_per_iter(num_tokens: int, cfg: EMConfig) -> int:
+    """Bytes a map-reduce (GraphX) realisation shuffles per iteration: one
+    K-float message per token edge, each direction (doc->word, word->doc).
+    This models paper Table 1's 'Shuffle write' column for Spark EM."""
+    return 2 * num_tokens * cfg.K * 4
+
+
+def train(state: EMState, w, d, valid, num_docs: int, cfg: EMConfig,
+          num_iters: int) -> EMState:
+    for _ in range(num_iters):
+        state = em_iteration(state, w, d, valid, num_docs, cfg)
+    return state

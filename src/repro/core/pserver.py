@@ -1,0 +1,299 @@
+"""Asynchronous parameter server, adapted to SPMD JAX.
+
+This module is the JAX adaptation of the paper's Glint parameter server
+(paper section 2).  It provides a *distributed matrix* and *distributed
+vector* with the paper's two primitives:
+
+  * ``pull``  -- read rows (idempotent; paper section 2.3),
+  * ``push``  -- additive update of rows (commutative/associative; paper
+    sections 2.4-2.5, so exactly-once semantics reduce to "apply each delta
+    once", which SPMD collectives give us by construction).
+
+Layout follows the paper exactly: **row-wise cyclic partitioning** (paper
+section 2.2) so that frequency-ordered features are implicitly load balanced
+(paper section 3.2, figure 5).  Row ``r`` of the logical matrix lives on
+shard ``r mod S`` at local offset ``r div S``.
+
+The physical array is stored *in cyclic order*: shard ``s`` owns the
+contiguous physical slice ``[s * rows_per_shard, (s+1) * rows_per_shard)``,
+which corresponds to logical rows ``{r : r mod S == s}``.  Sharding that
+physical array with ``PartitionSpec(axis, None)`` therefore reproduces the
+paper's server layout on a TPU mesh axis, while a single-device program can
+use the same code with ``S == 1``.
+
+Asynchrony is realised as a *bounded-staleness* schedule (DESIGN.md section
+2): workers sample a block of tokens against a stale snapshot while
+accumulating local deltas (the paper's 100k-reassignment buffer / hot-word
+dense matrix, section 3.3), and the deltas are merged at block boundaries
+with a reduction -- addition being commutative/associative is exactly what
+makes this legal, as the paper argues in section 2.5.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@dataclasses.dataclass(frozen=True)
+class CyclicLayout:
+    """Row-cyclic layout of ``num_rows`` logical rows over ``num_shards``.
+
+    ``pad_rows`` is the padded logical row count (a multiple of
+    ``num_shards``); physical arrays have ``pad_rows`` rows, arranged so that
+    each shard's rows are contiguous.
+    """
+
+    num_rows: int
+    num_shards: int
+
+    @property
+    def rows_per_shard(self) -> int:
+        return _ceil_div(self.num_rows, self.num_shards)
+
+    @property
+    def pad_rows(self) -> int:
+        return self.rows_per_shard * self.num_shards
+
+    # -- logical <-> physical index maps (both are cheap integer formulas) --
+    def to_physical(self, row):
+        """Logical row id -> physical index in the cyclic array."""
+        return (row % self.num_shards) * self.rows_per_shard + row // self.num_shards
+
+    def to_logical(self, phys):
+        """Physical index -> logical row id (inverse of ``to_physical``)."""
+        return (phys % self.rows_per_shard) * self.num_shards + phys // self.rows_per_shard
+
+    def shard_of(self, row):
+        """Which server shard owns a logical row (paper section 2.2)."""
+        return row % self.num_shards
+
+    def permutation(self) -> np.ndarray:
+        """Physical->logical permutation as a numpy array (for host setup)."""
+        phys = np.arange(self.pad_rows)
+        return (phys % self.rows_per_shard) * self.num_shards + phys // self.rows_per_shard
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DistributedMatrix:
+    """The paper's distributed matrix (section 2), cyclic layout.
+
+    ``value`` is the physical (cyclic-ordered) array of shape
+    ``[layout.pad_rows, cols]``.  Rows beyond ``layout.num_rows`` are padding
+    and always zero.
+    """
+
+    value: jax.Array              # [pad_rows, cols], cyclic physical order
+    num_rows: int                 # static
+    num_shards: int               # static
+
+    # --- pytree plumbing (num_rows/num_shards are static metadata) ---
+    def tree_flatten(self):
+        return (self.value,), (self.num_rows, self.num_shards)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux[0], aux[1])
+
+    # --- construction ---
+    @classmethod
+    def zeros(cls, num_rows: int, cols: int, num_shards: int = 1,
+              dtype=jnp.int32) -> "DistributedMatrix":
+        layout = CyclicLayout(num_rows, num_shards)
+        return cls(jnp.zeros((layout.pad_rows, cols), dtype), num_rows, num_shards)
+
+    @classmethod
+    def from_dense(cls, dense: jax.Array, num_shards: int = 1) -> "DistributedMatrix":
+        """Build from a logical [num_rows, cols] matrix."""
+        num_rows, cols = dense.shape
+        layout = CyclicLayout(num_rows, num_shards)
+        pad = layout.pad_rows - num_rows
+        padded = jnp.pad(dense, ((0, pad), (0, 0)))
+        perm = jnp.asarray(layout.permutation())
+        return cls(padded[perm], num_rows, num_shards)
+
+    # --- properties ---
+    @property
+    def layout(self) -> CyclicLayout:
+        return CyclicLayout(self.num_rows, self.num_shards)
+
+    @property
+    def cols(self) -> int:
+        return self.value.shape[1]
+
+    def spec(self, axis: Optional[str]) -> P:
+        """PartitionSpec placing each server shard on one mesh slice."""
+        return P(axis, None)
+
+    # --- the paper's two primitives -------------------------------------
+    def pull(self, rows: jax.Array) -> jax.Array:
+        """Pull logical rows (paper section 2.3).  Idempotent read."""
+        phys = self.layout.to_physical(rows)
+        return jnp.take(self.value, phys, axis=0)
+
+    def push(self, rows: jax.Array, deltas: jax.Array) -> "DistributedMatrix":
+        """Push additive deltas to logical rows (paper sections 2.4-2.5).
+
+        Duplicate row indices are legal and accumulate -- addition is
+        commutative and associative, which is the paper's argument for why
+        no locking / conflict resolution is needed.
+        """
+        phys = self.layout.to_physical(rows)
+        new = self.value.at[phys].add(deltas.astype(self.value.dtype))
+        return dataclasses.replace(self, value=new)
+
+    def push_dense(self, delta_dense: jax.Array) -> "DistributedMatrix":
+        """Push a *dense* logical [num_rows, cols] delta.
+
+        This is the flush of the paper's hot-word dense buffer (section 3.3)
+        generalised to the whole matrix: the caller pre-aggregates all
+        reassignments into a dense delta (see kernels/delta_push.py) and the
+        server applies it in one operation.
+        """
+        layout = self.layout
+        pad = layout.pad_rows - self.num_rows
+        padded = jnp.pad(delta_dense, ((0, pad), (0, 0)))
+        perm = jnp.asarray(layout.permutation())
+        new = self.value + padded[perm].astype(self.value.dtype)
+        return dataclasses.replace(self, value=new)
+
+    # --- block access for the pipelined sweep (paper section 3.4) -------
+    def num_blocks(self, rows_per_block: int) -> int:
+        return _ceil_div(self.layout.pad_rows, rows_per_block)
+
+    def pull_block(self, block: jax.Array, rows_per_block: int) -> jax.Array:
+        """Pull a contiguous *physical* block of rows.
+
+        Because physical order is cyclic, a physical block touches every
+        server shard equally -- this is the paper's implicit load balancing
+        (section 3.2) applied to the pipelined block pulls (section 3.4).
+        Returns [rows_per_block, cols]; the logical ids of the pulled rows
+        are ``block_logical_rows``.
+        """
+        start = block * rows_per_block
+        return jax.lax.dynamic_slice_in_dim(self.value, start, rows_per_block, axis=0)
+
+    def block_logical_rows(self, block: jax.Array, rows_per_block: int) -> jax.Array:
+        start = block * rows_per_block
+        phys = start + jnp.arange(rows_per_block)
+        return self.layout.to_logical(phys)
+
+    # --- conversions ------------------------------------------------------
+    def to_dense(self) -> jax.Array:
+        """Materialise the logical [num_rows, cols] matrix."""
+        phys = self.layout.to_physical(jnp.arange(self.num_rows))
+        return jnp.take(self.value, phys, axis=0)
+
+    def with_sharding(self, mesh, axis: Optional[str]) -> "DistributedMatrix":
+        """Constrain the physical array onto a mesh axis (one shard per slice)."""
+        sharding = jax.sharding.NamedSharding(mesh, self.spec(axis))
+        return dataclasses.replace(
+            self, value=jax.lax.with_sharding_constraint(self.value, sharding))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DistributedVector:
+    """The paper's distributed vector.  For LDA this stores ``n_k`` which is
+    tiny (K entries) and read by every sampling step, so the natural TPU
+    placement is *replicated* -- pushes become an all-reduce.  The pull/push
+    API is kept for symmetry with the paper."""
+
+    value: jax.Array  # [n]
+
+    def tree_flatten(self):
+        return (self.value,), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0])
+
+    @classmethod
+    def zeros(cls, n: int, dtype=jnp.int32) -> "DistributedVector":
+        return cls(jnp.zeros((n,), dtype))
+
+    def pull(self, idx: jax.Array) -> jax.Array:
+        return jnp.take(self.value, idx, axis=0)
+
+    def push(self, idx: jax.Array, deltas: jax.Array) -> "DistributedVector":
+        return DistributedVector(self.value.at[idx].add(deltas.astype(self.value.dtype)))
+
+    def push_dense(self, delta: jax.Array) -> "DistributedVector":
+        return DistributedVector(self.value + delta.astype(self.value.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Bounded-staleness delta buffer (paper section 3.3 "Buffering").
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DeltaBuffer:
+    """Local, dense aggregation buffer for additive pushes.
+
+    The paper buffers ~100k topic reassignments per message and keeps a
+    *dense* local matrix for the hottest 2000 words (section 3.3).  On TPU a
+    dense [V, K] int32 buffer is cheap relative to HBM, and aggregating into
+    it via one-hot matmuls (kernels/delta_push.py) uses the MXU; so we use
+    one dense buffer for *all* words -- the hot-word special case becomes the
+    general case.  ``flush`` pushes the buffer and clears it; in the
+    distributed sweep the flush includes the cross-worker reduction.
+    """
+
+    delta: jax.Array  # [num_rows, cols] logical order
+
+    def tree_flatten(self):
+        return (self.delta,), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0])
+
+    @classmethod
+    def zeros(cls, num_rows: int, cols: int, dtype=jnp.int32) -> "DeltaBuffer":
+        return cls(jnp.zeros((num_rows, cols), dtype))
+
+    def accumulate(self, rows: jax.Array, cols: jax.Array,
+                   amount: jax.Array) -> "DeltaBuffer":
+        """Scatter-style accumulation (reference path; the kernel path in
+        kernels/ops.py builds the same dense delta with MXU matmuls)."""
+        return DeltaBuffer(self.delta.at[rows, cols].add(amount.astype(self.delta.dtype)))
+
+    def flush(self, matrix: DistributedMatrix) -> Tuple[DistributedMatrix, "DeltaBuffer"]:
+        new = matrix.push_dense(self.delta)
+        return new, DeltaBuffer(jnp.zeros_like(self.delta))
+
+
+# ---------------------------------------------------------------------------
+# SPMD pull / push collectives (used under shard_map).
+# ---------------------------------------------------------------------------
+
+def spmd_pull_all(local_shard: jax.Array, axis_name: str) -> jax.Array:
+    """Snapshot pull: all-gather every server shard's rows along the model
+    axis.  Result is the full physical (cyclic-ordered) matrix, identical on
+    every worker.  This is the TPU equivalent of each worker pulling the
+    whole model once per block (DESIGN.md section 2): the lossless ICI links
+    make the paper's retry/backoff protocol unnecessary."""
+    return jax.lax.all_gather(local_shard, axis_name, axis=0, tiled=True)
+
+
+def spmd_push_reduce(delta_phys: jax.Array, axis_name: str,
+                     shard_index: jax.Array, num_shards: int) -> jax.Array:
+    """Push: reduce worker deltas and keep only this server's rows.
+
+    ``delta_phys`` is the full physical-order dense delta computed locally by
+    each worker.  A psum_scatter along the model axis both (a) sums the
+    deltas from all workers in that axis and (b) hands each server shard its
+    own row slice -- this is the exactly-once additive push of paper
+    section 2.4/2.5 realised as one hardware collective."""
+    return jax.lax.psum_scatter(delta_phys, axis_name, scatter_dimension=0, tiled=True)

@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: count-delta aggregation as one-hot MXU matmuls.
+
+The paper buffers topic reassignments and aggregates the hottest 2000 words
+into a local *dense* matrix before pushing (section 3.3), because scatter-add
+per reassignment is the bottleneck.  The TPU-native generalisation is to
+aggregate *everything* densely on the MXU:
+
+    dn_wk = onehot(w)^T @ (onehot(z_new) - onehot(z_old))     over changed tokens
+
+which turns a scatter (no TPU hardware support) into two one-hot
+constructions (VPU compares) and one [TB,V]x[TB,K] matmul (MXU).  +/-1
+values are exact in f32, so the int32 result is exact.
+
+  grid        : (V / VB, B / TB), token dim innermost so each vocab block
+                accumulates over all token tiles before moving on
+  VMEM blocks : tokens [1, TB]; output [VB, Kp] accumulator
+
+Oracle: ``ref.delta_push_ref`` (dense scatter-add).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _delta_kernel(w_ref, zold_ref, znew_ref, chg_ref, out_ref, *,
+                  vb: int):
+    v_blk = pl.program_id(0)
+    t_blk = pl.program_id(1)
+
+    @pl.when(t_blk == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    tb = w_ref.shape[1]
+    vb_, kp = out_ref.shape
+
+    w = w_ref[0, :]
+    zo = zold_ref[0, :]
+    zn = znew_ref[0, :]
+    chg = chg_ref[0, :].astype(jnp.float32)
+
+    # one-hot over this vocab block only: local id in [0, VB)
+    w_local = w - v_blk * vb
+    iota_v = jax.lax.broadcasted_iota(jnp.int32, (tb, vb_), 1)
+    onehot_w = jnp.where(iota_v == w_local[:, None], chg[:, None], 0.0)
+
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, (tb, kp), 1)
+    dz = ((iota_k == zn[:, None]).astype(jnp.float32)
+          - (iota_k == zo[:, None]).astype(jnp.float32))
+
+    acc = jax.lax.dot_general(
+        onehot_w, dz, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    out_ref[...] += acc.astype(jnp.int32)
+
+
+def delta_push_call(w, z_old, z_new, changed, *, vocab_pad: int, k_pad: int,
+                    tile_tokens: int = 1024, tile_vocab: int = 512,
+                    interpret: bool = True):
+    """Aggregate one block of reassignments into a dense [vocab_pad, k_pad]
+    int32 delta.  Inputs are [1, B] int32 (``changed`` as int32 mask); B must
+    be a multiple of ``tile_tokens``; vocab_pad of ``tile_vocab``; k_pad of
+    128 (ops.py maintains this)."""
+    b = w.shape[1]
+    tb = min(tile_tokens, b)
+    vb = min(tile_vocab, vocab_pad)
+    assert b % tb == 0 and vocab_pad % vb == 0
+    grid = (vocab_pad // vb, b // tb)
+
+    tok = pl.BlockSpec((1, tb), lambda v, t: (0, t))
+    out = pl.BlockSpec((vb, k_pad), lambda v, t: (v, 0))
+
+    return pl.pallas_call(
+        functools.partial(_delta_kernel, vb=vb),
+        grid=grid,
+        in_specs=[tok, tok, tok, tok],
+        out_specs=out,
+        out_shape=jax.ShapeDtypeStruct((vocab_pad, k_pad), jnp.int32),
+        interpret=interpret,
+    )(w, z_old, z_new, changed)

@@ -1,0 +1,248 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape) this lowers + compiles the real step
+function -- train_step (loss -> grads -> AdamW), prefill, or serve_step (one
+token against a seq_len cache) -- on the production mesh with the production
+shardings, using ShapeDtypeStruct stand-ins (no allocation).  Failures here
+(sharding mismatch, OOM at compile, unsupported collective) are bugs.
+
+Outputs per combo: memory_analysis (fits?), cost_analysis (FLOPs/bytes),
+collective stats parsed from the optimized HLO, and the roofline terms --
+written as JSON under experiments/dryrun/ for EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # single pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+"""
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.analysis import roofline as rl
+from repro.configs import registry
+from repro.configs.base import INPUT_SHAPES, TrainConfig
+from repro.launch.mesh import ctx_for, make_production_mesh
+from repro.models import transformer as tfm
+from repro.sharding.specs import (MeshCtx, cache_specs, param_specs,
+                                  tokens_spec)
+from repro.train import loop as train_loop
+from repro.train import optimizer as opt
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _named(ctx, spec):
+    return jax.sharding.NamedSharding(ctx.mesh, spec)
+
+
+def _batchable(ctx: MeshCtx, batch: int) -> tuple:
+    """dp axes usable for this batch size (drop axes batch can't fill)."""
+    return ctx.dp if batch >= ctx.dp_size and batch % ctx.dp_size == 0 else ()
+
+
+def cache_shardings(cfg, shape, ctx: MeshCtx, caches_tree):
+    sp = cache_specs(cfg, shape, ctx)
+
+    def one(path, leaf):
+        name = None
+        for p in reversed(path):
+            if isinstance(p, jax.tree_util.DictKey):
+                name = str(p.key)
+                break
+        if name in ("k", "v"):
+            return _named(ctx, sp["kv"])
+        if name in ("ckv", "krope"):
+            return _named(ctx, sp["mla"])
+        if name == "ssm":
+            return _named(ctx, sp["ssm_state"])
+        if name == "conv":
+            return _named(ctx, sp["conv"])
+        raise KeyError(f"unknown cache leaf {name} at {path}")
+
+    return jax.tree_util.tree_map_with_path(one, caches_tree)
+
+
+def build_lowering(arch: str, shape_name: str, multi_pod: bool):
+    """Returns (lowered, cfg, shape, chips)."""
+    cfg = registry.get(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if not registry.shape_supported(cfg, shape):
+        raise ValueError(f"{arch} skips {shape_name} (DESIGN.md shape skips)")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = ctx_for(mesh)
+    chips = mesh.devices.size
+    key = jax.random.PRNGKey(0)
+    specs = registry.input_specs(cfg, shape)
+
+    dp = _batchable(ctx, shape.global_batch)
+    tok_spec = P(dp, None) if dp else P(None, None)
+    cond_shard = _named(ctx, P(dp, None, None) if dp else P())
+
+    if shape.kind == "train":
+        # microbatch 4 fits the 16 GiB/chip budget for most archs
+        # (microbatch 8 was tried for llama4-scout: -1.2 GiB but +13 s
+        # collective from doubled ZeRO gathers -- refuted, EXPERIMENTS.md)
+        tc = TrainConfig(microbatch=4)
+        state_shapes = jax.eval_shape(
+            lambda k: train_loop.init_state(k, cfg, ctx), key)
+        sspec = train_loop.state_specs(state_shapes, ctx)
+        s_shard = jax.tree.map(lambda s: _named(ctx, s), sspec,
+                               is_leaf=lambda s: isinstance(s, P))
+        step = train_loop.make_train_step(cfg, tc, ctx)
+        in_sh = [s_shard, _named(ctx, tok_spec), _named(ctx, tok_spec),
+                 _named(ctx, tok_spec)]
+        args = [state_shapes, specs["tokens"], specs["targets"], specs["mask"]]
+        if "cond" in specs:
+            in_sh.append(cond_shard)
+            args.append(specs["cond"])
+        jitted = jax.jit(step, in_shardings=tuple(in_sh),
+                         out_shardings=(s_shard, None),
+                         donate_argnums=(0,))
+        return jitted.lower(*args), cfg, shape, chips
+
+    params_shapes = jax.eval_shape(
+        lambda k: tfm.init_params(k, cfg, ctx), key)
+    p_shard = jax.tree.map(lambda s: _named(ctx, s),
+                           param_specs(params_shapes, ctx),
+                           is_leaf=lambda s: isinstance(s, P))
+
+    if shape.kind == "prefill":
+        fn = partial(tfm.prefill, cfg=cfg, ctx=ctx)
+        in_sh = [p_shard, _named(ctx, tok_spec)]
+        args = [params_shapes, specs["tokens"]]
+        if "cond" in specs:
+            fn = lambda params, tokens, cond: tfm.prefill(
+                params, tokens, cfg, ctx, cond=cond)
+            in_sh.append(cond_shard)
+            args.append(specs["cond"])
+        # shard the produced caches like the decode shapes do (head_dim /
+        # latent over model, batch over dp) -- otherwise the cache output
+        # materialises unsharded (measured 24 GiB/dev on gemma3 prefill)
+        cache_tree = jax.eval_shape(fn, *args)[1]
+        c_out = cache_shardings(cfg, shape, ctx, cache_tree)
+        jitted = jax.jit(fn, in_shardings=tuple(in_sh),
+                         out_shardings=(None, c_out))
+        return jitted.lower(*args), cfg, shape, chips
+
+    # decode: serve_step = ONE token against a seq_len cache
+    caches = specs["caches"]
+    c_shard = cache_shardings(cfg, shape, ctx, caches)
+    tok1 = _named(ctx, P(dp) if dp else P())
+
+    def serve_step(params, token, caches, pos, cond=None):
+        return tfm.decode_step(params, token, caches, pos, cfg, ctx,
+                               cond=cond)
+
+    in_sh = [p_shard, tok1, c_shard, _named(ctx, P())]
+    args = [params_shapes, specs["token"], caches, specs["pos"]]
+    if "cond" in specs:
+        in_sh.append(cond_shard)
+        args.append(specs["cond"])
+        jitted = jax.jit(serve_step, in_shardings=tuple(in_sh),
+                         out_shardings=(None, c_shard),
+                         donate_argnums=(2,))
+    else:
+        jitted = jax.jit(partial(serve_step, cond=None),
+                         in_shardings=tuple(in_sh),
+                         out_shardings=(None, c_shard),
+                         donate_argnums=(2,))
+    return jitted.lower(*args), cfg, shape, chips
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, save: bool = True,
+            verbose: bool = True) -> dict:
+    t0 = time.time()
+    lowered, cfg, shape, chips = build_lowering(arch, shape_name, multi_pod)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    mem_bytes = 0.0
+    mem_info = {}
+    if mem is not None:
+        for f in ("temp_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(mem, f, None)
+            if v is not None:
+                mem_info[f] = int(v)
+        # memory_analysis of the partitioned executable is PER-DEVICE
+        mem_bytes = mem_info.get("temp_size_in_bytes", 0) + \
+            mem_info.get("argument_size_in_bytes", 0)
+
+    hlo = compiled.as_text()
+    name = f"{arch}:{shape_name}:{'2x16x16' if multi_pod else '16x16'}"
+    roof = rl.analyze(name, compiled, hlo, chips, cfg, shape,
+                      mem_bytes=mem_bytes)
+    row = roof.row()
+    row.update(lower_s=t_lower, compile_s=t_compile, memory=mem_info,
+               multi_pod=multi_pod)
+    if verbose:
+        print(f"[dryrun] {name}: lower {t_lower:.1f}s compile {t_compile:.1f}s "
+              f"bottleneck={row['bottleneck']} "
+              f"t=({row['t_compute_s']:.3e},{row['t_memory_s']:.3e},"
+              f"{row['t_collective_s']:.3e})s "
+              f"arg+tmp/dev={mem_bytes/2**30:.2f}GiB "
+              f"fits_16GiB={'YES' if mem_bytes < 16*2**30 else 'NO'}")
+        print(f"  memory_analysis: {mem_info}")
+        print(f"  cost_analysis: flops={row['hlo_flops']:.3e} "
+              f"bytes={row['hlo_bytes']:.3e} "
+              f"collectives={row['collective_counts']}")
+    if save:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        fn = os.path.join(OUT_DIR, f"{arch}_{shape_name}_"
+                          f"{'multipod' if multi_pod else 'pod'}.json")
+        with open(fn, "w") as f:
+            json.dump(row, f, indent=2, default=str)
+    return row
+
+
+def combos():
+    for arch in registry.all_arch_names():
+        cfg = registry.get(arch)
+        for sn in INPUT_SHAPES:
+            if registry.shape_supported(cfg, INPUT_SHAPES[sn]):
+                yield arch, sn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-save", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        ok, fail = 0, []
+        for arch, sn in combos():
+            try:
+                run_one(arch, sn, args.multi_pod, save=not args.no_save)
+                ok += 1
+            except Exception as e:
+                fail.append((arch, sn, repr(e)))
+                traceback.print_exc()
+        print(f"\n[dryrun] {ok} combos OK, {len(fail)} failed")
+        for f in fail:
+            print("  FAIL:", f)
+        raise SystemExit(1 if fail else 0)
+
+    run_one(args.arch, args.shape, args.multi_pod, save=not args.no_save)
+
+
+if __name__ == "__main__":
+    main()

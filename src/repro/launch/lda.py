@@ -1,0 +1,217 @@
+"""LDA launcher -- the paper's workload end-to-end.
+
+Single-process:
+  PYTHONPATH=src python -m repro.launch.lda --docs 2000 --vocab 5000 -k 100
+
+Distributed (SPMD over N host devices; on a pod this is the production
+mesh): workers = all mesh shards (tokens split over data x model), servers =
+the model axis (cyclic rows of n_wk, paper section 2.2):
+  PYTHONPATH=src python -m repro.launch.lda --devices 8 --mesh-model 2 ...
+"""
+import argparse
+import os
+import sys
+
+
+def _early_devices():
+    if "--devices" in sys.argv:
+        n = sys.argv[sys.argv.index("--devices") + 1]
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={n}")
+
+
+_early_devices()
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lightlda as lda
+from repro.core import perplexity as ppl
+from repro.core.pserver import DistributedMatrix, DistributedVector
+from repro.data import corpus as corpus_mod
+from repro.train import checkpoint
+
+
+def run_single(corp, cfg: "lda.LDAConfig", sweeps: int, seed: int,
+               eval_every: int, out, model_blocks: int = 0):
+    """model_blocks > 0 selects the blocked/pipelined sweep (paper sec.
+    3.4): worker memory O(V/blocks x K) instead of O(V x K)."""
+    key = jax.random.PRNGKey(seed)
+    state = lda.init_state(key, jnp.asarray(corp.w), jnp.asarray(corp.d),
+                           corp.num_docs, cfg)
+    if model_blocks > 0:
+        layout = state.nwk.layout
+        rpb = -(-layout.pad_rows // model_blocks)
+        # pad_rows must divide evenly into blocks; bump shards' padding via
+        # ceil and clamp rpb so n_blocks * rpb == pad_rows
+        while layout.pad_rows % rpb:
+            rpb += 1
+        idx, bval = lda.block_token_index(
+            np.asarray(state.w), np.asarray(state.valid), rpb, layout)
+        idx, bval = jnp.asarray(idx), jnp.asarray(bval)
+        print(f"[lda] blocked sweep: {layout.pad_rows // rpb} model blocks "
+              f"x {rpb} rows, worker block mem "
+              f"{rpb * cfg.K * 4 / 2**20:.1f} MiB (vs "
+              f"{layout.pad_rows * cfg.K * 4 / 2**20:.1f} MiB snapshot)")
+        sweep_jit = jax.jit(
+            lambda s, k: lda.sweep_blocked(s, k, cfg, idx, bval, rpb))
+    else:
+        sweep_jit = jax.jit(lambda s, k: lda.sweep(s, k, cfg))
+    history = []
+    t0 = time.time()
+    for i in range(sweeps):
+        key, sub = jax.random.split(key)
+        state = sweep_jit(state, sub)
+        if (i + 1) % eval_every == 0 or i == sweeps - 1:
+            p = float(ppl.training_perplexity(
+                state.w, state.d, state.valid, state.ndk,
+                state.nwk.to_dense(), state.nk.value, cfg.alpha, cfg.beta))
+            el = time.time() - t0
+            history.append({"sweep": i + 1, "perplexity": p, "elapsed_s": el})
+            print(f"[lda] sweep {i+1:4d}  perplexity {p:9.2f}  ({el:.1f}s)")
+    return state, history
+
+
+def make_spmd_sweep(mesh, cfg: "lda.LDAConfig"):
+    """shard_map'd sweep: tokens split over (data, model); n_wk rows cyclic
+    over model (the servers); deltas psum'd over all workers."""
+    from jax.sharding import PartitionSpec as P
+
+    def local(w, d, z, valid, doc_start, doc_len, ndk, nwk_local, nk, keys):
+        state = lda.SamplerState(
+            w[0], d[0], z[0], valid[0], doc_start[0], doc_len[0],
+            DistributedMatrix(nwk_local, cfg.V, cfg.num_shards),
+            DistributedVector(nk), ndk[0])
+        out = lda.sweep(state, keys[0], cfg,
+                        axis_name=("data", "model"), model_axis="model")
+        return (out.z[None], out.ndk[None], out.nwk.value, out.nk.value)
+
+    wspec = P(("data", "model"), None)
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(wspec, wspec, wspec, wspec, wspec, wspec,
+                  P(("data", "model"), None, None), P("model", None),
+                  P(), wspec),
+        out_specs=(wspec, P(("data", "model"), None, None),
+                   P("model", None), P()),
+        check_vma=False)
+
+
+def run_distributed(corp, cfg, sweeps, seed, eval_every, mesh_model: int):
+    n_dev = jax.device_count()
+    model = mesh_model
+    data = n_dev // model
+    mesh = jax.make_mesh((data, model), ("data", "model"))
+    workers = data * model
+    cfg = lda.LDAConfig(**{**cfg.__dict__, "num_shards": model})
+    print(f"[lda] mesh data={data} x model={model} "
+          f"({workers} workers, {model} servers)")
+
+    shards = corpus_mod.shard_tokens(corp, workers, cfg.block_tokens)
+    npad = max(s[0].shape[0] for s in shards)
+    dmax = max(s[3].shape[0] for s in shards)
+
+    def stack(i, pad_to, fill=0):
+        return np.stack([
+            np.pad(s[i], (0, pad_to - len(s[i])), constant_values=fill)
+            for s in shards])
+
+    w = jnp.asarray(stack(0, npad))
+    d = jnp.asarray(stack(1, npad))
+    valid = jnp.asarray(stack(2, npad))
+    doc_start = jnp.asarray(stack(3, dmax))
+    doc_len = jnp.asarray(stack(4, dmax))
+
+    key = jax.random.PRNGKey(seed)
+    z = jax.random.randint(key, w.shape, 0, cfg.K, dtype=jnp.int32)
+    # counts from the global view (same rebuild the checkpoint recovery uses)
+    nwk_dense = jnp.zeros((cfg.V, cfg.K), jnp.int32).at[
+        w.reshape(-1), z.reshape(-1)].add(valid.reshape(-1).astype(jnp.int32))
+    nk = jnp.zeros((cfg.K,), jnp.int32).at[z.reshape(-1)].add(
+        valid.reshape(-1).astype(jnp.int32))
+    ndk = jnp.zeros((workers, dmax, cfg.K), jnp.int32)
+    idx = jnp.arange(workers)[:, None].repeat(npad, 1)
+    ndk = ndk.at[idx.reshape(-1), d.reshape(-1), z.reshape(-1)].add(
+        valid.reshape(-1).astype(jnp.int32))
+    nwk = DistributedMatrix.from_dense(nwk_dense, model)
+
+    sweep_fn = jax.jit(make_spmd_sweep(mesh, cfg))
+    history = []
+    t0 = time.time()
+    nwk_val, nk_val = nwk.value, nk
+    for i in range(sweeps):
+        key, sub = jax.random.split(key)
+        keys = jax.random.split(sub, workers)
+        z, ndk, nwk_val, nk_val = sweep_fn(
+            w, d, z, valid, doc_start, doc_len, ndk, nwk_val, nk_val, keys)
+        if (i + 1) % eval_every == 0 or i == sweeps - 1:
+            full = DistributedMatrix(nwk_val, cfg.V, model).to_dense()
+            theta_like_ndk = ndk.reshape(workers * dmax, cfg.K)
+            p = float(ppl.training_perplexity(
+                w.reshape(-1), (d + jnp.arange(workers)[:, None] * dmax
+                                ).reshape(-1), valid.reshape(-1),
+                theta_like_ndk, full, nk_val, cfg.alpha, cfg.beta))
+            el = time.time() - t0
+            history.append({"sweep": i + 1, "perplexity": p, "elapsed_s": el})
+            print(f"[lda] sweep {i+1:4d}  perplexity {p:9.2f}  ({el:.1f}s)")
+    return history
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--docs", type=int, default=1000)
+    ap.add_argument("--mean-doc-len", type=int, default=80)
+    ap.add_argument("--vocab", type=int, default=2000)
+    ap.add_argument("--true-topics", type=int, default=20)
+    ap.add_argument("-k", "--topics", type=int, default=50)
+    ap.add_argument("--sweeps", type=int, default=50)
+    ap.add_argument("--mh-steps", type=int, default=2)
+    ap.add_argument("--block-tokens", type=int, default=8192)
+    ap.add_argument("--kernels", action="store_true",
+                    help="use the Pallas kernel path (interpret on CPU)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host devices and run distributed")
+    ap.add_argument("--mesh-model", type=int, default=2)
+    ap.add_argument("--eval-every", type=int, default=10)
+    ap.add_argument("--model-blocks", type=int, default=0,
+                    help="blocked/pipelined sweep (paper sec 3.4): pull the "
+                         "model in N blocks instead of a full snapshot")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="experiments/lda")
+    ap.add_argument("--checkpoint", default="")
+    args = ap.parse_args()
+
+    corp = corpus_mod.generate_lda_corpus(
+        seed=args.seed, num_docs=args.docs, mean_doc_len=args.mean_doc_len,
+        vocab_size=args.vocab, num_topics=args.true_topics)
+    print(f"[lda] corpus: {corp.num_tokens} tokens, {corp.num_docs} docs, "
+          f"V={corp.vocab_size}")
+
+    cfg = lda.LDAConfig(num_topics=args.topics, vocab_size=args.vocab,
+                        mh_steps=args.mh_steps,
+                        block_tokens=args.block_tokens,
+                        use_kernels=args.kernels)
+
+    if args.devices:
+        history = run_distributed(corp, cfg, args.sweeps, args.seed,
+                                  args.eval_every, args.mesh_model)
+        state = None
+    else:
+        state, history = run_single(corp, cfg, args.sweeps, args.seed,
+                                    args.eval_every, args.out,
+                                    model_blocks=args.model_blocks)
+        if args.checkpoint:
+            checkpoint.save_lda(args.checkpoint, state)
+            print(f"[lda] checkpointed assignments to {args.checkpoint}")
+
+    os.makedirs(args.out, exist_ok=True)
+    with open(os.path.join(args.out, "history.json"), "w") as f:
+        json.dump(history, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,402 @@
+"""Attention: GQA, sliding-window, MLA (DeepSeek latent), cross-attention.
+
+All prefill/train paths use **chunked online-softmax attention** (a
+flash-attention-style formulation in pure JAX): the [Tq, Tk] score matrix is
+never materialised, only [q_chunk, kv_chunk] tiles with running (max, sum,
+acc) statistics.  On TPU this keeps the working set in VMEM-sized tiles and
+makes 32k prefill compile inside the memory budget; XLA fuses the inner
+scan body into a single loop.
+
+Decode paths score one query against the whole cache ([B, H, S] -- linear in
+S).  For the long_500k shape the cache is *sequence-sharded* over the data
+axis (sharding/specs.py); the softmax reductions then lower to the
+distributed LSE-combine pattern automatically under GSPMD.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, dtype_of, rms_norm
+
+_NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def init_attn(key: jax.Array, cfg: ModelConfig, *, kv_input_dim: int = 0
+              ) -> dict:
+    """Standard (non-MLA) attention weights.  ``kv_input_dim`` overrides the
+    K/V input dimension for cross-attention (conditioning stream)."""
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    dkv = kv_input_dim or d
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, h * hd)) * d ** -0.5).astype(dt),
+        "wk": (jax.random.normal(ks[1], (dkv, kv * hd)) * dkv ** -0.5).astype(dt),
+        "wv": (jax.random.normal(ks[2], (dkv, kv * hd)) * dkv ** -0.5).astype(dt),
+        "wo": (jax.random.normal(ks[3], (h * hd, d)) * (h * hd) ** -0.5).astype(dt),
+    }
+    if cfg.use_qk_norm:
+        p["q_norm"] = {"scale": jnp.zeros((hd,), jnp.float32)}
+        p["k_norm"] = {"scale": jnp.zeros((hd,), jnp.float32)}
+    return p
+
+
+def init_mla(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, h = cfg.d_model, cfg.num_heads
+    r, dr, dn, dv = (cfg.kv_lora_rank, cfg.qk_rope_dim, cfg.qk_nope_dim,
+                     cfg.v_head_dim)
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": (jax.random.normal(ks[0], (d, h * (dn + dr))) * d ** -0.5).astype(dt),
+        "w_dkv": (jax.random.normal(ks[1], (d, r + dr)) * d ** -0.5).astype(dt),
+        "kv_norm": {"scale": jnp.zeros((r,), jnp.float32)},
+        "w_uk": (jax.random.normal(ks[2], (r, h * dn)) * r ** -0.5).astype(dt),
+        "w_uv": (jax.random.normal(ks[3], (r, h * dv)) * r ** -0.5).astype(dt),
+        "wo": (jax.random.normal(ks[4], (h * dv, d)) * (h * dv) ** -0.5).astype(dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softmax attention core
+# ---------------------------------------------------------------------------
+
+def _attend_chunked(q, k, v, q_pos, kv_pos, *, causal: bool, window: int,
+                    q_chunk: int, kv_chunk: int) -> jax.Array:
+    """q: [B, Tq, KV, G, hd]; k, v: [B, Tk, KV, hd].
+    Positions are int32 [Tq] / [Tk].  Returns [B, Tq, KV, G, hd].
+
+    ``window`` must be a *python int* (0 = global): the per-layer window is
+    static because the transformer scans contiguous same-window layer runs
+    separately.  That makes the kv-chunk bounds static per q chunk, so
+    fully-masked tiles are never built: the causal upper triangle is
+    skipped everywhere (~2x fewer tiles), and sliding-window layers touch
+    only ceil(window/kc)+1 kv chunks instead of all of them (~10x fewer on
+    hymba/gemma 32k prefill; this was the dominant memory-roofline term).
+    Assumes q_pos/kv_pos are aligned arange positions (true for all self-
+    attention paths; cross-attention is non-causal window-0 so bounds stay
+    full).
+    """
+    b, tq, nkv, g, hd = q.shape
+    tk = k.shape[1]
+    assert isinstance(window, int), "window must be static (see docstring)"
+    scale = hd ** -0.5
+    qc = min(q_chunk, tq)
+    kc = min(kv_chunk, tk)
+    n_q = -(-tq // qc)
+    n_k = -(-tk // kc)
+    pad_q = n_q * qc - tq
+    pad_k = n_k * kc - tk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, pad_q), constant_values=-1)
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, pad_k), constant_values=2 ** 30)
+
+    # Tile skipping with compact HLO (full python unrolling was tried and
+    # REFUTED: 32 unrolled chunks x 11 window-runs blew compile time 4x and
+    # peak memory 5x on gemma prefill -- EXPERIMENTS.md Perf):
+    #   * sliding window: each q chunk touches a static-length *band* of
+    #     kv chunks (traced start) -- one lax.map.
+    #   * global causal: q chunks grouped into <=4 static groups, each
+    #     lax.map'd with its group's static kv upper bound -- skips ~2-3x
+    #     of the upper triangle at x4 HLO cost.
+    def make_q_chunk_fn(band_k: int):
+        @jax.checkpoint
+        def one_q_chunk(qi):
+            qs = jax.lax.dynamic_slice_in_dim(q, qi * qc, qc, axis=1)
+            qp = jax.lax.dynamic_slice_in_dim(q_pos, qi * qc, qc)
+            if causal and window > 0:
+                start = jnp.clip((qi * qc - window + 1) // kc,
+                                 0, n_k - band_k)
+            else:
+                start = jnp.zeros((), jnp.int32)
+
+            @jax.checkpoint
+            def inner(carry, kj):
+                m, l, acc = carry
+                ki = start + kj
+                ks = jax.lax.dynamic_slice_in_dim(k, ki * kc, kc, axis=1)
+                vs = jax.lax.dynamic_slice_in_dim(v, ki * kc, kc, axis=1)
+                kp = jax.lax.dynamic_slice_in_dim(kv_pos, ki * kc, kc)
+                s = jnp.einsum("bqhgd,bkhd->bhgqk", qs, ks,
+                               preferred_element_type=jnp.float32) * scale
+                # padded kv slots carry position 2**30: always masked, even
+                # in the non-causal global path (cross-attention)
+                ok = (kp[None, :] < 2 ** 29)
+                if causal:
+                    ok &= kp[None, :] <= qp[:, None]
+                if window > 0:
+                    ok &= qp[:, None] - kp[None, :] < window
+                s = jnp.where(ok[None, None, None], s, _NEG)
+                m_new = jnp.maximum(m, s.max(-1))
+                p = jnp.exp(s - m_new[..., None])
+                p = jnp.where(s > _NEG / 2, p, 0.0)
+                corr = jnp.exp(m - m_new)
+                l = l * corr + p.sum(-1)
+                acc = acc * corr[..., None] + jnp.einsum(
+                    "bhgqk,bkhd->bhgqd", p.astype(vs.dtype), vs,
+                    preferred_element_type=jnp.float32)
+                return (m_new, l, acc), ()
+
+            m0 = jnp.full((b, nkv, g, qc), _NEG, jnp.float32)
+            l0 = jnp.zeros((b, nkv, g, qc), jnp.float32)
+            a0 = jnp.zeros((b, nkv, g, qc, hd), jnp.float32)
+            (m, l, acc), _ = jax.lax.scan(inner, (m0, l0, a0),
+                                          jnp.arange(band_k))
+            out = acc / jnp.maximum(l, 1e-30)[..., None]
+            return out.transpose(0, 3, 1, 2, 4)  # [B, qc, KV, G, hd]
+        return one_q_chunk
+
+    # Both remat boundaries above (per-tile + per-q-chunk jax.checkpoint)
+    # are essential for training memory: without them, AD stacks the
+    # [qc, kc] probability tile for EVERY (q, kv) chunk pair -- i.e. the
+    # full S x S_kv attention matrix in f32, x3 (measured 14.5 GiB/layer on
+    # the 6404-token cross-attention and 44 GiB on phi3 self-attention).
+    if causal and window > 0:
+        band = min(n_k, (qc + window - 2) // kc + 2)
+        out = jax.lax.map(make_q_chunk_fn(band), jnp.arange(n_q))
+    elif causal and n_q >= 8:
+        # grouped triangle skip, long sequences only: with few q chunks
+        # (train_4k has 4) the groups degenerate to a full unroll, which
+        # regressed phi3 train peak memory 12->20 GiB (refuted there)
+        group = -(-n_q // 4)                       # <=4 static groups
+        parts = []
+        for lo in range(0, n_q, group):
+            hi = min(lo + group, n_q)
+            kj_end = min(n_k, (hi * qc - 1) // kc + 1)
+            parts.append(jax.lax.map(make_q_chunk_fn(kj_end),
+                                     jnp.arange(lo, hi)))
+        out = jnp.concatenate(parts, axis=0)
+    else:
+        out = jax.lax.map(make_q_chunk_fn(n_k), jnp.arange(n_q))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, n_q * qc, nkv, g, hd)
+    return out[:, :tq].astype(q.dtype)
+
+
+def _attend_decode(q, k, v, kv_pos, pos, window: int) -> jax.Array:
+    """One-token decode: q [B, 1, KV, G, hd] vs cache k/v [B, S, KV, hd].
+    ``kv_pos`` [S] marks each cache slot's position (2**30 = empty)."""
+    hd = q.shape[-1]
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                   preferred_element_type=jnp.float32) * hd ** -0.5
+    ok = kv_pos <= pos
+    win = jnp.asarray(window, jnp.int32)
+    ok &= (win <= 0) | (pos - kv_pos < win)
+    s = jnp.where(ok[None, None, None, None, :], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    # keep v in cache dtype; accumulate in f32 via preferred_element_type
+    # (avoids materialising a cache-sized f32 copy)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA self-attention (train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def _split_heads(x, n, hd):
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+def _qkv(params, x, cfg: ModelConfig, positions, theta):
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    q = _split_heads(x @ params["wq"], h, hd)
+    k = _split_heads(x @ params["wk"], kv, hd)
+    v = _split_heads(x @ params["wv"], kv, hd)
+    if cfg.use_qk_norm:
+        q = rms_norm(q, params["q_norm"]["scale"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"]["scale"], cfg.norm_eps)
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    return q, k, v
+
+
+def self_attention(params: dict, x: jax.Array, cfg: ModelConfig, *,
+                   positions: jax.Array, window: int, theta: float,
+                   ctx=None) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Causal self-attention over a full sequence.  Returns (out, (k, v))
+    so prefill can seed the cache.
+
+    Sequence-parallel layout (beyond-paper optimisation, EXPERIMENTS.md
+    section Perf): when head counts don't divide the model axis (llama4
+    kv=8, phi3 kv=10 on a 16-way axis), GSPMD 2-D-shards [KV, hd] and every
+    score tile becomes a partial-sum all-reduce (measured 2.25 TB/step on
+    llama4 train_4k).  Instead we shard the *query sequence* over the model
+    axis and replicate K/V: attention is then fully shard-local, at the
+    cost of one K/V all-gather per layer (MBs, not GBs).
+    """
+    b, t, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    g = h // kv
+    q, k, v = _qkv(params, x, cfg, positions, theta)
+    use_sp = cfg.seq_parallel_attn
+    if use_sp is None:
+        # auto: GSPMD handles evenly-tiling KV head counts fine (gemma
+        # kv=4 on 16: no win); uneven ones (hymba kv=5, phi3 kv=10) trigger
+        # involuntary rematerializations without this.
+        use_sp = (ctx is not None and ctx.mesh is not None
+                  and ctx.model_size % max(kv, 1) != 0)
+    if use_sp and ctx is not None and ctx.mesh is not None \
+            and ctx.model is not None and t > 1 and t % ctx.model_size == 0:
+        from jax.sharding import PartitionSpec as P
+        dp = tuple(ctx.dp)
+        q = ctx.constrain(q, P(dp, ctx.model, None, None))
+        k = ctx.constrain(k, P(dp, None, None, None))
+        v = ctx.constrain(v, P(dp, None, None, None))
+    qg = q.reshape(b, t, kv, g, hd)
+    out = _attend_chunked(qg, k, v, positions, positions, causal=True,
+                          window=window, q_chunk=cfg.attn_chunk_q,
+                          kv_chunk=cfg.attn_chunk_kv)
+    out = out.reshape(b, t, h * hd) @ params["wo"]
+    return out, (k, v)
+
+
+def self_attention_decode(params: dict, x: jax.Array, cache_k, cache_v,
+                          pos: jax.Array, cfg: ModelConfig, *,
+                          window: int, theta: float):
+    """One decode step.  x: [B, 1, D]; cache k/v: [B, S, KV, hd]; ``pos`` is
+    the current position (scalar int32).  Returns (out, new_k, new_v)."""
+    b = x.shape[0]
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    g = h // kv
+    s_max = cache_k.shape[1]
+    q, k_new, v_new = _qkv(params, x, cfg, pos[None], theta)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k_new.astype(cache_k.dtype), pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v_new.astype(cache_v.dtype), pos, axis=1)
+    kv_pos = jnp.arange(s_max)
+    qg = q.reshape(b, 1, kv, g, hd)
+    out = _attend_decode(qg, cache_k, cache_v, kv_pos, pos, window)
+    out = out.reshape(b, 1, h * hd) @ params["wo"]
+    return out, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): compressed latent KV cache + decoupled RoPE
+# ---------------------------------------------------------------------------
+
+def _mla_q(params, x, cfg: ModelConfig, positions):
+    h, dn, dr = cfg.num_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = _split_heads(x @ params["wq"], h, dn + dr)
+    qn, qr = q[..., :dn], q[..., dn:]
+    qr = apply_rope(qr, positions, cfg.rope_theta)
+    return qn, qr
+
+
+def _mla_compress(params, x, cfg: ModelConfig, positions):
+    r, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
+    c = x @ params["w_dkv"]
+    ckv, krope = c[..., :r], c[..., r:]
+    ckv = rms_norm(ckv, params["kv_norm"]["scale"], cfg.norm_eps)
+    krope = apply_rope(krope[..., None, :], positions, cfg.rope_theta)[..., 0, :]
+    return ckv, krope
+
+
+def mla_attention(params: dict, x: jax.Array, cfg: ModelConfig, *,
+                  positions: jax.Array):
+    """Prefill/train MLA: expand the latent into per-head K/V and run the
+    chunked kernel.  Returns (out, (ckv, krope)) -- the cache stores only
+    the (r + dr)-dim latent per token (the technique's memory win)."""
+    b, t, _ = x.shape
+    h, r = cfg.num_heads, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    qn, qr = _mla_q(params, x, cfg, positions)
+    ckv, krope = _mla_compress(params, x, cfg, positions)
+    k_nope = _split_heads(ckv @ params["w_uk"], h, dn)
+    val = _split_heads(ckv @ params["w_uv"], h, dv)
+    q = jnp.concatenate([qn, qr], axis=-1)                       # [B,T,H,dn+dr]
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(
+        krope[:, :, None, :], (b, t, h, dr))], axis=-1)
+    # pad V up to the qk head dim so the shared kernel can run, slice after
+    pad = (dn + dr) - dv
+    vp = jnp.pad(val, ((0, 0), (0, 0), (0, 0), (0, pad)))
+    qg = q[:, :, :, None, :]                                     # KV==H, G==1
+    out = _attend_chunked(qg, k, vp, positions, positions, causal=True,
+                          window=0, q_chunk=cfg.attn_chunk_q,
+                          kv_chunk=cfg.attn_chunk_kv)
+    out = out[..., 0, :dv].reshape(b, t, h * dv) @ params["wo"]
+    return out, (ckv, krope)
+
+
+def mla_attention_decode(params: dict, x: jax.Array, cache_ckv, cache_krope,
+                         pos: jax.Array, cfg: ModelConfig):
+    """Absorbed-matmul MLA decode (DeepSeek's weight-absorption trick, the
+    TPU-friendly form): scores and context are computed *in the latent
+    space*, so the per-step cost is O(S * (r + dr)) regardless of heads.
+
+      scores[b,h,s] = (q_nope[b,h] @ W_uk[h]) . ckv[b,s]  +  q_rope[b,h] . krope[b,s]
+      ctx[b,h]      = (sum_s p[b,h,s] ckv[b,s]) @ W_uv[h]
+    """
+    b = x.shape[0]
+    h, r = cfg.num_heads, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    s_max = cache_ckv.shape[1]
+    qn, qr = _mla_q(params, x, cfg, pos[None])
+    ckv_new, krope_new = _mla_compress(params, x, cfg, pos[None])
+    cache_ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache_ckv, ckv_new.astype(cache_ckv.dtype), pos, axis=1)
+    cache_krope = jax.lax.dynamic_update_slice_in_dim(
+        cache_krope, krope_new.astype(cache_krope.dtype), pos, axis=1)
+
+    w_uk = params["w_uk"].reshape(r, h, dn)
+    w_uv = params["w_uv"].reshape(r, h, dv)
+    q_eff = jnp.einsum("bqhd,rhd->bhr", qn.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))                  # absorb W_uk
+    scores = (jnp.einsum("bhr,bsr->bhs", q_eff,
+                         cache_ckv.astype(jnp.float32))
+              + jnp.einsum("bqhd,bsd->bhs", qr.astype(jnp.float32),
+                           cache_krope.astype(jnp.float32)))
+    scores = scores * (dn + dr) ** -0.5
+    kv_pos = jnp.arange(s_max)
+    scores = jnp.where((kv_pos <= pos)[None, None, :], scores, _NEG)
+    p = jax.nn.softmax(scores, axis=-1)
+    ctx_lat = jnp.einsum("bhs,bsr->bhr", p, cache_ckv.astype(jnp.float32))
+    ctx = jnp.einsum("bhr,rhd->bhd", ctx_lat, w_uv.astype(jnp.float32))
+    out = ctx.reshape(b, 1, h * dv).astype(x.dtype) @ params["wo"]
+    return out, cache_ckv, cache_krope
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (llama-3.2-vision gated layers / musicgen conditioning)
+# ---------------------------------------------------------------------------
+
+def init_cross_attn(key: jax.Array, cfg: ModelConfig) -> dict:
+    p = init_attn(key, cfg, kv_input_dim=cfg.cond_dim_)
+    p["gate"] = jnp.zeros((), jnp.float32)  # tanh-gated (llama-vision style)
+    return p
+
+
+def cross_attention(params: dict, x: jax.Array, cond: jax.Array,
+                    cfg: ModelConfig) -> jax.Array:
+    """Queries from the text stream, K/V from the (stubbed) frontend
+    embeddings.  No causality, no RoPE (positions are modality-internal)."""
+    b, t, _ = x.shape
+    tc = cond.shape[1]
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    g = h // kv
+    q = _split_heads(x @ params["wq"], h, hd)
+    k = _split_heads(cond.astype(x.dtype) @ params["wk"], kv, hd)
+    v = _split_heads(cond.astype(x.dtype) @ params["wv"], kv, hd)
+    if cfg.use_qk_norm:
+        q = rms_norm(q, params["q_norm"]["scale"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"]["scale"], cfg.norm_eps)
+    qg = q.reshape(b, t, kv, g, hd)
+    qpos = jnp.arange(t)
+    kpos = jnp.arange(tc)
+    out = _attend_chunked(qg, k, v, qpos, kpos, causal=False, window=0,
+                          q_chunk=cfg.attn_chunk_q, kv_chunk=cfg.attn_chunk_kv)
+    out = out.reshape(b, t, h * hd) @ params["wo"]
+    return jnp.tanh(params["gate"]).astype(x.dtype) * out

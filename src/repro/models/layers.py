@@ -1,0 +1,155 @@
+"""Shared neural layers: norms, RoPE, MLPs, and the cyclic-sharded embedding.
+
+The embedding table is where the paper's contribution lands in the LM world:
+token frequency is Zipfian exactly like word frequency (paper Fig. 4), so
+the table is stored in the parameter server's **cyclic physical order**
+(paper section 2.2) and sharded one-cycle-per-model-shard -- the hottest
+rows spread uniformly across shards (section 3.2).  Lookups and the LM head
+work directly in physical order (the logical->physical map is a cheap
+integer formula), so the layout costs nothing at runtime.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.pserver import CyclicLayout
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def init_rms_norm(d: int) -> dict:
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# RoPE (plus the decoupled MLA variant which applies it to a sub-block)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., T, H, D]; positions: broadcastable to [..., T]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                         # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., T, D/2]
+    cos = jnp.cos(angles)[..., None, :]                  # [..., T, 1, D/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key: jax.Array, d: int, f: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d ** -0.5
+    s_out = f ** -0.5
+    return {
+        "w_gate": (jax.random.normal(k1, (d, f)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(k2, (d, f)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k3, (f, d)) * s_out).astype(dtype),
+    }
+
+
+def apply_mlp(params: dict, x: jax.Array, act: str) -> jax.Array:
+    gate = x @ params["w_gate"]
+    up = x @ params["w_up"]
+    h = (jax.nn.silu(gate) if act == "silu" else jax.nn.gelu(gate)) * up
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Cyclic vocab-sharded embedding (the paper's layout as an LM feature)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class VocabLayout:
+    """Wraps CyclicLayout for the embedding table; ``blocked`` is the naive
+    contiguous layout the paper's figure 5 compares against."""
+
+    vocab_size: int
+    num_shards: int
+    mode: str  # "cyclic" | "blocked"
+
+    @property
+    def cyclic(self) -> CyclicLayout:
+        return CyclicLayout(self.vocab_size, self.num_shards)
+
+    @property
+    def pad_rows(self) -> int:
+        return self.cyclic.pad_rows
+
+    def to_physical(self, token: jax.Array) -> jax.Array:
+        if self.mode == "blocked":
+            return token
+        return self.cyclic.to_physical(token)
+
+
+def init_embed(key: jax.Array, cfg: ModelConfig, num_shards: int) -> dict:
+    layout = VocabLayout(cfg.vocab_size, num_shards, cfg.vocab_layout)
+    table = jax.random.normal(key, (layout.pad_rows, cfg.d_model)) * (
+        cfg.d_model ** -0.5)
+    return {"table": table.astype(dtype_of(cfg))}
+
+
+def embed_lookup(params: dict, tokens: jax.Array, layout: VocabLayout
+                 ) -> jax.Array:
+    """Token ids -> embeddings via the physical (cyclic) index formula."""
+    phys = layout.to_physical(tokens)
+    return jnp.take(params["table"], phys, axis=0)
+
+
+def lm_head_logits(params: dict, x: jax.Array) -> jax.Array:
+    """Logits *in physical vocab order* [.., pad_rows].  Cross-entropy only
+    needs logsumexp plus the label's logit, so we never permute back --
+    labels are mapped with the same integer formula (see loss_fn)."""
+    return x @ params["table"].T
+
+
+def softmax_xent_physical(logits_phys: jax.Array, labels: jax.Array,
+                          layout: VocabLayout, mask: jax.Array) -> jax.Array:
+    """Cross-entropy over physically-ordered logits.
+
+    Padding rows of the cyclic table act as extra (never-labelled) classes;
+    their logits are finite, so we must exclude them from the logsumexp to
+    keep the distribution over the true vocabulary.  We mask them to -inf
+    using the physical-index formula (physical rows >= num_rows*... are those
+    whose logical id >= vocab_size).
+    """
+    v, s = layout.vocab_size, layout.num_shards
+    pad_rows = layout.pad_rows
+    if pad_rows != v:
+        lay = layout.cyclic
+        logical = lay.to_logical(jnp.arange(pad_rows))
+        valid_col = logical < v
+        logits_phys = jnp.where(valid_col, logits_phys, -jnp.inf)
+    logits_phys = logits_phys.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits_phys, axis=-1)
+    lab_phys = layout.to_physical(labels)
+    lab_logit = jnp.take_along_axis(
+        logits_phys, lab_phys[..., None], axis=-1)[..., 0]
+    nll = lse - lab_logit
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,215 @@
+"""Mamba-2 SSD (state-space duality) block, chunked matmul formulation.
+
+The SSD algorithm (arXiv:2405.21060) computes the selective-SSM recurrence
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t        y_t = C_t . h_t + D x_t
+
+as *chunked matmuls*: intra-chunk terms are small [Q, Q] attention-like
+products and inter-chunk terms are a short scan over per-chunk states.
+This is exactly the MXU-friendly form (the "duality"), so no custom kernel
+is needed on TPU -- the matmuls are already the hardware's native op.  The
+per-chunk state scan is sequential in the *sequence* dimension, which is why
+the sequence axis of SSM models cannot be sharded across pods (DESIGN.md
+section Arch-applicability); batch and head dims shard freely.
+
+Decode keeps the O(1) recurrent state [B, H, P, N] plus a (width-1)-deep
+causal-conv tail -- no KV cache, which is what makes the long_500k shape
+trivial for this family.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dtype_of, rms_norm
+
+
+def init_ssm(key: jax.Array, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di = cfg.d_inner
+    n = cfg.ssm_state
+    nh = cfg.ssm_heads
+    cw = cfg.ssm_conv_width
+    dconv = di + 2 * n
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    # dt_bias init so softplus(dt_bias) spans [1e-3, 1e-1] (mamba2 default)
+    u = jax.random.uniform(ks[2], (nh,), minval=jnp.log(1e-3), maxval=jnp.log(1e-1))
+    dt_init = jnp.exp(u)
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))  # inverse softplus
+    return {
+        # z + xBC streams: [d, 2*di + 2*n] -- divisible by the model axis
+        # for every assigned config.  The per-head dt projection is split
+        # out (head counts like hymba's 50 don't divide the mesh) and kept
+        # replicated: it is [d, nh], i.e. tiny.
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * di + 2 * n))
+                    * d ** -0.5).astype(dt),
+        "dt_proj": (jax.random.normal(jax.random.fold_in(ks[0], 1), (d, nh))
+                    * d ** -0.5).astype(dt),
+        "conv_w": (jax.random.normal(ks[1], (cw, dconv)) * cw ** -0.5).astype(dt),
+        "conv_b": jnp.zeros((dconv,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "gate_norm": {"scale": jnp.zeros((di,), jnp.float32)},
+        "out_proj": (jax.random.normal(ks[3], (di, d)) * di ** -0.5).astype(dt),
+    }
+
+
+def _split_in(params, x, cfg: ModelConfig):
+    di, n, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    h = x @ params["in_proj"]
+    z = h[..., :di]
+    xbc = h[..., di:]
+    dt = x @ params["dt_proj"]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, prev_tail=None):
+    """Depthwise causal conv, width W.  ``prev_tail``: [B, W-1, C] history
+    for decode (None -> zero history, i.e. sequence start)."""
+    w = conv_w.shape[0]
+    if prev_tail is None:
+        prev_tail = jnp.zeros((xbc.shape[0], w - 1, xbc.shape[-1]), xbc.dtype)
+    xp = jnp.concatenate([prev_tail.astype(xbc.dtype), xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1]] * conv_w[i] for i in range(w))
+    new_tail = xp[:, -(w - 1):]
+    return jax.nn.silu(out + conv_b), new_tail
+
+
+def ssd_chunked(x, dt, a, b_mat, c_mat, chunk: int,
+                init_state=None) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x:     [B, T, H, P]   (already conv'd + activated inner stream)
+    dt:    [B, T, H]      (softplus'd step sizes)
+    a:     [H]            (negative reals, -exp(A_log))
+    b_mat: [B, T, N]      c_mat: [B, T, N]   (ngroups == 1, shared over heads)
+    Returns (y [B, T, H, P], final_state [B, H, P, N]).
+    """
+    bsz, t, h, p = x.shape
+    n = b_mat.shape[-1]
+    q = min(chunk, t)
+    pad = (-t) % q
+    if pad:
+        # dt = 0 at padded positions: decay exp(0)=1 and zero input, so the
+        # recurrence (and final state) is unchanged by padding.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+    t_pad = t + pad
+    nc = t_pad // q
+
+    xc = x.reshape(bsz, nc, q, h, p).astype(jnp.float32)
+    dtc = dt.reshape(bsz, nc, q, h).astype(jnp.float32)
+    bc = b_mat.reshape(bsz, nc, q, n).astype(jnp.float32)
+    cc = c_mat.reshape(bsz, nc, q, n).astype(jnp.float32)
+    del t_pad
+
+    da = dtc * a[None, None, None, :]               # [B,Nc,Q,H]
+    cum = jnp.cumsum(da, axis=2)                    # within-chunk cumsum
+    xdt = xc * dtc[..., None]                       # [B,Nc,Q,H,P]
+
+    # --- intra-chunk (diagonal blocks) + per-chunk input states ---
+    # L[i,j] = exp(cum_i - cum_j) for i >= j is [Q, Q, H] *per chunk*;
+    # materialising it for all chunks at once (and letting AD stack it for
+    # the backward) costs O(Nc * Q^2 * H) f32 -- measured 20+ GiB on hymba
+    # train_4k.  Instead map over the chunk dim with a remat boundary:
+    # one [Q, Q, H] tile lives at a time, recomputed in the backward.
+    mask = jnp.tril(jnp.ones((q, q), bool))
+
+    @jax.checkpoint
+    def per_chunk(args):
+        cum_c, xdt_c, bc_c, cc_c = args      # [B,Q,H], [B,Q,H,P], [B,Q,N]x2
+        seg = cum_c[:, :, None, :] - cum_c[:, None, :, :]    # [B,Q,Q,H]
+        l_mat = jnp.where(mask[None, :, :, None], jnp.exp(seg), 0.0)
+        cb = jnp.einsum("bin,bjn->bij", cc_c, bc_c)          # [B,Q,Q]
+        y_diag_c = jnp.einsum("bij,bijh,bjhp->bihp", cb, l_mat, xdt_c)
+        total_c = cum_c[:, -1:, :]                           # [B,1,H]
+        decay_in = jnp.exp(total_c - cum_c)                  # [B,Q,H]
+        states_c = jnp.einsum("bjn,bjh,bjhp->bhpn", bc_c, decay_in, xdt_c)
+        return y_diag_c, states_c
+
+    swap = lambda v: jnp.moveaxis(v, 1, 0)          # chunk dim leading
+    y_diag, states = jax.lax.map(
+        per_chunk, (swap(cum), swap(xdt), swap(bc), swap(cc)))
+    y_diag = jnp.moveaxis(y_diag, 0, 1)             # [B,Nc,Q,H,P]
+    states = jnp.moveaxis(states, 0, 1)             # [B,Nc,H,P,N]
+    total = cum[:, :, -1:, :]                       # [B,Nc,1,H]
+
+    # --- inter-chunk recurrence (short scan over Nc chunks) ---
+    chunk_decay = jnp.exp(total[:, :, 0, :])                # [B,Nc,H]
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def scan_fn(prev, inp):
+        st, dec = inp                                       # [B,H,P,N], [B,H]
+        entering = prev                                     # state before chunk
+        new = st + dec[:, :, None, None] * prev
+        return new, entering
+
+    sts = jnp.moveaxis(states, 1, 0)                        # [Nc,B,H,P,N]
+    decs = jnp.moveaxis(chunk_decay, 1, 0)                  # [Nc,B,H]
+    final, entering = jax.lax.scan(scan_fn, init_state.astype(jnp.float32),
+                                   (sts, decs))
+    entering = jnp.moveaxis(entering, 0, 1)                 # [B,Nc,H,P,N]
+
+    # --- contribution of the entering state to each position ---
+    decay_out = jnp.exp(cum)                                # [B,Nc,Q,H]
+    y_off = jnp.einsum("bcin,bcih,bchpn->bcihp", cc, decay_out, entering)
+
+    y = (y_diag + y_off).reshape(bsz, nc * q, h, p)[:, :t]
+    return y.astype(x.dtype), final
+
+
+def ssm_block(params: dict, x: jax.Array, cfg: ModelConfig,
+              return_state: bool = False):
+    """Full Mamba-2 mixer on a sequence.  Returns out [B,T,D] and, if
+    requested, the decode cache (state, conv_tail)."""
+    bsz, t, _ = x.shape
+    di, n, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc, dtr = _split_in(params, x, cfg)
+    xbc, conv_tail = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xs = xbc[..., :di].reshape(bsz, t, nh, hp)
+    b_mat = xbc[..., di:di + n]
+    c_mat = xbc[..., di + n:]
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])
+    y, state = ssd_chunked(xs, dt, a, b_mat, c_mat, cfg.ssm_chunk)
+    y = y + params["D"][None, None, :, None].astype(y.dtype) * xs
+    y = y.reshape(bsz, t, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params["gate_norm"]["scale"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    if return_state:
+        return out, (state, conv_tail)
+    return out
+
+
+def ssm_block_decode(params: dict, x: jax.Array, state: jax.Array,
+                     conv_tail: jax.Array, cfg: ModelConfig):
+    """One-token recurrent step.  x: [B, 1, D]; state: [B, H, P, N];
+    conv_tail: [B, W-1, di+2N].  Returns (out, new_state, new_tail)."""
+    bsz = x.shape[0]
+    di, n, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc, dtr = _split_in(params, x, cfg)
+    xbc, new_tail = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                 prev_tail=conv_tail)
+    xs = xbc[..., :di].reshape(bsz, nh, hp)
+    b_mat = xbc[:, 0, di:di + n].astype(jnp.float32)        # [B, N]
+    c_mat = xbc[:, 0, di + n:].astype(jnp.float32)
+    dt = jax.nn.softplus(dtr[:, 0].astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * a[None, :])                        # [B, H]
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt, b_mat, xs.astype(jnp.float32))
+    state = state * decay[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", c_mat, state)
+    y = y + params["D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(bsz, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params["gate_norm"]["scale"], cfg.norm_eps)
+    return y @ params["out_proj"], state, new_tail

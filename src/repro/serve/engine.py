@@ -1,0 +1,91 @@
+"""Batched serving engine: prefill + decode with a preallocated cache.
+
+The engine mirrors how the dry-run's ``serve_step`` is used in production:
+caches are allocated once at ``max_seq`` (the decode shapes' cache length),
+prefill populates them, and decode steps are jitted with donated caches so
+the cache is updated in place.  Sampling: greedy or temperature.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+from repro.models.layers import VocabLayout
+from repro.sharding.specs import MeshCtx, SINGLE
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_seq: int
+    temperature: float = 0.0     # 0 => greedy
+    seed: int = 0
+
+
+class Engine:
+    def __init__(self, params, cfg: ModelConfig, scfg: ServeConfig,
+                 ctx: MeshCtx = SINGLE):
+        self.params = params
+        self.cfg = cfg
+        self.scfg = scfg
+        self.ctx = ctx
+        self.layout = tfm.vocab_layout(cfg, ctx)
+        self._prefill = jax.jit(partial(tfm.prefill, cfg=cfg, ctx=ctx))
+        self._step = jax.jit(partial(tfm.decode_step, cfg=cfg, ctx=ctx),
+                             donate_argnums=(2,))
+
+    def _sample(self, logits_phys: jax.Array, key) -> jax.Array:
+        """Sample in physical vocab order, return *logical* token ids."""
+        lay = self.layout
+        if lay.pad_rows != lay.vocab_size:
+            logical = lay.cyclic.to_logical(jnp.arange(lay.pad_rows))
+            logits_phys = jnp.where(logical < lay.vocab_size,
+                                    logits_phys, -jnp.inf)
+        if self.scfg.temperature <= 0.0:
+            phys = jnp.argmax(logits_phys, axis=-1)
+        else:
+            phys = jax.random.categorical(
+                key, logits_phys / self.scfg.temperature, axis=-1)
+        if lay.mode == "blocked":
+            return phys.astype(jnp.int32)
+        return lay.cyclic.to_logical(phys).astype(jnp.int32)
+
+    def _grow_cache(self, caches, target: int):
+        """Pad prefill caches (length = prompt) out to max_seq slots."""
+        def pad(path, a):
+            ps = "/".join(str(getattr(p, "key", p)) for p in path)
+            if ps.endswith(("'k'",)) or ps.split("/")[-1] in (
+                    "k", "v", "ckv", "krope"):
+                grow = target - a.shape[2]
+                if grow > 0:
+                    widths = [(0, 0)] * a.ndim
+                    widths[2] = (0, grow)
+                    return jnp.pad(a, widths)
+            return a
+        return jax.tree_util.tree_map_with_path(pad, caches)
+
+    def generate(self, prompts: jax.Array, num_tokens: int,
+                 cond: Optional[jax.Array] = None) -> jax.Array:
+        """prompts: [B, S_prompt] int32.  Returns [B, num_tokens]."""
+        b, sp = prompts.shape
+        assert sp + num_tokens <= self.scfg.max_seq
+        key = jax.random.PRNGKey(self.scfg.seed)
+        logits, caches = self._prefill(self.params, prompts, cond=cond)
+        caches = self._grow_cache(caches, self.scfg.max_seq)
+        out = []
+        key, sub = jax.random.split(key)
+        tok = self._sample(logits, sub)
+        for i in range(num_tokens):
+            out.append(tok)
+            if i + 1 == num_tokens:
+                break
+            logits, caches = self._step(self.params, tok, caches,
+                                        jnp.int32(sp + i), cond=cond)
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits, sub)
+        return jnp.stack(out, axis=1)

@@ -1,0 +1,267 @@
+"""PartitionSpec rules: parameters, optimizer state, activations, caches.
+
+Rules are keyed on parameter *path suffixes* so every architecture flows
+through one table.  The mesh has axes (pod?, data, model); ``MeshCtx``
+carries the axis names so the same model code runs single-device (tests),
+single-pod (16x16) and multi-pod (2x16x16).
+
+Layout summary (DESIGN.md section 5):
+  embed/lm_head tables   : P(model, None)   -- vocab rows, cyclic physical order
+  attn wq/wk/wv          : P(None, model)   -- shard heads
+  attn wo                : P(model, None)
+  mlp w_gate/w_up        : P(None, model)   -- shard d_ff
+  mlp w_down             : P(model, None)
+  MoE experts            : P(model, ...)    -- expert-parallel (cyclic owners)
+  MLA w_dkv (latent)     : replicated       (latent dim is small and shared)
+  MLA w_uk/w_uv          : P(None, model)
+  ssm in_proj/out_proj   : P(None, model) / P(model, None)  -- shard d_inner
+  norms / scalars / router: replicated
+Activations:
+  train/prefill hidden   : P(dp, None, None)      (batch over pod+data)
+  KV caches              : P(dp, None, None, None) batch-sharded, except
+  long-context (batch 1) : P(None, "data", ...)    sequence-sharded cache
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshCtx:
+    """Mesh + axis roles.  ``mesh is None`` means single-device reference
+    semantics everywhere (smoke tests)."""
+
+    mesh: Optional[Mesh]
+    dp: Tuple[str, ...]          # data-parallel axes, e.g. ("pod", "data")
+    model: Optional[str]         # tensor/expert-parallel axis
+
+    @property
+    def num_devices(self) -> int:
+        return 1 if self.mesh is None else self.mesh.devices.size
+
+    @property
+    def dp_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        out = 1
+        for ax in self.dp:
+            out *= sizes[ax]
+        return out
+
+    @property
+    def model_size(self) -> int:
+        if self.mesh is None or self.model is None:
+            return 1
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape))[self.model]
+
+    def named(self, spec: P) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, spec)
+
+    def constrain(self, x: jax.Array, spec: P) -> jax.Array:
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.named(spec))
+
+
+SINGLE = MeshCtx(None, (), None)
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules
+# ---------------------------------------------------------------------------
+
+def _param_rules(model_axis: str):
+    """(regex on '/'-joined path, spec builder taking leaf ndim)."""
+    m = model_axis
+
+    def two(a, b):
+        # spec for the *trailing two* dims; leading (stacked layer) dims None
+        return lambda nd: P(*([None] * (nd - 2) + [a, b]))
+
+    def three(a, b, c):
+        return lambda nd: P(*([None] * (nd - 3) + [a, b, c]))
+
+    def repl(nd):
+        return P()
+
+    return [
+        (r"embed/table$", two(m, None)),
+        (r"lm_head/table$", two(m, None)),
+        # Experts: expert dim over the model axis (cyclic owners), and the
+        # d_model dim ZeRO-sharded over the dp axes for storage -- gathered
+        # per use inside the MoE shard_map (models/moe.py).  Without this the
+        # expert tensors (the bulk of an MoE's parameters) are replicated
+        # data-parallel-wise and blow the HBM budget.
+        (r"experts/w_gate$", three(m, "__dp__", None)),
+        (r"experts/w_up$", three(m, "__dp__", None)),
+        (r"experts/w_down$", three(m, "__dp__", None)),
+        (r"router$", repl),
+        (r"attn.*/wq$", two(None, m)),
+        (r"attn.*/wk$", two(None, m)),
+        (r"attn.*/wv$", two(None, m)),
+        (r"attn.*/wo$", two(m, None)),
+        (r"attn.*/w_dkv$", repl),          # MLA latent down-proj: small, replicated
+        (r"attn.*/w_uk$", two(None, m)),
+        (r"attn.*/w_uv$", two(None, m)),
+        (r"(mlp|shared)/w_gate$", two(None, m)),
+        (r"(mlp|shared)/w_up$", two(None, m)),
+        (r"(mlp|shared)/w_down$", two(m, None)),
+        (r"ssm/in_proj$", two(None, m)),
+        (r"ssm/out_proj$", two(m, None)),
+        (r"ssm/conv_w$", two(None, m)),
+        (r"ssm/conv_b$", lambda nd: P(*([None] * (nd - 1) + [m]))),
+        (r".*", repl),                     # norms, scalars, biases, gates
+    ]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(params, ctx: MeshCtx):
+    """PartitionSpec tree matching ``params``."""
+    if ctx.mesh is None or ctx.model is None:
+        return jax.tree.map(lambda _: P(), params)
+    rules = _param_rules(ctx.model)
+
+    def one(path, leaf):
+        s = _path_str(path)
+        for pat, builder in rules:
+            if re.search(pat, s):
+                spec = builder(leaf.ndim)
+                # resolve the "__dp__" placeholder to this mesh's dp axes
+                parts = tuple(tuple(ctx.dp) if p == "__dp__" else p
+                              for p in spec)
+                return P(*parts)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def opt_state_specs(params, ctx: MeshCtx):
+    """ZeRO-style specs for optimizer moments / gradient accumulators.
+
+    Parameters are model-sharded but dp-replicated (they are read by every
+    forward).  Their f32 moments and microbatch grad accumulators are only
+    read/written by the optimizer, so they additionally shard over the dp
+    axes: pick the first dp-divisible dim the param spec leaves None.
+    Cuts optimizer-state HBM by dp_size (16-32x) -- measured 8.5 -> 0.5
+    GiB/chip on phi3 train_4k.  The all-gather of the parameter delta per
+    step is params/dp bytes, inserted automatically by GSPMD.
+    """
+    base = param_specs(params, ctx)
+    if ctx.mesh is None:
+        return base
+    dp = tuple(ctx.dp)
+    dpsz = ctx.dp_size
+
+    def widen(spec, leaf):
+        parts = list(spec) + [None] * (leaf.ndim - len(spec))
+        used = set()
+        for p in parts:
+            for ax in (p if isinstance(p, tuple) else (p,)):
+                used.add(ax)
+        if any(a in used for a in dp):
+            return P(*parts)
+        for i in list(range(1, leaf.ndim)) + [0]:
+            if parts[i] is None and leaf.shape[i] and leaf.shape[i] % dpsz == 0:
+                parts[i] = dp
+                return P(*parts)
+        return P(*parts)
+
+    return jax.tree.map(widen, base, params,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def param_shardings(params, ctx: MeshCtx):
+    if ctx.mesh is None:
+        return None
+    return jax.tree.map(lambda s: ctx.named(s), param_specs(params, ctx),
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+# ---------------------------------------------------------------------------
+# Activation / cache / batch rules
+# ---------------------------------------------------------------------------
+
+def batch_spec(ctx: MeshCtx) -> P:
+    return P(tuple(ctx.dp)) if ctx.dp else P()
+
+
+# Residual-stream sharding between blocks.  "dp" = batch only (classic);
+# "dp_model" additionally shards d_model over the model axis, which shrinks
+# the per-layer scan carry (the activation-checkpoint working set) by the
+# model-axis size at the cost of re-gather collectives per block -- the
+# trade is measured in EXPERIMENTS.md section Perf.
+ACTIVATION_SHARDING = "dp_model"
+
+
+def hidden_spec(ctx: MeshCtx, cfg=None) -> P:
+    if not ctx.dp:
+        return P()
+    mode = (cfg.activation_sharding if cfg is not None
+            and getattr(cfg, "activation_sharding", "") else
+            ACTIVATION_SHARDING)
+    if mode == "dp_seq" and ctx.model is not None:
+        # sequence over the model axis: pairs with seq-parallel attention
+        # (no boundary reshard around the attention block)
+        return P(tuple(ctx.dp), ctx.model, None)
+    if mode == "dp_model" and ctx.model is not None:
+        return P(tuple(ctx.dp), None, ctx.model)
+    return P(tuple(ctx.dp), None, None)
+
+
+def tokens_spec(ctx: MeshCtx) -> P:
+    return P(tuple(ctx.dp), None) if ctx.dp else P()
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape, ctx: MeshCtx):
+    """Spec builders for decode caches.
+
+    Returns a dict of spec-functions keyed by cache kind; transformer.py
+    applies them leaf-wise.  For long_500k (batch 1) attention caches are
+    **sequence-sharded** over the data axis (the distributed-LSE decode
+    path); otherwise batch-sharded.
+    """
+    if ctx.mesh is None:
+        none = P()
+        return {"kv": none, "mla": none, "ssm_state": none, "conv": none,
+                "seq_axis_sharded": False}
+    dp = tuple(ctx.dp)
+    m = ctx.model
+    seq_shard = shape.global_batch < ctx.dp_size
+    if seq_shard:
+        # long-context (batch 1): [L, B, S, KV, hd] -- sequence over the
+        # data axes (the distributed-LSE decode path), head_dim over model
+        # (KV head counts are small and non-divisible; head_dim always is).
+        kv = P(None, None, dp, None, m)
+        mla = P(None, None, dp, m)            # latent dim over model
+        ssm_state = P(None, None, None, m, None)  # [L,B,H,P,N]: P over model
+        conv = P(None, None, None, m)         # channels over model
+    else:
+        kv = P(None, dp, None, None, m)
+        mla = P(None, dp, None, m)
+        ssm_state = P(None, dp, None, m, None)
+        conv = P(None, dp, None, m)
+    return {"kv": kv, "mla": mla, "ssm_state": ssm_state, "conv": conv,
+            "seq_axis_sharded": seq_shard}

@@ -1,0 +1,69 @@
+"""Checkpointing: flat-npz pytree snapshots + the paper's LDA recovery.
+
+The paper's fault-tolerance story (section 3.5): the parameter servers are
+*not* durable -- instead the data set including topic assignments ``z`` is
+checkpointed each iteration, and on failure the count tables are *rebuilt*
+from ``z``.  ``save_lda`` / ``restore_lda`` implement exactly that:
+only (w, d, z, valid) are stored; counts come back via
+``lightlda.rebuild_counts``.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(p.key) if isinstance(p, jax.tree_util.DictKey)
+            else str(getattr(p, "idx", p)) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, tree) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez_compressed(path, **_flatten(tree))
+
+
+def restore(path: str, like):
+    """Restore into the structure of ``like`` (shape/dtype-checked)."""
+    with np.load(path) as data:
+        flat = dict(data.items())
+
+    def fill(p, leaf):
+        key = "/".join(
+            str(x.key) if isinstance(x, jax.tree_util.DictKey)
+            else str(getattr(x, "idx", x)) for x in p)
+        arr = flat[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        return jnp.asarray(arr, leaf.dtype)
+
+    return jax.tree_util.tree_map_with_path(fill, like)
+
+
+# --- LDA: checkpoint assignments, rebuild counts (paper section 3.5) ---
+
+def save_lda(path: str, state) -> None:
+    save(path, {"w": state.w, "d": state.d, "z": state.z,
+                "valid": state.valid, "doc_start": state.doc_start,
+                "doc_len": state.doc_len})
+
+
+def restore_lda(path: str, cfg, num_docs: int):
+    from repro.core import lightlda as lda
+    with np.load(path) as data:
+        w = jnp.asarray(data["w"])
+        d = jnp.asarray(data["d"])
+        z = jnp.asarray(data["z"])
+        valid = jnp.asarray(data["valid"])
+        doc_start = jnp.asarray(data["doc_start"])
+        doc_len = jnp.asarray(data["doc_len"])
+    nwk, nk, ndk = lda.rebuild_counts(w, d, z, valid, num_docs, cfg)
+    return lda.SamplerState(w, d, z, valid, doc_start, doc_len, nwk, nk, ndk)

@@ -1,0 +1,154 @@
+"""Training loop: state, jitted step builder (with shardings), metrics.
+
+``make_train_step`` returns the exact function the multi-pod dry-run lowers:
+loss -> grads -> clip -> AdamW, with parameters/moments sharded per
+sharding/specs.py and batch inputs sharded over the dp axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models import transformer as tfm
+from repro.sharding.specs import (MeshCtx, SINGLE, opt_state_specs,
+                                  param_specs, tokens_spec)
+from repro.train import optimizer as opt
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: opt.AdamWState
+
+
+def init_state(key: jax.Array, cfg: ModelConfig, ctx: MeshCtx = SINGLE
+               ) -> TrainState:
+    params = tfm.init_params(key, cfg, ctx)
+    return TrainState(params, opt.init(params))
+
+
+def state_specs(state: TrainState, ctx: MeshCtx):
+    """Params: model-sharded / dp-replicated.  Optimizer moments: ZeRO
+    (additionally dp-sharded, specs.opt_state_specs)."""
+    ps = param_specs(state.params, ctx)
+    os_ = opt_state_specs(state.params, ctx)
+    return TrainState(ps, opt.AdamWState(os_, os_, P()))
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig, ctx: MeshCtx = SINGLE
+                    ) -> Callable:
+    """Returns train_step(state, tokens, targets, mask, cond=None).
+
+    With ``tc.microbatch > 1`` the global batch is split into microbatches
+    scanned sequentially with f32 gradient accumulation (sharded like the
+    parameters), dividing peak activation memory by the microbatch count --
+    this is what makes train_4k fit the 16 GiB/chip budget (EXPERIMENTS.md).
+    """
+    mb = max(tc.microbatch, 1)
+
+    def grads_of(params, tokens, targets, mask, cond):
+        def lf(p):
+            return tfm.loss_fn(p, tokens, targets, mask, cfg, ctx, cond=cond)
+        return jax.value_and_grad(lf, has_aux=True)(params)
+
+    def train_step(state: TrainState, tokens, targets, mask, cond=None):
+        tokens = ctx.constrain(tokens, tokens_spec(ctx))
+        targets = ctx.constrain(targets, tokens_spec(ctx))
+        mask = ctx.constrain(mask, tokens_spec(ctx))
+
+        if mb == 1:
+            (loss, metrics), grads = grads_of(state.params, tokens, targets,
+                                              mask, cond)
+        else:
+            b = tokens.shape[0]
+            assert b % mb == 0, (b, mb)
+
+            def shard(a):
+                # keep the (now second) batch dim sharded over dp after the
+                # [B, ...] -> [mb, B/mb, ...] reshape; GSPMD otherwise
+                # replicates (measured: the full cond tensor per device)
+                a = a.reshape(mb, b // mb, *a.shape[1:])
+                spec = P(None, tuple(ctx.dp), *([None] * (a.ndim - 2)))
+                return ctx.constrain(a, spec)
+
+            xs = (shard(tokens), shard(targets), shard(mask))
+            if cond is not None:
+                xs = xs + (shard(cond),)
+
+            acc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            if ctx.mesh is not None:
+                # ZeRO: the accumulator shards over dp like the moments, so
+                # each microbatch's gradient is reduce-scattered (not
+                # all-reduced) before the f32 add
+                ospecs = opt_state_specs(state.params, ctx)
+                acc0 = jax.tree.map(lambda a, s: ctx.constrain(a, s),
+                                    acc0, ospecs)
+
+            def body(acc, x):
+                cnd = x[3] if cond is not None else None
+                (loss_i, met_i), g_i = grads_of(state.params, x[0], x[1],
+                                                x[2], cnd)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / mb, acc, g_i)
+                if ctx.mesh is not None:
+                    acc = jax.tree.map(lambda a, s: ctx.constrain(a, s),
+                                       acc, ospecs)
+                return acc, (loss_i, met_i)
+
+            grads, (losses, mets) = jax.lax.scan(body, acc0, xs)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda m: m.mean(), mets)
+
+        new_params, new_opt, om = opt.apply(grads, state.opt, state.params, tc)
+        metrics = dict(metrics, loss=loss, **om)
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step
+
+
+def jit_train_step(cfg: ModelConfig, tc: TrainConfig, ctx: MeshCtx,
+                   state: TrainState, donate: bool = True):
+    """jit with explicit in/out shardings (what dryrun lowers)."""
+    step = make_train_step(cfg, tc, ctx)
+    if ctx.mesh is None:
+        return jax.jit(step, donate_argnums=(0,) if donate else ())
+    sspec = state_specs(state, ctx)
+    s_shard = jax.tree.map(lambda s: ctx.named(s), sspec,
+                           is_leaf=lambda s: isinstance(s, P))
+    tok = ctx.named(tokens_spec(ctx))
+    cond_spec = ctx.named(P(tuple(ctx.dp), None, None))
+    in_shardings = (s_shard, tok, tok, tok)
+    if cfg.cross_attn_mode:
+        in_shardings = in_shardings + (cond_spec,)
+    return jax.jit(step,
+                   in_shardings=in_shardings,
+                   out_shardings=(s_shard, None),
+                   donate_argnums=(0,) if donate else ())
+
+
+def fit(state: TrainState, batches, cfg: ModelConfig, tc: TrainConfig,
+        ctx: MeshCtx = SINGLE, log_every: int = 10, log_fn=print
+        ) -> Tuple[TrainState, list]:
+    """Simple host loop over an iterable of batches (dict of arrays)."""
+    step_fn = jit_train_step(cfg, tc, ctx, state)
+    history = []
+    t0 = time.time()
+    for i, batch in enumerate(batches):
+        args = (batch["tokens"], batch["targets"], batch["mask"])
+        if cfg.cross_attn_mode:
+            args = args + (batch["cond"],)
+        state, metrics = step_fn(state, *args)
+        if i % log_every == 0:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = i
+            m["elapsed_s"] = time.time() - t0
+            history.append(m)
+            log_fn(f"step {i:5d} loss {m['loss']:.4f} "
+                   f"grad_norm {m['grad_norm']:.3f} lr {m['lr']:.2e}")
+    return state, history

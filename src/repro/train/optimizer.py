@@ -1,0 +1,91 @@
+"""Hand-rolled optimizers (no optax): AdamW with warmup-cosine schedule and
+global-norm clipping.  Optimizer moments shard exactly like their parameters
+(specs.param_specs applies leaf-wise), so the optimizer adds no new
+distribution concepts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class AdamWState(NamedTuple):
+    m: dict
+    v: dict
+    step: jax.Array
+
+
+def init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamWState(jax.tree.map(zeros, params),
+                      jax.tree.map(zeros, params),
+                      jnp.zeros((), jnp.int32))
+
+
+def lr_schedule(step: jax.Array, tc: TrainConfig) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(tc.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - tc.warmup_steps)
+                    / max(tc.total_steps - tc.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return tc.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def apply(grads, state: AdamWState, params, tc: TrainConfig
+          ) -> Tuple[dict, AdamWState, dict]:
+    """One AdamW step.  Weight decay is applied only to >=2-D leaves
+    (matrices/embeddings), not to norms/scalars/biases."""
+    grads, gn = clip_by_global_norm(grads, tc.grad_clip)
+    step = state.step + 1
+    lr = lr_schedule(step, tc)
+    b1, b2 = tc.beta1, tc.beta2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * g32 * g32
+        mh = m_new / c1
+        vh = v_new / c2
+        delta = mh / (jnp.sqrt(vh) + tc.eps)
+        if p.ndim >= 2:
+            delta = delta + tc.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, AdamWState(new_m, new_v, step), {"lr": lr, "grad_norm": gn}
+
+
+# --- plain SGD (baseline / LDA hyper-updates) ---
+
+def sgd_apply(grads, params, lr: float):
+    return jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32)
+                      - lr * g.astype(jnp.float32)).astype(p.dtype),
+        params, grads)

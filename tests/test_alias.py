@@ -1,0 +1,64 @@
+"""Alias-table tests: exact Vose pmf + O(1) sampling statistics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import alias
+
+
+class TestBuild:
+    @given(st.integers(2, 65), st.integers(0, 10_000))
+    @settings(max_examples=40, deadline=None)
+    def test_pmf_exact(self, k, seed):
+        """The induced pmf of the alias table equals p/sum(p) exactly."""
+        rng = np.random.default_rng(seed)
+        p = rng.random(k).astype(np.float32) ** 3 + 1e-6
+        table = alias.build_alias(jnp.asarray(p))
+        pmf = np.asarray(alias.alias_pmf(table))
+        ref = p / p.sum()
+        np.testing.assert_allclose(pmf, ref, rtol=2e-5, atol=2e-6)
+
+    def test_rows_vectorised(self):
+        key = jax.random.PRNGKey(0)
+        p = jax.random.uniform(key, (17, 33)) + 1e-4
+        t = alias.build_alias_rows(p)
+        pmf = alias.alias_pmf(t)
+        ref = p / p.sum(-1, keepdims=True)
+        np.testing.assert_allclose(np.asarray(pmf), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-6)
+
+    def test_degenerate_single_spike(self):
+        p = jnp.zeros(16).at[5].set(1.0) + 1e-9
+        t = alias.build_alias(p)
+        pmf = np.asarray(alias.alias_pmf(t))
+        assert pmf[5] > 0.999
+
+    def test_uniform(self):
+        t = alias.build_alias(jnp.ones(8))
+        np.testing.assert_allclose(np.asarray(alias.alias_pmf(t)),
+                                   np.full(8, 0.125), rtol=1e-6)
+
+
+class TestSample:
+    def test_empirical_distribution(self):
+        """Empirical draw frequencies match the target (LDA word proposal)."""
+        key = jax.random.PRNGKey(1)
+        p = jnp.asarray([0.5, 0.25, 0.125, 0.0625, 0.0625])
+        t = alias.build_alias(p)
+        n = 200_000
+        u = jax.random.uniform(key, (n,))
+        prob = jnp.broadcast_to(t.prob, (n, 5))
+        al = jnp.broadcast_to(t.alias, (n, 5))
+        draws = np.asarray(alias.alias_sample(prob, al, u))
+        emp = np.bincount(draws, minlength=5) / n
+        np.testing.assert_allclose(emp, np.asarray(p), atol=5e-3)
+
+    def test_sample_in_range(self):
+        key = jax.random.PRNGKey(2)
+        p = jax.random.uniform(key, (100, 13)) + 1e-5
+        t = alias.build_alias_rows(p)
+        u = jax.random.uniform(key, (100,))
+        s = np.asarray(alias.alias_sample(t.prob, t.alias, u))
+        assert s.min() >= 0 and s.max() < 13

@@ -1,0 +1,108 @@
+"""Blocked/pipelined sweep (paper section 3.4) + topic coherence tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import coherence
+from repro.core import lightlda as lda
+from repro.core import perplexity as ppl
+from repro.data import corpus as corpus_mod
+
+
+@pytest.fixture(scope="module")
+def setup():
+    corp = corpus_mod.generate_lda_corpus(
+        seed=0, num_docs=250, mean_doc_len=50, vocab_size=400, num_topics=8)
+    cfg = lda.LDAConfig(num_topics=10, vocab_size=400, block_tokens=1024,
+                        num_shards=4)
+    state = lda.init_state(jax.random.PRNGKey(0), jnp.asarray(corp.w),
+                           jnp.asarray(corp.d), corp.num_docs, cfg)
+    layout = state.nwk.layout
+    rpb = layout.pad_rows // 4  # 4 model blocks
+    idx, bval = lda.block_token_index(
+        np.asarray(state.w), np.asarray(state.valid), rpb, layout)
+    return corp, cfg, state, jnp.asarray(idx), jnp.asarray(bval), rpb
+
+
+def _ppl(state, cfg):
+    return float(ppl.training_perplexity(
+        state.w, state.d, state.valid, state.ndk, state.nwk.to_dense(),
+        state.nk.value, cfg.alpha, cfg.beta))
+
+
+class TestBlockIndex:
+    def test_partition_of_valid_tokens(self, setup):
+        corp, cfg, state, idx, bval, rpb = setup
+        got = np.sort(np.asarray(idx)[np.asarray(bval)])
+        want = np.where(np.asarray(state.valid))[0]
+        assert np.array_equal(got, np.sort(want))
+
+    def test_block_ownership(self, setup):
+        """Every grouped token's word belongs to its physical block."""
+        corp, cfg, state, idx, bval, rpb = setup
+        layout = state.nwk.layout
+        w = np.asarray(state.w)
+        idx_n, bval_n = np.asarray(idx), np.asarray(bval)
+        for b in range(idx_n.shape[0]):
+            toks = idx_n[b][bval_n[b]]
+            phys = np.asarray(layout.to_physical(w[toks]))
+            assert ((phys // rpb) == b).all()
+
+    def test_cyclic_order_balances_blocks(self, setup):
+        """Section 3.2: physical (cyclic) blocks over frequency-ordered
+        words carry balanced token loads."""
+        corp, cfg, state, idx, bval, rpb = setup
+        counts = np.asarray(bval).sum(1)
+        assert counts.max() / max(counts.mean(), 1) < 1.5
+
+
+class TestBlockedSweep:
+    def test_invariants(self, setup):
+        corp, cfg, state, idx, bval, rpb = setup
+        st = jax.jit(lambda s, k: lda.sweep_blocked(s, k, cfg, idx, bval,
+                                                    rpb))(
+            state, jax.random.PRNGKey(1))
+        n = corp.num_tokens
+        assert int(st.nk.value.sum()) == n
+        assert int(st.nwk.to_dense().sum()) == n
+        assert int(st.ndk.sum()) == n
+        nwk2, nk2, ndk2 = lda.rebuild_counts(
+            st.w, st.d, st.z, st.valid, st.ndk.shape[0], cfg)
+        assert bool((nwk2.value == st.nwk.value).all())
+        assert bool((ndk2 == st.ndk).all())
+
+    def test_converges_like_full_sweep(self, setup):
+        corp, cfg, state, idx, bval, rpb = setup
+        st_b = state
+        key = jax.random.PRNGKey(2)
+        step = jax.jit(lambda s, k: lda.sweep_blocked(s, k, cfg, idx, bval,
+                                                      rpb))
+        for _ in range(25):
+            key, sub = jax.random.split(key)
+            st_b = step(st_b, sub)
+        p_blocked = _ppl(st_b, cfg)
+
+        st_f = lda.train(state, jax.random.PRNGKey(3), cfg, 25)
+        p_full = _ppl(st_f, cfg)
+        assert p_blocked < _ppl(state, cfg) * 0.95
+        assert abs(p_blocked - p_full) / min(p_blocked, p_full) < 0.06, \
+            (p_blocked, p_full)
+
+
+class TestCoherence:
+    def test_trained_beats_random(self, setup):
+        corp, cfg, state, idx, bval, rpb = setup
+        st = lda.train(state, jax.random.PRNGKey(4), cfg, 30)
+        phi_trained = np.asarray(ppl.phi_from_counts(
+            st.nwk.to_dense().astype(jnp.float32),
+            st.nk.value.astype(jnp.float32), cfg.beta))
+        phi_random = np.asarray(ppl.phi_from_counts(
+            state.nwk.to_dense().astype(jnp.float32),
+            state.nk.value.astype(jnp.float32), cfg.beta))
+        w, d = np.asarray(corp.w), np.asarray(corp.d)
+        c_trained = coherence.mean_coherence(phi_trained, w, d, cfg.V,
+                                             corp.num_docs)
+        c_random = coherence.mean_coherence(phi_random, w, d, cfg.V,
+                                            corp.num_docs)
+        assert c_trained > c_random + 0.01, (c_trained, c_random)

@@ -1,0 +1,78 @@
+"""Corpus pipeline: Zipf statistics (paper fig. 4), frequency ordering
+(section 3.2), shard balance."""
+import numpy as np
+import pytest
+
+from repro.data import corpus as corpus_mod
+from repro.data.lm_data import LMDataConfig, MarkovZipfSource, token_frequencies
+
+
+@pytest.fixture(scope="module")
+def corp():
+    return corpus_mod.generate_lda_corpus(
+        seed=0, num_docs=500, mean_doc_len=80, vocab_size=2000, num_topics=10)
+
+
+class TestZipf:
+    def test_frequency_ordered(self, corp):
+        f = corp.word_freq
+        assert (f[:-1] >= f[1:]).all()
+        counts = np.bincount(corp.w, minlength=corp.vocab_size)
+        assert np.array_equal(counts, f)
+
+    def test_zipf_slope(self, corp):
+        """log-freq vs log-rank is near-linear with slope ~ -1 (fig. 4)."""
+        f = corp.word_freq[:200].astype(float)
+        ranks = np.arange(1, 201)
+        mask = f > 0
+        slope = np.polyfit(np.log(ranks[mask]), np.log(f[mask]), 1)[0]
+        assert -1.6 < slope < -0.6, slope
+
+    def test_doc_offsets(self, corp):
+        assert corp.doc_start[0] == 0
+        assert (corp.doc_start[1:] ==
+                corp.doc_start[:-1] + corp.doc_len[:-1]).all()
+        assert corp.doc_start[-1] + corp.doc_len[-1] == corp.num_tokens
+        # tokens grouped by doc
+        assert (np.diff(corp.d) >= 0).all()
+
+    def test_subset_fraction(self, corp):
+        sub = corp.subset(0.1)
+        assert 0.05 < sub.num_tokens / corp.num_tokens < 0.2
+
+
+class TestSharding:
+    def test_shard_token_balance(self, corp):
+        shards = corpus_mod.shard_tokens(corp, 8, block_tokens=256)
+        loads = [int(s[2].sum()) for s in shards]  # valid counts
+        assert sum(loads) == corp.num_tokens
+        assert max(loads) / (sum(loads) / 8) < 1.1  # greedy LPT balance
+        for w, d, valid, ds, dl in shards:
+            assert len(w) % 256 == 0
+            n = int(valid.sum())
+            assert (w[:n] < corp.vocab_size).all()
+            assert int(dl.sum()) == n
+
+    def test_heldout_split_shares_vocab(self, corp):
+        train, held = corpus_mod.train_heldout_split(corp, 0.2)
+        assert train.vocab_size == held.vocab_size == corp.vocab_size
+        assert train.num_tokens + held.num_tokens == corp.num_tokens
+
+
+class TestLMData:
+    def test_markov_batches(self):
+        src = MarkovZipfSource(LMDataConfig(vocab_size=512, seq_len=64,
+                                            batch_size=4))
+        b = src.batch()
+        assert b["tokens"].shape == (4, 64)
+        assert (b["targets"][:, :-1] == b["tokens"][:, 1:]).all()
+        assert b["tokens"].max() < 512
+
+    def test_zipfian_token_marginal(self):
+        src = MarkovZipfSource(LMDataConfig(vocab_size=1024, seq_len=256,
+                                            batch_size=8))
+        f = token_frequencies(src, 4)
+        # head should dominate: the top 10% of ranks carry most of the mass
+        order = np.argsort(-f)
+        top = f[order[:102]].sum() / max(f.sum(), 1)
+        assert top > 0.5, top

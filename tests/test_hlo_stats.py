@@ -1,0 +1,113 @@
+"""Tests for the trip-count-aware HLO analyzer (the roofline's source of
+truth).  Includes live calibrations against XLA-compiled programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import hlo_stats as H
+
+
+class TestShapeParse:
+    def test_shape_bytes(self):
+        assert H._shape_bytes("f32[4,8]") == 128
+        assert H._shape_bytes("bf16[2,3,5]") == 60
+        assert H._shape_bytes("s32[10]") == 40
+        assert H._shape_bytes("pred[16]") == 16
+        assert H._shape_bytes("(f32[4], s8[4])") == 20
+        assert H._shape_bytes("f32[]") == 4  # scalar
+
+    def test_dims(self):
+        assert H._first_shape_dims("bf16[2,16,128]{2,1,0}") == [2, 16, 128]
+
+
+SYNTHETIC = """\
+HloModule test
+
+%body.1 (p.1: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p.1 = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p.1), index=0
+  %x = f32[8,8] get-tuple-element(%p.1), index=1
+  %d = f32[8,8] dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8] all-reduce(%d), replica_groups={{0,1,2,3}}, to_apply=%add
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(%i2, %ar)
+}
+
+%cond.1 (p.2: (s32[], f32[8,8])) -> pred[] {
+  %p.2 = (s32[], f32[8,8]) parameter(0)
+  %i3 = s32[] get-tuple-element(%p.2), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i3, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,8]) -> (s32[], f32[8,8]) {
+  %a = f32[8,8] parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[8,8]) tuple(%z, %a)
+  ROOT %w = (s32[], f32[8,8]) while(%t0), condition=%cond.1, body=%body.1
+}
+"""
+
+
+class TestSynthetic:
+    def test_trip_count_multiplies(self):
+        st = H.analyze_text(SYNTHETIC)
+        # dot: 2*8*8*8 = 1024 flops, x5 trips
+        assert st.flops == 5 * 1024, st.flops
+        # all-reduce f32[8,8]=256B, group 4 -> wire 2*(3/4)*256 = 384, x5
+        assert st.coll_counts["all-reduce"] == 5
+        np.testing.assert_allclose(st.coll_wire_bytes, 5 * 384)
+
+    def test_top_collectives(self):
+        rows = H.top_collectives(SYNTHETIC)
+        assert len(rows) == 1
+        wire, kind, shape, cnt = rows[0]
+        assert kind == "all-reduce" and cnt == 5
+        np.testing.assert_allclose(wire, 5 * 384)
+
+
+class TestLiveCalibration:
+    def test_matmul_flops_match_cost_analysis(self):
+        """On a loop-free program, our dot-flop count must equal XLA's."""
+        x = jnp.zeros((64, 32), jnp.float32)
+        w = jnp.zeros((32, 16), jnp.float32)
+        comp = jax.jit(lambda x, w: x @ w).lower(x, w).compile()
+        st = H.analyze_text(comp.as_text())
+        xla = comp.cost_analysis()
+        assert st.flops == 2 * 64 * 32 * 16
+        assert st.flops == float(xla["flops"])
+
+    def test_scan_trip_count_live(self):
+        """XLA counts a scanned body once; we must multiply by the trips."""
+        def scanned(x, ws):
+            def body(c, w):
+                return c @ w, ()
+            y, _ = jax.lax.scan(body, x, ws)
+            return y
+
+        x = jnp.zeros((16, 16), jnp.float32)
+        ws = jnp.zeros((7, 16, 16), jnp.float32)
+        comp = jax.jit(scanned).lower(x, ws).compile()
+        st = H.analyze_text(comp.as_text())
+        per_iter = 2 * 16 ** 3
+        assert st.flops == 7 * per_iter, (st.flops, 7 * per_iter)
+        # XLA counts the body once (+ a couple of loop-counter adds)
+        assert abs(float(comp.cost_analysis()["flops"]) - per_iter) < 16
+
+    def test_nested_scan(self):
+        def nested(x, ws):
+            def outer(c, w):
+                def inner(ci, _):
+                    return ci @ w, ()
+                y, _ = jax.lax.scan(inner, c, jnp.arange(3))
+                return y, ()
+            y, _ = jax.lax.scan(outer, x, ws)
+            return y
+
+        x = jnp.zeros((8, 8), jnp.float32)
+        ws = jnp.zeros((4, 8, 8), jnp.float32)
+        comp = jax.jit(nested).lower(x, ws).compile()
+        st = H.analyze_text(comp.as_text())
+        assert st.flops == 4 * 3 * 2 * 8 ** 3, st.flops

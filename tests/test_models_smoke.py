@@ -1,0 +1,129 @@
+"""Per-architecture smoke tests (deliverable f): a REDUCED variant of each
+assigned family runs one forward/train step on CPU with shape + finiteness
+assertions, plus the decode==forward consistency check that exercises every
+cache path (GQA / MLA / SSM / hybrid / cross-attn)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.configs.base import TrainConfig
+from repro.models import transformer as tfm
+from repro.train import loop as train_loop
+
+ARCHS = registry.all_arch_names()
+B, S = 2, 64
+
+
+def _setup(name):
+    cfg = registry.smoke_variant(name)
+    key = jax.random.PRNGKey(0)
+    params = tfm.init_params(key, cfg)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size,
+                                dtype=jnp.int32)
+    cond = None
+    if cfg.cross_attn_mode:
+        cond = jax.random.normal(jax.random.PRNGKey(1),
+                                 (B, cfg.cond_len, cfg.cond_dim_))
+    return cfg, params, tokens, cond
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_forward_shapes_and_finite(name):
+    cfg, params, tokens, cond = _setup(name)
+    logits, aux, _ = tfm.forward(params, tokens, cfg, cond=cond, remat=False)
+    layout = tfm.vocab_layout(cfg, tfm.SINGLE)
+    assert logits.shape == (B, S, layout.pad_rows)
+    assert bool(jnp.isfinite(logits).all()), name
+    assert bool(jnp.isfinite(aux)), name
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_train_step_no_nans(name):
+    cfg, params, tokens, cond = _setup(name)
+    tc = TrainConfig(total_steps=10, warmup_steps=1)
+    state = train_loop.TrainState(params, train_loop.opt.init(params))
+    step = jax.jit(train_loop.make_train_step(cfg, tc))
+    args = (tokens, tokens, jnp.ones((B, S), jnp.float32))
+    if cond is not None:
+        args = args + (cond,)
+    state, metrics = step(state, *args)
+    assert bool(jnp.isfinite(metrics["loss"])), name
+    assert bool(jnp.isfinite(metrics["grad_norm"])), name
+    for leaf in jax.tree.leaves(state.params):
+        assert bool(jnp.isfinite(leaf).all()), name
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_decode_matches_forward(name):
+    """Prefill S-1 tokens then decode the last one; logits must match the
+    full forward at the final position (validates every cache kind)."""
+    cfg, params, tokens, cond = _setup(name)
+    full, _, _ = tfm.forward(params, tokens, cfg, cond=cond, remat=False)
+    ref = full[:, -1]
+    _, caches = tfm.prefill(params, tokens[:, :S - 1], cfg, cond=cond)
+
+    def pad_cache(path, a):
+        last = None
+        for p in reversed(path):
+            if isinstance(p, jax.tree_util.DictKey):
+                last = str(p.key)
+                break
+        if last in ("k", "v", "ckv", "krope"):
+            widths = [(0, 0)] * a.ndim
+            widths[2] = (0, 1)
+            return jnp.pad(a, widths)
+        return a
+
+    caches = jax.tree_util.tree_map_with_path(pad_cache, caches)
+    got, _ = tfm.decode_step(params, tokens[:, S - 1], caches,
+                             jnp.int32(S - 1), cfg, cond=cond)
+    err = float(jnp.abs(got - ref).max() / (jnp.abs(ref).max() + 1e-9))
+    assert err < 2e-3, (name, err)
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_param_count_sane(name):
+    """Full configs report plausible parameter counts (catches config
+    typos: a 6b model should be 5-8e9, etc.)."""
+    cfg = registry.get(name)
+    n = cfg.param_count()
+    expected = {
+        "musicgen-medium": (1.2e9, 2.5e9),
+        "yi-6b": (5e9, 7e9),
+        "glm4-9b": (8e9, 11e9),
+        "phi3-medium-14b": (12e9, 16e9),
+        "llama-3.2-vision-11b": (8e9, 12e9),
+        "deepseek-v2-lite-16b": (13e9, 18e9),
+        "llama4-scout-17b-a16e": (95e9, 115e9),   # total (16 experts)
+        "gemma3-4b": (3e9, 6e9),
+        "mamba2-370m": (3e8, 5e8),
+        "hymba-1.5b": (1.2e9, 2.2e9),
+    }[name]
+    assert expected[0] < n < expected[1], (name, n)
+    na = cfg.active_param_count()
+    assert na <= n
+    if name == "llama4-scout-17b-a16e":
+        assert 14e9 < na < 22e9, na   # ~17B active
+    if name == "deepseek-v2-lite-16b":
+        assert 1.5e9 < na < 4e9, na   # ~2.4B active
+
+
+def test_long_context_eligibility():
+    from repro.configs.base import INPUT_SHAPES
+    long = INPUT_SHAPES["long_500k"]
+    eligible = {a for a in ARCHS
+                if registry.shape_supported(registry.get(a), long)}
+    assert eligible == {"mamba2-370m", "hymba-1.5b", "gemma3-4b"}
+
+
+def test_window_patterns():
+    g = registry.get("gemma3-4b")
+    wins = g.windows()
+    assert wins[:6] == (1024,) * 5 + (0,)
+    assert sum(w == 0 for w in wins) == 5   # 34 layers -> 5 globals
+    h = registry.get("hymba-1.5b")
+    wins = h.windows()
+    assert wins[0] == 0 and wins[15] == 0 and wins[31] == 0
+    assert sum(w == 0 for w in wins) == 3

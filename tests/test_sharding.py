@@ -1,0 +1,137 @@
+"""Sharding rules: spec mapping, divisibility on the production meshes
+(catches sharding mismatches before the heavyweight dry-run), vocab layout
+math, physical-order cross-entropy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import registry
+from repro.configs.base import INPUT_SHAPES
+from repro.core.pserver import CyclicLayout
+from repro.models.layers import (VocabLayout, softmax_xent_physical)
+from repro.sharding import specs as sh
+
+PROD_DP, PROD_MODEL = 16, 16
+MULTI_DP = 32  # pod x data
+
+
+class FakeCtx:
+    """Just enough of MeshCtx for the rule table (no devices needed)."""
+    mesh = object()
+    dp = ("data",)
+    model = "model"
+
+
+def test_param_rules_map_expected():
+    rules = sh._param_rules("model")
+
+    def spec_for(path, ndim):
+        import re
+        for pat, builder in rules:
+            if re.search(pat, path):
+                return builder(ndim)
+        return P()
+
+    assert spec_for("embed/table", 2) == P("model", None)
+    assert spec_for("blocks/attn/wq", 3) == P(None, None, "model")
+    assert spec_for("blocks/attn/wo", 3) == P(None, "model", None)
+    assert spec_for("blocks/mlp/w_down", 3) == P(None, "model", None)
+    assert spec_for("blocks/moe/experts/w_gate", 4) == \
+        P(None, "model", "__dp__", None)
+    assert spec_for("blocks/moe/router", 2) == P()
+    assert spec_for("blocks/ln1/scale", 2) == P()
+    assert spec_for("blocks/attn/w_dkv", 3) == P()
+    assert spec_for("blocks/ssm/in_proj", 3) == P(None, None, "model")
+
+
+@pytest.mark.parametrize("name", registry.all_arch_names())
+def test_model_dims_divisible_on_production_mesh(name):
+    """Every dimension we shard over the model axis must divide by 16."""
+    cfg = registry.get(name)
+    m = PROD_MODEL
+    # embedding rows: cyclic layout pads to a multiple of shards by design
+    lay = CyclicLayout(cfg.vocab_size, m)
+    assert lay.pad_rows % m == 0
+    if cfg.has_attention:
+        assert (cfg.num_heads * cfg.head_dim_) % m == 0, "wq out dim"
+    if cfg.use_mla:
+        assert cfg.kv_lora_rank % m == 0
+    if cfg.is_moe:
+        assert cfg.num_experts % m == 0, "expert-parallel requires E % M == 0"
+        fe = cfg.moe_d_ff or cfg.d_ff
+        # ZeRO storage shards d_model over dp
+        assert cfg.d_model % PROD_DP == 0
+    if cfg.ssm_state > 0:
+        assert (cfg.d_inner + 2 * cfg.ssm_state) % m == 0, "conv channels"
+    if not cfg.is_moe and cfg.d_ff:
+        assert cfg.d_ff % m == 0, "mlp hidden"
+
+
+@pytest.mark.parametrize("shape_name", list(INPUT_SHAPES))
+def test_batch_divisibility(shape_name):
+    shape = INPUT_SHAPES[shape_name]
+    for dp in (PROD_DP, MULTI_DP):
+        if shape.global_batch >= dp:
+            assert shape.global_batch % dp == 0, (shape_name, dp)
+        else:
+            # batch 1 long-context: sequence must shard instead
+            assert shape.seq_len % dp == 0
+
+
+@pytest.mark.parametrize("name", registry.all_arch_names())
+def test_cache_head_dim_divisible(name):
+    """decode caches shard head_dim (or latent dims) over the model axis."""
+    cfg = registry.get(name)
+    if cfg.use_mla:
+        assert cfg.kv_lora_rank % PROD_MODEL == 0
+        assert cfg.qk_rope_dim % PROD_MODEL == 0
+    elif cfg.has_attention:
+        assert cfg.head_dim_ % PROD_MODEL == 0, name
+    if cfg.ssm_state > 0:
+        assert cfg.ssm_head_dim % PROD_MODEL == 0, name  # state shards P
+        assert (cfg.d_inner + 2 * cfg.ssm_state) % PROD_MODEL == 0
+
+
+class TestVocabLayoutXent:
+    def test_physical_xent_equals_logical(self):
+        """Cross-entropy over cyclic-permuted logits == plain cross-entropy
+        (the paper layout is free at the loss)."""
+        key = jax.random.PRNGKey(0)
+        v, s, b, t = 37, 4, 2, 8
+        layout = VocabLayout(v, s, "cyclic")
+        hidden = jax.random.normal(key, (b, t, 16))
+        table_log = jax.random.normal(jax.random.PRNGKey(1),
+                                      (layout.pad_rows, 16))
+        logits_phys = hidden @ table_log.T
+        labels = jax.random.randint(jax.random.PRNGKey(2), (b, t), 0, v)
+        mask = jnp.ones((b, t))
+        got = softmax_xent_physical(logits_phys, labels, layout, mask)
+        # reference: permute back to logical order, mask padding
+        perm = np.asarray(layout.cyclic.to_physical(np.arange(v)))
+        logits_logical = logits_phys[..., perm]
+        ref = -jnp.mean(jax.nn.log_softmax(logits_logical)[
+            jnp.arange(b)[:, None], jnp.arange(t)[None, :], labels])
+        np.testing.assert_allclose(float(got), float(ref), rtol=1e-5)
+
+    def test_blocked_layout_equivalence(self):
+        """cyclic vs blocked layouts give identical losses for identical
+        logical tables (layout is an implementation detail)."""
+        key = jax.random.PRNGKey(3)
+        v, s = 32, 4
+        d = 8
+        table = jax.random.normal(key, (v, d))
+        x = jax.random.normal(jax.random.PRNGKey(4), (2, 5, d))
+        labels = jax.random.randint(jax.random.PRNGKey(5), (2, 5), 0, v)
+        mask = jnp.ones((2, 5))
+        losses = {}
+        for mode in ("cyclic", "blocked"):
+            layout = VocabLayout(v, s, mode)
+            perm = np.asarray(layout.to_physical(jnp.arange(v)))
+            phys_table = jnp.zeros((layout.pad_rows, d)).at[perm].set(table)
+            logits = x @ phys_table.T
+            losses[mode] = float(softmax_xent_physical(
+                logits, labels, layout, mask))
+        np.testing.assert_allclose(losses["cyclic"], losses["blocked"],
+                                   rtol=1e-5)

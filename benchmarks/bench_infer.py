@@ -1,0 +1,124 @@
+"""Inference-path benchmark: fold-in latency/throughput + batching gain.
+
+Measures the serving subsystem (repro.infer) against a trained snapshot:
+
+1. snapshot publication cost (the once-per-version alias build);
+2. batched fold-in throughput at several batch sizes vs the naive
+   one-doc-at-a-time loop (the acceptance bar: batched >= 5x naive);
+3. per-request latency of a full engine flush (bucketing + padding).
+
+Writes ``experiments/bench/BENCH_infer.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lightlda as lda
+from repro.data import corpus as corpus_mod
+from repro.infer.engine import EngineConfig, QueryEngine
+from repro.infer.foldin import FoldInConfig, fold_in_batch, pack_docs
+from repro.infer.snapshot import SnapshotPublisher
+
+OUT = "experiments/bench/BENCH_infer.json"
+
+
+def _trained_snapshot(num_docs, vocab, k, sweeps, seed=0):
+    corp = corpus_mod.generate_lda_corpus(
+        seed=seed, num_docs=num_docs, mean_doc_len=60, vocab_size=vocab,
+        num_topics=max(4, k // 2))
+    cfg = lda.LDAConfig(num_topics=k, vocab_size=vocab, block_tokens=4096)
+    state = lda.init_state(jax.random.PRNGKey(seed), jnp.asarray(corp.w),
+                           jnp.asarray(corp.d), corp.num_docs, cfg)
+    state = lda.train(state, jax.random.PRNGKey(seed + 1), cfg, sweeps)
+    pub = SnapshotPublisher(cfg)
+    t0 = time.time()
+    snap = pub.publish_state(state)
+    publish_s = time.time() - t0
+    return cfg, pub, snap, publish_s
+
+
+def _foldin_docs_per_s(snap, cfg, fcfg, docs, batch, length, iters=3):
+    """Throughput folding ``docs`` through fixed [batch, length] calls."""
+    w, valid = pack_docs(docs, length)
+    pad = (-len(docs)) % batch
+    if pad:
+        w = np.pad(w, ((0, pad), (0, 0)))
+        valid = np.pad(valid, ((0, pad), (0, 0)))
+    w, valid = jnp.asarray(w), jnp.asarray(valid)
+    keys = jnp.stack([jax.random.PRNGKey(i) for i in range(batch)])
+
+    def run_all():
+        outs = []
+        for i in range(0, w.shape[0], batch):
+            outs.append(fold_in_batch(snap.model, w[i:i + batch],
+                                      valid[i:i + batch], keys, cfg, fcfg))
+        return jax.block_until_ready(outs)
+
+    run_all()                              # compile
+    t0 = time.time()
+    for _ in range(iters):
+        run_all()
+    return len(docs) / ((time.time() - t0) / iters)
+
+
+def main(fast: bool = False):
+    num_docs, vocab, k, sweeps = ((300, 500, 16, 8) if fast
+                                  else (1000, 2000, 50, 20))
+    serve_docs, length = (64, 64) if fast else (256, 128)
+    cfg, pub, snap, publish_s = _trained_snapshot(num_docs, vocab, k, sweeps)
+    print(f"infer,snapshot_publish,V={cfg.V},K={cfg.K},{publish_s*1e3:.0f},ms")
+
+    rng = np.random.default_rng(0)
+    docs = [rng.integers(0, vocab, size=length - 8).astype(np.int32)
+            for _ in range(serve_docs)]
+    fcfg = FoldInConfig(num_sweeps=10, burnin=4)
+
+    naive = _foldin_docs_per_s(snap, cfg, fcfg, docs, 1, length)
+    print(f"infer,foldin_naive_b1,{naive:.1f},docs_per_s")
+    batched = {}
+    for b in ((16, 64) if fast else (16, 64, 256)):
+        batched[b] = _foldin_docs_per_s(snap, cfg, fcfg, docs, b, length)
+        print(f"infer,foldin_batched_b{b},{batched[b]:.1f},docs_per_s")
+    best_b = max(batched, key=batched.get)
+    speedup = batched[best_b] / naive
+    print(f"infer,batching_speedup,b{best_b},{speedup:.1f},x_vs_naive")
+
+    # full engine flush: mixed-length requests through bucketing + padding
+    eng = QueryEngine(pub, EngineConfig(max_batch=min(32, serve_docs),
+                                        foldin=fcfg))
+    mixed = [rng.integers(0, vocab, size=int(n)).astype(np.int32)
+             for n in rng.integers(8, length, size=serve_docs)]
+    for d in mixed:                        # warm the per-bucket jit cache
+        eng.submit(d)
+    eng.flush()
+    for d in mixed:
+        eng.submit(d)
+    t0 = time.time()
+    results = eng.flush()
+    flush_s = time.time() - t0
+    print(f"infer,engine_flush,{len(results)}_reqs,"
+          f"{flush_s/len(results)*1e3:.2f},ms_per_req")
+
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        json.dump({
+            "config": {"V": cfg.V, "K": cfg.K, "docs": serve_docs,
+                       "doc_len": length, "foldin_sweeps": fcfg.num_sweeps},
+            "snapshot_publish_ms": publish_s * 1e3,
+            "naive_docs_per_s": naive,
+            "batched_docs_per_s": {str(b): v for b, v in batched.items()},
+            "batching_speedup_x": speedup,
+            "engine_ms_per_request": flush_s / len(results) * 1e3,
+        }, f, indent=2)
+    print(f"infer,wrote,{OUT}")
+    assert speedup >= 5.0, f"batched fold-in only {speedup:.1f}x naive"
+
+
+if __name__ == "__main__":
+    main(fast=True)

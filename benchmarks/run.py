@@ -6,6 +6,8 @@
   kernels      Pallas kernels vs refs + O(1)-vs-O(K) sampling cost
   comm         Table 1 shuffle column, from compiled SPMD collectives
   roofline     deliverable (g) report from dry-run artifacts
+  infer        serving path: fold-in throughput, batching gain, engine
+               latency (emits BENCH_infer.json)
 
 ``python -m benchmarks.run`` runs everything at reduced ("fast") sizes and
 prints CSV-ish lines; ``--full`` uses the paper-ladder sizes; ``--only X``
@@ -18,8 +20,9 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_comm, bench_convergence, bench_kernels,
-                        bench_loadbalance, bench_roofline, bench_table1)
+from benchmarks import (bench_comm, bench_convergence, bench_infer,
+                        bench_kernels, bench_loadbalance, bench_roofline,
+                        bench_table1)
 
 MODULES = {
     "table1": bench_table1.main,
@@ -28,6 +31,7 @@ MODULES = {
     "kernels": bench_kernels.main,
     "comm": bench_comm.main,
     "roofline": bench_roofline.main,
+    "infer": bench_infer.main,
 }
 
 

@@ -1,0 +1,21 @@
+"""Topic-serving demo: train a small LDA model, publish versioned
+snapshots while training, then fold in held-out documents through the
+batched query engine and rank them with topic-smoothed query likelihood
+(the train -> snapshot -> serve path of DESIGN.md section 3).
+
+  PYTHONPATH=src python examples/serve_topics.py
+"""
+import os
+import subprocess
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.dirname(HERE)
+
+if __name__ == "__main__":
+    cmd = [sys.executable, "-m", "repro.launch.topic_serve",
+           "--docs", "600", "--vocab", "1000", "-k", "16",
+           "--true-topics", "10", "--sweeps", "20", "--publish-every", "5",
+           "--serve-docs", "48", "--serve-batch", "16", "--queries", "4"]
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    raise SystemExit(subprocess.call(cmd, env=env, cwd=ROOT))

@@ -136,17 +136,23 @@ def _gather_cols(mat_rows: jax.Array, k: jax.Array) -> jax.Array:
     return jnp.take_along_axis(mat_rows, k[:, None], axis=-1)[:, 0]
 
 
-def _posterior_terms(k, z0, nwk_w, ndk_d, nk, alpha, beta, vbeta):
+def _posterior_terms(k, z0, nwk_w, ndk_d, nk, alpha, beta, vbeta,
+                     frozen: bool = False):
     """Collapsed posterior factors p(k) with the -dw correction.
 
     The snapshot counts include the token's *block-start* assignment ``z0``;
     excluding the token itself means subtracting 1 exactly where ``k == z0``.
     Returns the three factors of paper eq. (1).
+
+    ``frozen`` is the *fold-in* (inference) mode: the document being sampled
+    is unseen, so its tokens were never counted into ``n_wk``/``n_k`` and the
+    -dw correction applies only to the local ``n_dk``.
     """
     excl = (k == z0).astype(jnp.float32)
+    excl_wk = 0.0 if frozen else excl
     ndk = _gather_cols(ndk_d, k).astype(jnp.float32) - excl
-    nwk = _gather_cols(nwk_w, k).astype(jnp.float32) - excl
-    nk_ = jnp.take(nk, k).astype(jnp.float32) - excl
+    nwk = _gather_cols(nwk_w, k).astype(jnp.float32) - excl_wk
+    nk_ = jnp.take(nk, k).astype(jnp.float32) - excl_wk
     return (ndk + alpha) * (nwk + beta) / (nk_ + vbeta)
 
 
@@ -200,7 +206,7 @@ def draw_mh_randoms(key: jax.Array, doc_draw_fn, batch: int,
 def mh_chain(rng: MHRandoms, z0: jax.Array,
              nwk_rows: jax.Array, ndk_rows: jax.Array, nk: jax.Array,
              aprob_rows: jax.Array, aalias_rows: jax.Array,
-             cfg: LDAConfig) -> jax.Array:
+             cfg: LDAConfig, frozen: bool = False) -> jax.Array:
     """Run ``cfg.mh_steps`` x (word-proposal, doc-proposal) MH steps for a
     block of B tokens, fully vectorised.
 
@@ -211,13 +217,18 @@ def mh_chain(rng: MHRandoms, z0: jax.Array,
       aprob/aalias [B,K] alias-table rows (built from the same snapshot)
     This pre-gather + pure-vector-compute split is what the Pallas kernel
     (kernels/mh_sample.py) mirrors tile-by-tile.
+
+    ``frozen=True`` selects fold-in inference semantics (see
+    ``_posterior_terms``): the model counts are a frozen snapshot that never
+    contained this document.
     """
     alpha, beta = cfg.alpha, cfg.beta
     vbeta = cfg.V * beta
 
     def p(k):
         # The -dw correction always refers to z0 (what the snapshot contains).
-        return _posterior_terms(k, z0, nwk_rows, ndk_rows, nk, alpha, beta, vbeta)
+        return _posterior_terms(k, z0, nwk_rows, ndk_rows, nk, alpha, beta,
+                                vbeta, frozen=frozen)
 
     def step(z_cur, xs):
         u_w, u_wa, z_d, u_da = xs
@@ -262,6 +273,72 @@ def make_doc_draw(key_shape, d_b, z_snapshot, doc_start, doc_len, cfg: LDAConfig
         return jnp.where(use_tok, z_tok, z_unif)
 
     return draw
+
+
+# ---------------------------------------------------------------------------
+# Frozen-model sampling (serving / fold-in inference, DESIGN.md section 3).
+#
+# A serving snapshot freezes (n_wk, n_k) -- and therefore the word-proposal
+# distribution q_w -- so the Vose alias tables are built ONCE per snapshot
+# and amortised over every inference request, not rebuilt per block as in
+# training.  ``sample_tokens_frozen`` is the core entry point the
+# ``repro.infer`` subsystem drives; it is the same MH chain as training with
+# the -dw correction restricted to the local doc counts.
+# ---------------------------------------------------------------------------
+
+class FrozenModel(NamedTuple):
+    """Immutable model snapshot for inference.
+
+    ``nwk``/``nk`` are dense float32 counts (no server layout -- serving
+    reads are all local); ``aprob``/``aalias`` are the per-word alias-table
+    rows of the word proposal q_w(k) ∝ (n_wk+β)/(n_k+Vβ)."""
+
+    nwk: jax.Array     # [V, K] float32 word-topic counts
+    nk: jax.Array      # [K]    float32 topic totals
+    aprob: jax.Array   # [V, K] float32 alias acceptance probabilities
+    aalias: jax.Array  # [V, K] int32 alias targets
+
+
+def freeze_model(nwk_dense: jax.Array, nk: jax.Array, cfg: LDAConfig,
+                 weights: Optional[jax.Array] = None) -> FrozenModel:
+    """Freeze dense counts into a ``FrozenModel`` (alias tables included).
+
+    This is the expensive, once-per-snapshot step: O(V*K) alias
+    construction.  Every fold-in batch afterwards samples in amortised O(1)
+    per token against these tables.  ``weights`` lets the caller pass the
+    already-computed smoothed φ matrix (q_w and φ are the same quantity);
+    otherwise it is computed here.
+    """
+    from repro.core import perplexity as ppl
+    nwk_f = nwk_dense.astype(jnp.float32)
+    nk_f = nk.astype(jnp.float32)
+    if weights is None:
+        weights = ppl.phi_from_counts(nwk_f, nk_f, cfg.beta)
+    table = alias_mod.build_alias_rows(weights)
+    return FrozenModel(nwk_f, nk_f, table.prob, table.alias)
+
+
+def sample_tokens_frozen(model: FrozenModel, rng: MHRandoms, z0: jax.Array,
+                         w: jax.Array, ndk_rows: jax.Array, cfg: LDAConfig,
+                         use_kernels: bool = False,
+                         interpret: bool = True) -> jax.Array:
+    """Resample a flat batch of tokens against a frozen model.
+
+    ``w``/``z0`` are [B]; ``ndk_rows`` is the per-token gather of the local
+    doc-topic counts [B, K].  Selects the Pallas inference kernel with
+    ``use_kernels`` (kernels/ops.py ``frozen=True`` wrapper); otherwise the
+    jnp oracle chain.
+    """
+    nwk_rows = jnp.take(model.nwk, w, axis=0)
+    aprob_rows = jnp.take(model.aprob, w, axis=0)
+    aalias_rows = jnp.take(model.aalias, w, axis=0)
+    if use_kernels:
+        from repro.kernels import ops as kops
+        return kops.mh_sample(rng, z0, nwk_rows, ndk_rows, model.nk,
+                              aprob_rows, aalias_rows, cfg, frozen=True,
+                              interpret=interpret)
+    return mh_chain(rng, z0, nwk_rows, ndk_rows, model.nk,
+                    aprob_rows, aalias_rows, cfg, frozen=True)
 
 
 # ---------------------------------------------------------------------------

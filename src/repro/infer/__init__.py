@@ -1,0 +1,21 @@
+"""Topic inference serving subsystem (DESIGN.md section 3).
+
+Turns a trained LDA model into a serving endpoint:
+
+  foldin    -- batched, jitted MH fold-in of unseen documents against a
+               frozen (n_wk, n_k) snapshot (amortised-O(1) sampling via the
+               snapshot's alias tables);
+  snapshot  -- double-buffered snapshot publication from the training sweep
+               to the inference path (monotonic versions, bounded staleness);
+  engine    -- request queue with padding-bucket batching returning per-doc
+               topic vectors θ plus topic-smoothed query-likelihood scores.
+"""
+from repro.infer.foldin import FoldInConfig, fold_in_batch, pack_docs
+from repro.infer.snapshot import Snapshot, SnapshotPublisher
+from repro.infer.engine import EngineConfig, QueryEngine
+
+__all__ = [
+    "FoldInConfig", "fold_in_batch", "pack_docs",
+    "Snapshot", "SnapshotPublisher",
+    "EngineConfig", "QueryEngine",
+]

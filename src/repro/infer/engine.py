@@ -1,0 +1,227 @@
+"""Batched topic-inference query engine (DESIGN.md section 3).
+
+Serving requests arrive one document at a time; TPUs want dense, fixed
+shapes.  The engine bridges the two with *padding-bucket batching*: each
+request's token count is rounded up to a power-of-two bucket, requests in
+the same bucket are packed into fixed-size [max_batch, bucket] batches
+(short batches padded with dummy rows), and one jitted ``fold_in_batch``
+call serves the whole batch.  The jit cache therefore holds at most
+(#buckets) compiled programs, and -- because fold-in randomness is
+per-document (see infer/foldin.py) -- a request's θ is bit-identical no
+matter which batch it lands in or in which order requests arrived.
+
+Scoring implements the paper's IR smoothing use case: topic-smoothed query
+likelihood (the LDA-based document model of Wei & Croft 2006),
+
+  p(w|d) = λ · Σ_k θ_dk φ_wk  +  (1-λ) · (c(w,d) + μ p(w|C)) / (|d| + μ)
+
+i.e. the LDA term interpolated with a Dirichlet-smoothed document language
+model; documents are ranked by Σ_{w∈q} log p(w|d).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, List, NamedTuple, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.infer.foldin import FoldInConfig, fold_in_batch, pack_docs
+from repro.infer.snapshot import Snapshot, SnapshotPublisher
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    max_batch: int = 32          # rows per jitted fold-in call
+    min_bucket: int = 16         # smallest padding bucket (tokens)
+    max_len: int = 1024          # longest supported doc (longer: truncated)
+    foldin: FoldInConfig = FoldInConfig()
+    smooth_lambda: float = 0.7   # weight of the LDA term in p(w|d)
+    smooth_mu: float = 100.0     # Dirichlet prior mass of the doc LM
+
+
+class Request(NamedTuple):
+    rid: int
+    tokens: np.ndarray
+    seed: int
+
+
+class Result(NamedTuple):
+    rid: int
+    theta: np.ndarray    # [K]
+    version: int         # snapshot version that served this request
+
+
+class QueryEngine:
+    """Request queue + bucket batcher over a snapshot source.
+
+    ``source`` is either a ``SnapshotPublisher`` (live serving: every flush
+    re-acquires the latest published version) or a single ``Snapshot``
+    (offline/batch scoring).
+    """
+
+    def __init__(self, source: Union[SnapshotPublisher, Snapshot],
+                 ecfg: EngineConfig = EngineConfig()):
+        self._source = source
+        self.ecfg = ecfg
+        self._queue: List[Request] = []
+        self._next_rid = 0
+        # snapshots recently used to serve requests, by version -- retained
+        # so scoring can use the same model version that produced a θ even
+        # if training has published a newer one in between
+        self._recent: Dict[int, Snapshot] = {}
+
+    # -- snapshot plumbing ----------------------------------------------
+    def snapshot(self) -> Snapshot:
+        if isinstance(self._source, SnapshotPublisher):
+            snap = self._source.acquire()
+            if snap is None:
+                raise RuntimeError("no snapshot published yet")
+            return snap
+        return self._source
+
+    def _retain(self, snap: Snapshot) -> Snapshot:
+        self._recent[snap.version] = snap
+        while len(self._recent) > 2:          # mirror the double buffer
+            self._recent.pop(min(self._recent))
+        return snap
+
+    # -- queueing --------------------------------------------------------
+    def bucket_of(self, n: int) -> int:
+        """Smallest power-of-two bucket >= n, clamped to ``max_len`` (docs
+        longer than ``max_len`` are truncated to it)."""
+        b = self.ecfg.min_bucket
+        while b < n and b < self.ecfg.max_len:
+            b *= 2
+        return min(b, self.ecfg.max_len)
+
+    def submit(self, tokens: Sequence[int],
+               seed: Optional[int] = None) -> int:
+        """Enqueue one document; returns the request id.
+
+        ``seed`` pins the request's fold-in randomness: same (snapshot,
+        tokens, seed) -> bit-identical θ regardless of batching.  Defaults
+        to the request id (unique, but arrival-order dependent).
+        """
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(Request(
+            rid, np.asarray(tokens, np.int32), rid if seed is None else seed))
+        return rid
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    # -- serving ---------------------------------------------------------
+    def flush(self) -> Dict[int, Result]:
+        """Serve every queued request; returns {rid: Result}.
+
+        Requests are grouped into padding buckets and each bucket drained
+        in fixed [max_batch, bucket] batches (dummy rows pad the last one).
+        """
+        snap = self._retain(self.snapshot())
+        queue, self._queue = self._queue, []
+        buckets: Dict[int, List[Request]] = {}
+        for req in queue:
+            buckets.setdefault(
+                self.bucket_of(max(len(req.tokens), 1)), []).append(req)
+
+        out: Dict[int, Result] = {}
+        mb = self.ecfg.max_batch
+        for bucket in sorted(buckets):
+            reqs = buckets[bucket]
+            for i in range(0, len(reqs), mb):
+                chunk = reqs[i:i + mb]
+                theta = self._run_batch(snap, chunk, bucket)
+                for j, req in enumerate(chunk):
+                    out[req.rid] = Result(req.rid, theta[j], snap.version)
+        return out
+
+    def _run_batch(self, snap: Snapshot, chunk: List[Request],
+                   bucket: int) -> np.ndarray:
+        """One jitted fold-in call at the fixed [max_batch, bucket] shape."""
+        mb = self.ecfg.max_batch
+        docs = [r.tokens for r in chunk]
+        w, valid = pack_docs(docs, bucket)
+        pad = mb - len(chunk)
+        if pad:
+            w = np.pad(w, ((0, pad), (0, 0)))
+            valid = np.pad(valid, ((0, pad), (0, 0)))
+        keys = jnp.stack([jax.random.PRNGKey(r.seed) for r in chunk]
+                         + [jax.random.PRNGKey(0)] * pad)
+        theta = fold_in_batch(snap.model, jnp.asarray(w), jnp.asarray(valid),
+                              keys, snap.cfg, self.ecfg.foldin)
+        return np.asarray(theta[:len(chunk)])
+
+    def infer(self, docs: Sequence[np.ndarray],
+              seeds: Optional[Sequence[int]] = None) -> List[Result]:
+        """Submit + flush convenience; results in input order."""
+        rids = [self.submit(doc, None if seeds is None else seeds[i])
+                for i, doc in enumerate(docs)]
+        results = self.flush()
+        return [results[rid] for rid in rids]
+
+    # -- IR scoring (the paper's smoothing use case) ---------------------
+    def score(self, results: Sequence[Result],
+              docs: Sequence[np.ndarray],
+              queries: Sequence[np.ndarray]) -> np.ndarray:
+        """Topic-smoothed query-likelihood scores [num_queries, num_docs].
+
+        Scoring uses the SAME snapshot version that produced the θs
+        (carried in ``Result.version``): mixing a v1 θ with a v2 φ would
+        score against an inconsistent model.  Recently served versions are
+        retained by the engine; scoring θs older than that raises.
+        """
+        versions = {r.version for r in results}
+        if len(versions) != 1:
+            raise ValueError(f"results span snapshot versions {sorted(versions)}; "
+                             "score each version separately")
+        version = versions.pop()
+        snap = self._recent.get(version)
+        if snap is None:
+            snap = self.snapshot()
+            if snap.version != version:
+                raise ValueError(
+                    f"snapshot v{version} no longer available (current "
+                    f"v{snap.version}); re-run fold-in before scoring")
+        ld = max(max((len(d) for d in docs), default=1), 1)
+        lq = max(max((len(q) for q in queries), default=1), 1)
+        dw, dv = pack_docs(docs, ld)
+        qw, qv = pack_docs(queries, lq)
+        theta = jnp.asarray(np.stack([r.theta for r in results]))
+        return np.asarray(topic_smoothed_scores(
+            theta, jnp.asarray(dw), jnp.asarray(dv), jnp.asarray(qw),
+            jnp.asarray(qv), snap.phi, snap.p_coll,
+            self.ecfg.smooth_lambda, self.ecfg.smooth_mu))
+
+
+@jax.jit
+def topic_smoothed_scores(theta: jax.Array, doc_w: jax.Array,
+                          doc_valid: jax.Array, q_w: jax.Array,
+                          q_valid: jax.Array, phi: jax.Array,
+                          p_coll: jax.Array, lam: float,
+                          mu: float) -> jax.Array:
+    """log p(q|d) under the λ-interpolated LDA document model.
+
+    theta [B, K]; doc_w/doc_valid [B, Ld]; q_w/q_valid [Q, Lq];
+    phi [V, K]; p_coll [V].  Returns [Q, B].
+    """
+    doc_len = jnp.sum(doc_valid, axis=1).astype(jnp.float32)         # [B]
+
+    # p_lda(t|d) = Σ_k θ_dk φ_tk for every query term t: [Q, Lq, B]
+    phi_q = jnp.take(phi, q_w, axis=0)                               # [Q,Lq,K]
+    p_lda = jnp.einsum("qlk,bk->qlb", phi_q, theta)
+
+    # c(t, d): occurrences of each query term in each doc's tokens
+    match = (q_w[:, :, None, None] == doc_w[None, None, :, :])       # [Q,Lq,B,Ld]
+    c = jnp.sum(match & doc_valid[None, None, :, :], axis=-1
+                ).astype(jnp.float32)                                # [Q,Lq,B]
+    p_c = jnp.take(p_coll, q_w)[:, :, None]                          # [Q,Lq,1]
+    p_dir = (c + mu * p_c) / (doc_len[None, None, :] + mu)
+
+    p = lam * p_lda + (1.0 - lam) * p_dir
+    logp = jnp.log(jnp.maximum(p, 1e-30))
+    return jnp.sum(jnp.where(q_valid[:, :, None], logp, 0.0), axis=1)

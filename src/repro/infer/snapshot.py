@@ -1,0 +1,111 @@
+"""Double-buffered model snapshot publication (DESIGN.md section 3).
+
+The serving-side analogue of the paper's asynchronous pull (section 2.3):
+training keeps pushing deltas into the live count tables while serving
+reads a *consistent, bounded-stale* model.  Consistency comes from
+immutability -- a ``Snapshot`` is a frozen value ``(n_wk, n_k, alias
+tables, φ)`` built atomically from one training state -- and bounded
+staleness from the publisher: readers always see the latest *published*
+version, which lags the training sweep by at most one publication
+interval.
+
+Double buffering: the publisher owns two snapshot slots and always builds
+the next snapshot into the slot readers are NOT holding, then flips the
+active index in a single reference store.  Readers (``acquire``) never
+block and never observe a half-built snapshot; in-flight requests keep the
+version they started with until they drop it.  The version counter is
+strictly monotonic (asserted in tests).
+"""
+from __future__ import annotations
+
+import threading
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lightlda as lda
+from repro.core import perplexity as ppl
+
+
+class Snapshot(NamedTuple):
+    """One immutable published model version.
+
+    ``model`` carries the frozen counts + alias tables the fold-in sampler
+    consumes; ``phi`` is the smoothed topic-word matrix used for scoring
+    (φ_wk = (n_wk+β)/(n_k+Vβ)); ``p_coll`` is the collection unigram model
+    p(w|C) used by query-likelihood smoothing.
+    """
+
+    version: int
+    model: lda.FrozenModel
+    phi: jax.Array        # [V, K] float32
+    p_coll: jax.Array     # [V]    float32, collection language model
+    cfg: lda.LDAConfig
+
+    @property
+    def theta_prior(self) -> float:
+        return self.cfg.alpha
+
+
+def build_snapshot(nwk_dense: jax.Array, nk: jax.Array,
+                   cfg: lda.LDAConfig, version: int) -> Snapshot:
+    """Freeze dense counts into a ``Snapshot`` (alias tables + φ + p(w|C)).
+
+    φ doubles as the word-proposal weights (same smoothed matrix), so it is
+    computed once and shared with the alias build."""
+    nwk_f = jnp.asarray(nwk_dense).astype(jnp.float32)
+    nk_f = jnp.asarray(nk).astype(jnp.float32)
+    phi = ppl.phi_from_counts(nwk_f, nk_f, cfg.beta)
+    model = lda.freeze_model(nwk_f, nk_f, cfg, weights=phi)
+    freq = model.nwk.sum(axis=1)
+    p_coll = (freq + 1.0) / (freq.sum() + cfg.V)     # add-one smoothed
+    return Snapshot(version, model, phi, p_coll, cfg)
+
+
+class SnapshotPublisher:
+    """Training-to-serving handoff with monotonic versions.
+
+    ``publish`` is called from the training loop (typically every few
+    sweeps); ``acquire`` from any number of serving threads.  Publication
+    cost is the O(V*K) alias build -- amortised over every request served
+    from that snapshot, exactly the trade the paper makes with its stale
+    pulled working sets.
+    """
+
+    def __init__(self, cfg: lda.LDAConfig):
+        self.cfg = cfg
+        self._slots: list = [None, None]
+        self._active: int = -1          # -1: nothing published yet
+        self._version: int = 0
+        self._publish_lock = threading.Lock()
+
+    # -- training side ---------------------------------------------------
+    def publish(self, nwk_dense: jax.Array, nk: jax.Array) -> Snapshot:
+        """Build and atomically publish the next version from dense counts."""
+        with self._publish_lock:
+            target = 1 - self._active if self._active >= 0 else 0
+            version = self._version + 1
+            snap = build_snapshot(jnp.asarray(nwk_dense), jnp.asarray(nk),
+                                  self.cfg, version)
+            jax.block_until_ready(snap.model.aprob)  # fully built pre-flip
+            self._slots[target] = snap
+            self._version = version
+            self._active = target        # the flip: one reference store
+        return snap
+
+    def publish_state(self, state: lda.SamplerState) -> Snapshot:
+        """Publish straight from a training ``SamplerState``."""
+        return self.publish(state.nwk.to_dense(), state.nk.value)
+
+    # -- serving side ----------------------------------------------------
+    def acquire(self) -> Optional[Snapshot]:
+        """Latest published snapshot (never blocks; None before the first
+        publish).  The returned value is immutable -- holding it pins that
+        version for as long as the caller needs it."""
+        active = self._active             # single read: no torn state
+        return self._slots[active] if active >= 0 else None
+
+    @property
+    def version(self) -> int:
+        return self._version

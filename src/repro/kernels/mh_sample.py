@@ -34,7 +34,7 @@ from jax.experimental import pallas as pl
 def _mh_kernel(z0_ref, nwk_ref, ndk_ref, nk_ref, aprob_ref, aalias_ref,
                uw_ref, uwa_ref, zd_ref, uda_ref, out_ref, *,
                num_topics: int, alpha: float, beta: float, vbeta: float,
-               mh_steps: int):
+               mh_steps: int, frozen: bool = False):
     tb, kp = nwk_ref.shape
     iota = jax.lax.broadcasted_iota(jnp.int32, (tb, kp), 1)
 
@@ -53,10 +53,13 @@ def _mh_kernel(z0_ref, nwk_ref, ndk_ref, nk_ref, aprob_ref, aalias_ref,
         return jnp.sum(jnp.where(iota == k[:, None], nk[None, :], 0.0), axis=1)
 
     def p(k):
-        # collapsed posterior factors with the -dw correction (w.r.t. z0)
+        # collapsed posterior factors with the -dw correction (w.r.t. z0);
+        # frozen (fold-in) mode corrects only the local doc counts -- the
+        # snapshot never contained this document's tokens.
         e = (k == z0).astype(jnp.float32)
-        return ((col(ndk, k) - e + alpha) * (col(nwk, k) - e + beta)
-                / (nk_at(k) - e + vbeta))
+        e_wk = 0.0 if frozen else e
+        return ((col(ndk, k) - e + alpha) * (col(nwk, k) - e_wk + beta)
+                / (nk_at(k) - e_wk + vbeta))
 
     def q_word(k):
         return (col(nwk, k) + beta) / (nk_at(k) + vbeta)
@@ -90,8 +93,11 @@ def mh_sample_call(z0, nwk_rows, ndk_rows, nk, aprob, aalias,
                    u_word, u_waccept, z_doc, u_daccept, *,
                    num_topics: int, vocab_size: int, alpha: float,
                    beta: float, mh_steps: int, tile_tokens: int = 1024,
-                   interpret: bool = True):
-    """pallas_call wrapper (see module docstring for the layout contract)."""
+                   interpret: bool = True, frozen: bool = False):
+    """pallas_call wrapper (see module docstring for the layout contract).
+
+    ``frozen=True`` compiles the inference-mode chain (fold-in against a
+    frozen snapshot; -dw correction on doc counts only)."""
     b = z0.shape[1]
     kp = nwk_rows.shape[1]
     tb = min(tile_tokens, b)
@@ -100,7 +106,7 @@ def mh_sample_call(z0, nwk_rows, ndk_rows, nk, aprob, aalias,
 
     kern = functools.partial(
         _mh_kernel, num_topics=num_topics, alpha=alpha, beta=beta,
-        vbeta=vocab_size * beta, mh_steps=mh_steps)
+        vbeta=vocab_size * beta, mh_steps=mh_steps, frozen=frozen)
 
     tok1 = pl.BlockSpec((1, tb), lambda i: (0, i))     # [1, B] per-token
     rows = pl.BlockSpec((tb, kp), lambda i: (i, 0))    # [B, Kp] row blocks

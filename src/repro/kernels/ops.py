@@ -35,11 +35,17 @@ def _pad_axis(x, mult, axis, value=0):
 
 def mh_sample(rng: "MHRandoms", z0, nwk_rows, ndk_rows, nk,
               aprob_rows, aalias_rows, cfg: "LDAConfig", *,
-              tile_tokens: int = 1024, interpret: bool = True) -> jax.Array:
+              tile_tokens: int = 1024, interpret: bool = True,
+              frozen: bool = False) -> jax.Array:
     """Fused MH chain for one block of tokens (kernels/mh_sample.py).
 
     Accepts the same unpadded [B, K]/[B] arrays as the oracle
     ``lightlda.mh_chain`` and returns [B] int32 new assignments.
+
+    ``frozen=True`` is the inference-mode wrapper used by the serving
+    subsystem (repro.infer): same kernel, compiled with the fold-in
+    -dw-correction variant (doc counts only), for sampling unseen documents
+    against a frozen snapshot.
     """
     b = z0.shape[0]
     bp = b + ((-b) % tile_tokens)
@@ -63,7 +69,8 @@ def mh_sample(rng: "MHRandoms", z0, nwk_rows, ndk_rows, nk,
         z0_p, nwk_p, ndk_p, nk_p, aprob_p, aalias_p,
         rand[0], rand[1], rand[2].astype(jnp.int32), rand[3],
         num_topics=cfg.K, vocab_size=cfg.V, alpha=cfg.alpha, beta=cfg.beta,
-        mh_steps=cfg.mh_steps, tile_tokens=tile_tokens, interpret=interpret)
+        mh_steps=cfg.mh_steps, tile_tokens=tile_tokens, interpret=interpret,
+        frozen=frozen)
     return out[0, :b]
 
 

@@ -1,0 +1,80 @@
+"""Topic-model serving facade: train -> snapshot -> serve in one object.
+
+``TopicService`` owns the three pieces of the serving path (DESIGN.md
+section 3) and wires them to a training state:
+
+  * the LightLDA training sweep (core/lightlda.py) keeps improving the
+    model counts;
+  * a ``SnapshotPublisher`` periodically freezes (n_wk, n_k) into an
+    immutable versioned snapshot (alias tables built once per version);
+  * a ``QueryEngine`` folds in unseen documents against the latest
+    snapshot and scores queries with topic-smoothed query likelihood.
+
+This is the single-process shape of the production system: on a pod the
+sweep runs under shard_map on the training slice while the publisher hands
+snapshots to dedicated serving hosts; the object boundaries are the same.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lightlda as lda
+from repro.infer.engine import EngineConfig, QueryEngine, Result
+from repro.infer.snapshot import Snapshot, SnapshotPublisher
+
+
+@dataclasses.dataclass
+class TopicService:
+    cfg: lda.LDAConfig
+    ecfg: EngineConfig = EngineConfig()
+    state: Optional[lda.SamplerState] = None
+
+    def __post_init__(self):
+        self.publisher = SnapshotPublisher(self.cfg)
+        self.engine = QueryEngine(self.publisher, self.ecfg)
+        self._sweep = jax.jit(lambda s, k: lda.sweep(s, k, self.cfg))
+
+    # -- training side ---------------------------------------------------
+    def init_from_corpus(self, corp, seed: int = 0) -> None:
+        self.state = lda.init_state(
+            jax.random.PRNGKey(seed), jnp.asarray(corp.w),
+            jnp.asarray(corp.d), corp.num_docs, self.cfg)
+
+    def train(self, num_sweeps: int, key: jax.Array,
+              publish_every: int = 0) -> Snapshot:
+        """Run training sweeps; publish every ``publish_every`` sweeps (and
+        always once at the end).  Returns the final snapshot."""
+        assert self.state is not None, "init_from_corpus / set state first"
+        for i in range(num_sweeps):
+            key, sub = jax.random.split(key)
+            self.state = self._sweep(self.state, sub)
+            if publish_every and (i + 1) % publish_every == 0:
+                self.publisher.publish_state(self.state)
+        return self.publisher.publish_state(self.state)
+
+    # -- serving side ----------------------------------------------------
+    def fold_in(self, docs: Sequence[np.ndarray],
+                seeds: Optional[Sequence[int]] = None) -> List[Result]:
+        """θ for a batch of unseen documents (bucketed + batched)."""
+        return self.engine.infer(docs, seeds)
+
+    def score(self, queries: Sequence[np.ndarray],
+              docs: Sequence[np.ndarray],
+              results: Optional[Sequence[Result]] = None) -> np.ndarray:
+        """Rank ``docs`` for ``queries``: [num_queries, num_docs] log p(q|d).
+
+        ``results`` reuses already-computed fold-ins; otherwise the docs are
+        folded in first.
+        """
+        if results is None:
+            results = self.fold_in(docs)
+        return self.engine.score(results, docs, queries)
+
+    @property
+    def version(self) -> int:
+        return self.publisher.version

@@ -1,0 +1,218 @@
+"""Serving subsystem tests: fold-in vs dense collapsed-Gibbs oracle,
+snapshot publisher monotonicity, engine batching invariance."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lightlda as lda
+from repro.infer.engine import EngineConfig, QueryEngine
+from repro.infer.foldin import FoldInConfig, fold_in_batch, pack_docs
+from repro.infer.snapshot import SnapshotPublisher, build_snapshot
+
+
+def _peaked_model(cfg, tokens_per_topic=500, seed=0):
+    """A frozen model with strongly peaked topics: topic k owns the vocab
+    slice [k*V/K, (k+1)*V/K) (plus a little smoothing mass everywhere)."""
+    rng = np.random.default_rng(seed)
+    nwk = np.ones((cfg.V, cfg.K), np.float32)
+    span = cfg.V // cfg.K
+    for k in range(cfg.K):
+        words = rng.integers(k * span, (k + 1) * span, size=tokens_per_topic)
+        np.add.at(nwk[:, k], words, 1.0)
+    nk = nwk.sum(axis=0)
+    return lda.freeze_model(jnp.asarray(nwk), jnp.asarray(nk), cfg)
+
+
+def _oracle_foldin_theta(model, doc, cfg, sweeps=400, burnin=100, seed=0):
+    """Dense token-by-token collapsed Gibbs fold-in (numpy reference).
+
+    Sequentially resamples each token from the exact full conditional
+    p(k) ∝ (n_dk^{-i} + α) · (n_wk + β)/(n_k + Vβ) with the model frozen,
+    and Rao-Blackwellises θ over the post-burnin sweeps.
+    """
+    rng = np.random.default_rng(seed)
+    nwk = np.asarray(model.nwk)
+    nk = np.asarray(model.nk)
+    phi_w = (nwk[doc] + cfg.beta) / (nk[None, :] + cfg.V * cfg.beta)  # [n, K]
+    z = rng.integers(0, cfg.K, size=len(doc))
+    ndk = np.bincount(z, minlength=cfg.K).astype(np.float64)
+    acc = np.zeros(cfg.K)
+    for s in range(sweeps):
+        for i in range(len(doc)):
+            ndk[z[i]] -= 1
+            p = (ndk + cfg.alpha) * phi_w[i]
+            z[i] = rng.choice(cfg.K, p=p / p.sum())
+            ndk[z[i]] += 1
+        if s >= burnin:
+            acc += ndk
+    ndk_avg = acc / (sweeps - burnin)
+    return (ndk_avg + cfg.alpha) / (len(doc) + cfg.K * cfg.alpha)
+
+
+class TestFoldIn:
+    def test_matches_dense_gibbs_oracle(self):
+        """Fold-in θ agrees with the sequential dense-Gibbs oracle: both
+        chains target the same posterior, so their Rao-Blackwellised means
+        must coincide within MC error."""
+        cfg = lda.LDAConfig(num_topics=4, vocab_size=40, alpha=0.2,
+                            mh_steps=4)
+        model = _peaked_model(cfg)
+        rng = np.random.default_rng(1)
+        span = cfg.V // cfg.K
+        # docs drawn from topic k (with a few off-topic tokens)
+        docs = [np.concatenate([
+            rng.integers(k * span, (k + 1) * span, size=24),
+            rng.integers(0, cfg.V, size=4)]).astype(np.int32)
+            for k in range(cfg.K)]
+
+        w, valid = pack_docs(docs, 32)
+        keys = jnp.stack([jax.random.PRNGKey(100 + i)
+                          for i in range(len(docs))])
+        fcfg = FoldInConfig(num_sweeps=300, burnin=100)
+        theta = np.asarray(fold_in_batch(
+            model, jnp.asarray(w), jnp.asarray(valid), keys, cfg, fcfg))
+
+        for i, doc in enumerate(docs):
+            ref = _oracle_foldin_theta(model, doc, cfg, seed=i)
+            np.testing.assert_allclose(theta[i], ref, atol=0.06)
+            # and the dominant topic is the generating one
+            assert int(np.argmax(theta[i])) == i
+
+    def test_theta_is_distribution(self):
+        cfg = lda.LDAConfig(num_topics=6, vocab_size=60)
+        model = _peaked_model(cfg)
+        docs = [np.arange(10, dtype=np.int32), np.arange(25, dtype=np.int32)]
+        w, valid = pack_docs(docs, 32)
+        keys = jnp.stack([jax.random.PRNGKey(i) for i in range(2)])
+        theta = np.asarray(fold_in_batch(
+            model, jnp.asarray(w), jnp.asarray(valid), keys, cfg,
+            FoldInConfig(num_sweeps=8, burnin=2)))
+        np.testing.assert_allclose(theta.sum(axis=1), 1.0, atol=1e-4)
+        assert (theta > 0).all()
+
+    def test_kernel_path_matches_oracle_path(self):
+        """The Pallas inference kernel (frozen=True) is bit-identical to the
+        jnp chain -- same contract as the training kernel."""
+        cfg = lda.LDAConfig(num_topics=8, vocab_size=64)
+        model = _peaked_model(cfg)
+        rng = np.random.default_rng(3)
+        docs = [rng.integers(0, cfg.V, size=20).astype(np.int32)
+                for _ in range(3)]
+        w, valid = pack_docs(docs, 32)
+        keys = jnp.stack([jax.random.PRNGKey(i) for i in range(3)])
+        args = (model, jnp.asarray(w), jnp.asarray(valid), keys, cfg)
+        t_oracle = fold_in_batch(*args, FoldInConfig(num_sweeps=5, burnin=1))
+        t_kernel = fold_in_batch(*args, FoldInConfig(num_sweeps=5, burnin=1,
+                                                     use_kernels=True))
+        np.testing.assert_array_equal(np.asarray(t_oracle),
+                                      np.asarray(t_kernel))
+
+
+class TestSnapshotPublisher:
+    def test_version_monotonic_and_consistent(self):
+        cfg = lda.LDAConfig(num_topics=4, vocab_size=20)
+        pub = SnapshotPublisher(cfg)
+        assert pub.acquire() is None
+        rng = np.random.default_rng(0)
+        versions = []
+        held = None
+        for i in range(5):
+            nwk = rng.integers(0, 50, size=(cfg.V, cfg.K))
+            snap = pub.publish(jnp.asarray(nwk), jnp.asarray(nwk.sum(0)))
+            versions.append(snap.version)
+            if i == 1:
+                held = pub.acquire()   # a reader pinning an old version
+            got = pub.acquire()
+            assert got.version == snap.version == pub.version
+        assert versions == sorted(versions) == list(range(1, 6))
+        # the pinned snapshot is immutable: later publishes did not touch it
+        assert held.version == 2
+        assert held.model.nwk.shape == (cfg.V, cfg.K)
+
+    def test_snapshot_phi_and_collection_model(self):
+        cfg = lda.LDAConfig(num_topics=3, vocab_size=10)
+        nwk = jnp.asarray(np.random.default_rng(1).integers(
+            0, 30, size=(10, 3)))
+        snap = build_snapshot(nwk, nwk.sum(0), cfg, version=7)
+        np.testing.assert_allclose(np.asarray(snap.phi).sum(0), 1.0,
+                                   atol=1e-5)
+        np.testing.assert_allclose(float(snap.p_coll.sum()), 1.0, atol=1e-5)
+
+
+class TestQueryEngine:
+    def _setup(self, max_batch=4):
+        cfg = lda.LDAConfig(num_topics=4, vocab_size=40)
+        model = _peaked_model(cfg)
+        pub = SnapshotPublisher(cfg)
+        pub.publish(model.nwk, model.nk)
+        eng = QueryEngine(pub, EngineConfig(
+            max_batch=max_batch, min_bucket=16,
+            foldin=FoldInConfig(num_sweeps=10, burnin=4)))
+        return cfg, eng
+
+    def test_shuffled_arrival_order_invariance(self):
+        """Per-request θ is identical whatever order requests arrive in and
+        however they get grouped into batches."""
+        cfg, eng = self._setup(max_batch=4)
+        rng = np.random.default_rng(5)
+        docs = [rng.integers(0, cfg.V, size=int(n)).astype(np.int32)
+                for n in rng.integers(4, 60, size=11)]
+        seeds = list(range(100, 111))
+
+        for rid, doc in enumerate(docs):
+            eng.submit(doc, seed=seeds[rid])
+        in_order = eng.flush()
+
+        perm = rng.permutation(len(docs))
+        rid_map = {}
+        for j in perm:
+            rid_map[j] = eng.submit(docs[j], seed=seeds[j])
+        shuffled = eng.flush()
+
+        for j in range(len(docs)):
+            a = in_order[j]
+            b = shuffled[rid_map[j]]
+            np.testing.assert_array_equal(a.theta, b.theta)
+            assert a.version == b.version
+
+    def test_bucketing_and_batch_chunking(self):
+        cfg, eng = self._setup(max_batch=2)
+        assert eng.bucket_of(1) == 16
+        assert eng.bucket_of(16) == 16
+        assert eng.bucket_of(17) == 32
+        docs = [np.arange(n, dtype=np.int32) % cfg.V
+                for n in (3, 30, 30, 30, 9, 70)]
+        results = eng.infer(docs, seeds=list(range(len(docs))))
+        assert len(results) == len(docs)
+        for r in results:
+            assert r.theta.shape == (cfg.K,)
+            assert abs(r.theta.sum() - 1.0) < 1e-4
+
+    def test_results_track_published_version(self):
+        cfg, eng = self._setup()
+        doc = np.arange(12, dtype=np.int32)
+        v1 = eng.infer([doc], seeds=[0])[0].version
+        src = eng._source
+        src.publish(src.acquire().model.nwk, src.acquire().model.nk)
+        v2 = eng.infer([doc], seeds=[0])[0].version
+        assert v2 == v1 + 1
+
+    def test_scoring_prefers_on_topic_docs(self):
+        """Topic-smoothed QL must rank a doc from the query's topic above a
+        doc from a different topic even with no exact term overlap."""
+        cfg, eng = self._setup()
+        span = cfg.V // cfg.K
+        rng = np.random.default_rng(7)
+        # doc 0 from topic 0, doc 1 from topic 2 -- odd words only
+        docs = [2 * rng.integers(0, span // 2, size=30) + k * span
+                for k in (0, 2)]
+        docs = [d.astype(np.int32) for d in docs]
+        results = eng.infer(docs, seeds=[1, 2])
+        # queries: even words of each topic slice (disjoint from the docs)
+        q0 = (2 * np.arange(3) + 1).astype(np.int32)            # topic 0
+        q2 = (2 * np.arange(3) + 1 + 2 * span).astype(np.int32)  # topic 2
+        scores = eng.score(results, docs, [q0, q2])
+        assert scores.shape == (2, 2)
+        assert scores[0, 0] > scores[0, 1]
+        assert scores[1, 1] > scores[1, 0]

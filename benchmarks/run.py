@@ -8,6 +8,8 @@
   roofline     deliverable (g) report from dry-run artifacts
   infer        serving path: fold-in throughput, batching gain, engine
                latency (emits BENCH_infer.json)
+  async        pipelined executor: tokens/sec vs staleness bound, hybrid
+               dense/sparse push (emits BENCH_async.json)
 
 ``python -m benchmarks.run`` runs everything at reduced ("fast") sizes and
 prints CSV-ish lines; ``--full`` uses the paper-ladder sizes; ``--only X``
@@ -20,9 +22,9 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_comm, bench_convergence, bench_infer,
-                        bench_kernels, bench_loadbalance, bench_roofline,
-                        bench_table1)
+from benchmarks import (bench_async, bench_comm, bench_convergence,
+                        bench_infer, bench_kernels, bench_loadbalance,
+                        bench_roofline, bench_table1)
 
 MODULES = {
     "table1": bench_table1.main,
@@ -32,6 +34,7 @@ MODULES = {
     "comm": bench_comm.main,
     "roofline": bench_roofline.main,
     "infer": bench_infer.main,
+    "async": bench_async.main,
 }
 
 

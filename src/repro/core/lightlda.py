@@ -376,7 +376,9 @@ def count_deltas(w_b, d_b, z_old, z_new, valid_b, num_docs, cfg: LDAConfig,
 
 def sweep(state: SamplerState, key: jax.Array, cfg: LDAConfig,
           axis_name: Optional[str] = None,
-          model_axis: Optional[str] = None) -> SamplerState:
+          model_axis: Optional[str] = None,
+          staleness: int = 0,
+          hot_words: Optional[int] = None) -> SamplerState:
     """Resample every token once (one Gibbs sweep == one paper "iteration").
 
     ``axis_name``: data-parallel mesh axis when running under shard_map (the
@@ -384,93 +386,18 @@ def sweep(state: SamplerState, key: jax.Array, cfg: LDAConfig,
     ``model_axis``: parameter-server mesh axis; when set, ``state.nwk.value``
     is this shard's local rows and the snapshot pull is an all-gather.
 
-    Single-device semantics (both None) are the oracle used in tests.
+    Routed through the asynchronous executor
+    (``train.async_exec.snapshot_sweep``); ``staleness``/``hot_words``
+    select the bounded-staleness schedule and the hybrid dense/sparse delta
+    push.  The defaults reproduce the classic per-block synchronous
+    schedule exactly -- single-device defaults are the oracle used in
+    tests.
     """
-    num_docs = state.ndk.shape[0]
-    n = state.w.shape[0]
-    nblocks = n // cfg.block_tokens
-
-    # --- snapshot "pull" (paper section 2.3 / 3.4) ---
-    if model_axis is not None:
-        phys = jax.lax.all_gather(state.nwk.value, model_axis, axis=0, tiled=True)
-        nwk_full = DistributedMatrix(phys, cfg.V, cfg.num_shards)
-    else:
-        nwk_full = state.nwk
-    snapshot = nwk_full.to_dense()                      # [V, K] stale counts
-    nk_snap = state.nk.value                            # [K]
-
-    # --- alias tables from the snapshot (paper section 3, ref [14]) ---
-    # NOTE: always the jnp construction here so the kernel sweep is
-    # bit-identical to the oracle sweep (the Pallas alias_build kernel
-    # produces a pmf-equal but permutation-different table layout; it is
-    # exercised directly via kernels/ops.py and its own tests).
-    weights = (snapshot.astype(jnp.float32) + cfg.beta) / (
-        nk_snap.astype(jnp.float32)[None, :] + cfg.V * cfg.beta)
-    table = alias_mod.build_alias_rows(weights)
-
-    w_blocks = state.w.reshape(nblocks, cfg.block_tokens)
-    d_blocks = state.d.reshape(nblocks, cfg.block_tokens)
-    v_blocks = state.valid.reshape(nblocks, cfg.block_tokens)
-
-    def block_body(carry, inp):
-        z_flat, ndk, nwk_dense, nk = carry
-        blk, key_b = inp
-        w_b = w_blocks[blk]
-        d_b = d_blocks[blk]
-        valid_b = v_blocks[blk]
-        z0 = jax.lax.dynamic_slice_in_dim(
-            z_flat, blk * cfg.block_tokens, cfg.block_tokens)
-
-        # Pre-gather per-token rows (the "pull" of the rows this block needs).
-        nwk_rows = jnp.take(snapshot, w_b, axis=0)          # stale snapshot
-        ndk_rows = jnp.take(ndk, d_b, axis=0)               # block-start
-        aprob_rows = jnp.take(table.prob, w_b, axis=0)
-        aalias_rows = jnp.take(table.alias, w_b, axis=0)
-        doc_draw = make_doc_draw(None, d_b, z_flat, state.doc_start,
-                                 state.doc_len, cfg)
-        rng = draw_mh_randoms(key_b, doc_draw, cfg.block_tokens, cfg)
-
-        if cfg.use_kernels:
-            from repro.kernels import ops as kops
-            z_new = kops.mh_sample(rng, z0, nwk_rows, ndk_rows, nk,
-                                   aprob_rows, aalias_rows, cfg,
-                                   interpret=cfg.kernel_interpret)
-        else:
-            z_new = mh_chain(rng, z0, nwk_rows, ndk_rows, nk,
-                             aprob_rows, aalias_rows, cfg)
-        z_new = jnp.where(valid_b, z_new, z0)
-
-        # --- buffered delta aggregation + block-boundary merge (sec. 3.3) ---
-        d_nwk, d_nk, d_ndk = count_deltas(
-            w_b, d_b, z0, z_new, valid_b, num_docs, cfg,
-            use_kernel=cfg.use_kernels, interpret=cfg.kernel_interpret)
-        if axis_name is not None:
-            # SPMD "push": sum deltas over the data-parallel workers.
-            d_nwk = jax.lax.psum(d_nwk, axis_name)
-            d_nk = jax.lax.psum(d_nk, axis_name)
-            # n_dk stays local: docs are owned by one worker (paper sec. 3).
-
-        z_flat = jax.lax.dynamic_update_slice_in_dim(
-            z_flat, z_new, blk * cfg.block_tokens, axis=0)
-        return (z_flat, ndk + d_ndk, nwk_dense + d_nwk, nk + d_nk), ()
-
-    keys = jax.random.split(key, nblocks)
-    carry = (state.z, state.ndk, snapshot, nk_snap)
-    (z, ndk, nwk_dense, nk), _ = jax.lax.scan(
-        block_body, carry, (jnp.arange(nblocks), keys))
-
-    # --- write back to the server layout ---
-    new_full = DistributedMatrix.from_dense(nwk_dense, cfg.num_shards)
-    if model_axis is not None:
-        # Keep only this server shard's physical rows.
-        rps = new_full.layout.rows_per_shard
-        sidx = jax.lax.axis_index(model_axis)
-        local = jax.lax.dynamic_slice_in_dim(new_full.value, sidx * rps, rps, axis=0)
-        new_nwk = DistributedMatrix(local, cfg.V, cfg.num_shards)
-    else:
-        new_nwk = new_full
-    return SamplerState(state.w, state.d, z, state.valid, state.doc_start,
-                        state.doc_len, new_nwk, DistributedVector(nk), ndk)
+    from repro.train import async_exec
+    return async_exec.snapshot_sweep(state, key, cfg, axis_name=axis_name,
+                                     model_axis=model_axis,
+                                     staleness=staleness,
+                                     hot_words=hot_words)
 
 
 def train(state: SamplerState, key: jax.Array, cfg: LDAConfig,
@@ -539,8 +466,35 @@ def block_token_index(w: np.ndarray, valid: np.ndarray, rows_per_block: int,
 
 def sweep_blocked(state: SamplerState, key: jax.Array, cfg: LDAConfig,
                   block_idx: jax.Array, block_valid: jax.Array,
-                  rows_per_block: int) -> SamplerState:
+                  rows_per_block: int, staleness: int = 0,
+                  hot_words: Optional[int] = None) -> SamplerState:
     """One sweep processing the model in pulled blocks (paper section 3.4).
+
+    Routed through the asynchronous pipelined executor
+    (``train.async_exec.pipelined_sweep``): double-buffered block pulls,
+    a bounded-staleness merge schedule (``staleness`` block deltas may be
+    in flight while a block samples) and the hybrid dense/sparse delta
+    push (``hot_words``).  The defaults reproduce the synchronous
+    schedule of ``sweep_blocked_ref`` bitwise (asserted in
+    tests/test_async_exec.py).
+    """
+    from repro.train import async_exec
+    return async_exec.pipelined_sweep(state, key, cfg, block_idx,
+                                      block_valid, rows_per_block,
+                                      staleness=staleness,
+                                      hot_words=hot_words)
+
+
+def sweep_blocked_ref(state: SamplerState, key: jax.Array, cfg: LDAConfig,
+                      block_idx: jax.Array, block_valid: jax.Array,
+                      rows_per_block: int) -> SamplerState:
+    """Synchronous blocked sweep, kept verbatim as the executor's oracle.
+
+    This is the pre-executor implementation: every model block does
+    pull -> sample -> push on the critical path.  The pipelined executor
+    with ``staleness=0`` must match it bitwise -- this function is the
+    correctness anchor for the whole asynchronous schedule (DESIGN.md
+    section 7), so keep it boring and sequential.
 
     Per model block b (scanned; on a pod the next block's pull overlaps
     this block's sampling under XLA's async collectives -- the paper's

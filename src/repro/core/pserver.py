@@ -167,6 +167,35 @@ class DistributedMatrix:
         new = self.value + padded[perm].astype(self.value.dtype)
         return dataclasses.replace(self, value=new)
 
+    def push_sparse(self, rows: jax.Array, cols: jax.Array, vals: jax.Array,
+                    *, use_kernel: bool = False,
+                    interpret: bool = True) -> "DistributedMatrix":
+        """Push compressed ``(row, col, +/-value)`` coordinate deltas.
+
+        This is the cold-tail half of the hybrid push (paper section 3.3):
+        reassignments of words outside the hot dense buffer travel as
+        coordinate entries -- the paper's 100k-reassignment message --
+        instead of a dense matrix.  ``rows`` are *logical* row ids; value-0
+        entries are padding and contribute nothing, so fixed-size buffers
+        with masked tails are safe.  Like ``push``, duplicates accumulate
+        (commutative/associative addition, section 2.5), so any batch
+        order or interleaving applies exactly once.
+
+        ``use_kernel`` routes the server-side application through the
+        one-hot MXU kernel (kernels/delta_push.py ``delta_apply_coo``)
+        instead of a scatter-add.
+        """
+        phys = self.layout.to_physical(rows)
+        if use_kernel:
+            from repro.kernels import ops as kops
+            delta_phys = kops.delta_apply_coo(
+                phys, cols, vals, self.layout.pad_rows, self.cols,
+                interpret=interpret)
+            new = self.value + delta_phys.astype(self.value.dtype)
+        else:
+            new = self.value.at[phys, cols].add(vals.astype(self.value.dtype))
+        return dataclasses.replace(self, value=new)
+
     # --- block access for the pipelined sweep (paper section 3.4) -------
     def num_blocks(self, rows_per_block: int) -> int:
         return _ceil_div(self.layout.pad_rows, rows_per_block)

@@ -94,6 +94,28 @@ def delta_push(w, z_old, z_new, changed, vocab_size: int, num_topics: int, *,
     return out[:vocab_size, :num_topics]
 
 
+def delta_apply_coo(rows, cols, vals, num_rows: int, num_topics: int, *,
+                    tile_tokens: int = 1024, tile_vocab: int = 512,
+                    interpret: bool = True) -> jax.Array:
+    """Dense [num_rows, num_topics] delta from compressed ``(row, col, +/-1)``
+    coordinate entries (kernels/delta_push.py ``_coo_kernel``) -- the server
+    side of the hybrid cold-tail push.  Value-0 entries are padding.
+    Matches ``ref.delta_apply_coo_ref`` exactly."""
+    vb = min(tile_vocab, num_rows + ((-num_rows) % 8))
+    vp = num_rows + ((-num_rows) % vb)
+    kp = num_topics + ((-num_topics) % LANES)
+
+    def tok(x):
+        return _pad_axis(x.astype(jnp.int32)[None, :], tile_tokens, axis=1)
+
+    # padded entries have vals=0 and thus contribute nothing
+    out = _delta.delta_apply_coo_call(
+        tok(rows), tok(cols), tok(vals),
+        vocab_pad=vp, k_pad=kp, tile_tokens=tile_tokens, tile_vocab=vb,
+        interpret=interpret)
+    return out[:num_rows, :num_topics]
+
+
 def alias_build(weights, *, tile_rows: int = 64,
                 interpret: bool = True) -> "alias_mod.AliasTable":
     """Alias-table construction via the Pallas kernel

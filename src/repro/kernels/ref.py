@@ -28,6 +28,15 @@ def delta_push_ref(w, z_old, z_new, changed, vocab_size: int,
             .at[w, z_new].add(amt))
 
 
+def delta_apply_coo_ref(rows, cols, vals, num_rows: int,
+                        num_topics: int) -> jax.Array:
+    """Oracle for kernels/delta_push.py ``_coo_kernel``: scatter-add of
+    compressed (row, col, +/-1) coordinate deltas (value-0 entries are
+    padding and contribute nothing)."""
+    return (jnp.zeros((num_rows, num_topics), jnp.int32)
+            .at[rows, cols].add(vals.astype(jnp.int32)))
+
+
 def alias_build_ref(weights) -> "alias_mod.AliasTable":
     """Oracle for kernels/alias_build.py: exact Vose construction."""
     return alias_mod.build_alias_rows(weights)

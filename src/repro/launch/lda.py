@@ -33,52 +33,41 @@ from repro.core import lightlda as lda
 from repro.core import perplexity as ppl
 from repro.core.pserver import DistributedMatrix, DistributedVector
 from repro.data import corpus as corpus_mod
-from repro.train import checkpoint
+from repro.sharding.compat import shard_map
+from repro.train import async_exec, checkpoint
+from repro.train import loop as train_loop
 
 
 def run_single(corp, cfg: "lda.LDAConfig", sweeps: int, seed: int,
-               eval_every: int, out, model_blocks: int = 0):
-    """model_blocks > 0 selects the blocked/pipelined sweep (paper sec.
-    3.4): worker memory O(V/blocks x K) instead of O(V x K)."""
+               eval_every: int, out, model_blocks: int = 0,
+               staleness: int = 0, hot_words=None):
+    """Single-process training through the asynchronous executor.
+
+    model_blocks > 0 selects the blocked/pipelined sweep (paper sec. 3.4):
+    worker memory O(V/blocks x K) instead of O(V x K).  ``staleness`` bounds
+    how many block deltas may be in flight while a block samples (0 ==
+    synchronous); ``hot_words`` sets the hybrid dense/sparse push boundary.
+    """
     key = jax.random.PRNGKey(seed)
     state = lda.init_state(key, jnp.asarray(corp.w), jnp.asarray(corp.d),
                            corp.num_docs, cfg)
-    if model_blocks > 0:
-        layout = state.nwk.layout
-        rpb = -(-layout.pad_rows // model_blocks)
-        # pad_rows must divide evenly into blocks; bump shards' padding via
-        # ceil and clamp rpb so n_blocks * rpb == pad_rows
-        while layout.pad_rows % rpb:
-            rpb += 1
-        idx, bval = lda.block_token_index(
-            np.asarray(state.w), np.asarray(state.valid), rpb, layout)
-        idx, bval = jnp.asarray(idx), jnp.asarray(bval)
-        print(f"[lda] blocked sweep: {layout.pad_rows // rpb} model blocks "
-              f"x {rpb} rows, worker block mem "
-              f"{rpb * cfg.K * 4 / 2**20:.1f} MiB (vs "
-              f"{layout.pad_rows * cfg.K * 4 / 2**20:.1f} MiB snapshot)")
-        sweep_jit = jax.jit(
-            lambda s, k: lda.sweep_blocked(s, k, cfg, idx, bval, rpb))
-    else:
-        sweep_jit = jax.jit(lambda s, k: lda.sweep(s, k, cfg))
-    history = []
-    t0 = time.time()
-    for i in range(sweeps):
-        key, sub = jax.random.split(key)
-        state = sweep_jit(state, sub)
-        if (i + 1) % eval_every == 0 or i == sweeps - 1:
-            p = float(ppl.training_perplexity(
-                state.w, state.d, state.valid, state.ndk,
-                state.nwk.to_dense(), state.nk.value, cfg.alpha, cfg.beta))
-            el = time.time() - t0
-            history.append({"sweep": i + 1, "perplexity": p, "elapsed_s": el})
-            print(f"[lda] sweep {i+1:4d}  perplexity {p:9.2f}  ({el:.1f}s)")
+    exec_cfg = async_exec.ExecConfig(staleness=staleness,
+                                     hot_words=hot_words,
+                                     model_blocks=model_blocks)
+    key, sub = jax.random.split(key)
+    state, history, info = train_loop.fit_lda(state, sub, cfg, exec_cfg,
+                                              sweeps, eval_every=eval_every)
     return state, history
 
 
-def make_spmd_sweep(mesh, cfg: "lda.LDAConfig"):
+def make_spmd_sweep(mesh, cfg: "lda.LDAConfig", staleness: int = 0,
+                    hot_words=None):
     """shard_map'd sweep: tokens split over (data, model); n_wk rows cyclic
-    over model (the servers); deltas psum'd over all workers."""
+    over model (the servers); deltas psum'd over all workers.  The executor
+    schedule knobs thread through: with ``staleness`` s, each worker merges
+    (and psums) deltas once per group of s+1 token blocks -- fewer, larger
+    collectives -- and ``hot_words`` splits the pushed delta into the dense
+    hot prefix and the sparse cold tail."""
     from jax.sharding import PartitionSpec as P
 
     def local(w, d, z, valid, doc_start, doc_len, ndk, nwk_local, nk, keys):
@@ -87,11 +76,12 @@ def make_spmd_sweep(mesh, cfg: "lda.LDAConfig"):
             DistributedMatrix(nwk_local, cfg.V, cfg.num_shards),
             DistributedVector(nk), ndk[0])
         out = lda.sweep(state, keys[0], cfg,
-                        axis_name=("data", "model"), model_axis="model")
+                        axis_name=("data", "model"), model_axis="model",
+                        staleness=staleness, hot_words=hot_words)
         return (out.z[None], out.ndk[None], out.nwk.value, out.nk.value)
 
     wspec = P(("data", "model"), None)
-    return jax.shard_map(
+    return shard_map(
         local, mesh=mesh,
         in_specs=(wspec, wspec, wspec, wspec, wspec, wspec,
                   P(("data", "model"), None, None), P("model", None),
@@ -101,16 +91,15 @@ def make_spmd_sweep(mesh, cfg: "lda.LDAConfig"):
         check_vma=False)
 
 
-def run_distributed(corp, cfg, sweeps, seed, eval_every, mesh_model: int):
-    n_dev = jax.device_count()
-    model = mesh_model
-    data = n_dev // model
-    mesh = jax.make_mesh((data, model), ("data", "model"))
-    workers = data * model
-    cfg = lda.LDAConfig(**{**cfg.__dict__, "num_shards": model})
-    print(f"[lda] mesh data={data} x model={model} "
-          f"({workers} workers, {model} servers)")
+def init_distributed_state(corp, cfg: "lda.LDAConfig", workers: int,
+                           key: jax.Array):
+    """Shard the corpus over ``workers`` and build the global count tables
+    (the same rebuild the checkpoint recovery uses, paper section 3.5).
 
+    Returns ``(w, d, valid, doc_start, doc_len, z, ndk, nwk, nk)`` with a
+    leading worker dim on the per-worker arrays; ``nwk`` is cyclic over
+    ``cfg.num_shards``.  Shared by ``run_distributed`` and the SPMD tests.
+    """
     shards = corpus_mod.shard_tokens(corp, workers, cfg.block_tokens)
     npad = max(s[0].shape[0] for s in shards)
     dmax = max(s[3].shape[0] for s in shards)
@@ -126,20 +115,37 @@ def run_distributed(corp, cfg, sweeps, seed, eval_every, mesh_model: int):
     doc_start = jnp.asarray(stack(3, dmax))
     doc_len = jnp.asarray(stack(4, dmax))
 
-    key = jax.random.PRNGKey(seed)
     z = jax.random.randint(key, w.shape, 0, cfg.K, dtype=jnp.int32)
     # counts from the global view (same rebuild the checkpoint recovery uses)
+    one = valid.reshape(-1).astype(jnp.int32)
     nwk_dense = jnp.zeros((cfg.V, cfg.K), jnp.int32).at[
-        w.reshape(-1), z.reshape(-1)].add(valid.reshape(-1).astype(jnp.int32))
-    nk = jnp.zeros((cfg.K,), jnp.int32).at[z.reshape(-1)].add(
-        valid.reshape(-1).astype(jnp.int32))
+        w.reshape(-1), z.reshape(-1)].add(one)
+    nk = jnp.zeros((cfg.K,), jnp.int32).at[z.reshape(-1)].add(one)
     ndk = jnp.zeros((workers, dmax, cfg.K), jnp.int32)
     idx = jnp.arange(workers)[:, None].repeat(npad, 1)
-    ndk = ndk.at[idx.reshape(-1), d.reshape(-1), z.reshape(-1)].add(
-        valid.reshape(-1).astype(jnp.int32))
-    nwk = DistributedMatrix.from_dense(nwk_dense, model)
+    ndk = ndk.at[idx.reshape(-1), d.reshape(-1), z.reshape(-1)].add(one)
+    nwk = DistributedMatrix.from_dense(nwk_dense, cfg.num_shards)
+    return w, d, valid, doc_start, doc_len, z, ndk, nwk, nk
 
-    sweep_fn = jax.jit(make_spmd_sweep(mesh, cfg))
+
+def run_distributed(corp, cfg, sweeps, seed, eval_every, mesh_model: int,
+                    staleness: int = 0, hot_words=None):
+    n_dev = jax.device_count()
+    model = mesh_model
+    data = n_dev // model
+    mesh = jax.make_mesh((data, model), ("data", "model"))
+    workers = data * model
+    cfg = lda.LDAConfig(**{**cfg.__dict__, "num_shards": model})
+    print(f"[lda] mesh data={data} x model={model} "
+          f"({workers} workers, {model} servers)")
+
+    key = jax.random.PRNGKey(seed)
+    (w, d, valid, doc_start, doc_len, z, ndk, nwk,
+     nk) = init_distributed_state(corp, cfg, workers, key)
+    dmax = doc_start.shape[1]
+
+    sweep_fn = jax.jit(make_spmd_sweep(mesh, cfg, staleness=staleness,
+                                       hot_words=hot_words))
     history = []
     t0 = time.time()
     nwk_val, nk_val = nwk.value, nk
@@ -180,6 +186,15 @@ def main():
     ap.add_argument("--model-blocks", type=int, default=0,
                     help="blocked/pipelined sweep (paper sec 3.4): pull the "
                          "model in N blocks instead of a full snapshot")
+    ap.add_argument("--staleness", type=int, default=0,
+                    help="bounded-staleness executor: up to S block deltas "
+                         "in flight while a block samples (0 = synchronous; "
+                         "rounded down so S+1 divides the block count)")
+    ap.add_argument("--hot-words", type=int, default=None,
+                    help="hybrid delta push: the H hottest words aggregate "
+                         "densely (MXU one-hot matmul), the cold tail is "
+                         "pushed as (row, col, +/-1) coordinate deltas "
+                         "(default: all words dense)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="experiments/lda")
     ap.add_argument("--checkpoint", default="")
@@ -198,12 +213,16 @@ def main():
 
     if args.devices:
         history = run_distributed(corp, cfg, args.sweeps, args.seed,
-                                  args.eval_every, args.mesh_model)
+                                  args.eval_every, args.mesh_model,
+                                  staleness=args.staleness,
+                                  hot_words=args.hot_words)
         state = None
     else:
         state, history = run_single(corp, cfg, args.sweeps, args.seed,
                                     args.eval_every, args.out,
-                                    model_blocks=args.model_blocks)
+                                    model_blocks=args.model_blocks,
+                                    staleness=args.staleness,
+                                    hot_words=args.hot_words)
         if args.checkpoint:
             checkpoint.save_lda(args.checkpoint, state)
             print(f"[lda] checkpointed assignments to {args.checkpoint}")

@@ -1,0 +1,19 @@
+"""Version-compat shims for JAX SPMD APIs.
+
+``jax.shard_map`` was promoted out of ``jax.experimental`` only recently;
+older jax (e.g. 0.4.x) spells it ``jax.experimental.shard_map.shard_map``
+with ``check_rep`` instead of ``check_vma``.  Every shard_map call in this
+repo goes through this wrapper so both spellings work.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)

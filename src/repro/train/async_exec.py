@@ -1,0 +1,441 @@
+"""Asynchronous pipelined training executor (paper sections 2.5, 3.3, 3.4).
+
+The paper's headline numbers come from its *asynchronous* workload shape:
+workers sample against a bounded-stale snapshot while pulls and pushes are
+still in flight, and reassignment deltas are buffered -- the hottest words
+aggregated densely, the cold tail shipped as per-reassignment messages.
+This module is that schedule, made deterministic for SPMD JAX:
+
+**Staleness bound ``s``.**  Block ``i`` samples against a view of
+``(n_k, n_dk, z)`` that is missing the deltas of the ``s`` most recent
+blocks -- those pushes are "in flight".  Because block deltas only commute
+(addition, paper section 2.5), any merge order is exactly-once-correct; the
+bound makes the paper's unstructured asynchrony testable: ``s = 0`` is the
+synchronous schedule and must match ``lightlda.sweep_blocked_ref`` bitwise
+(asserted in tests/test_async_exec.py).  Blocks whose in-flight windows
+overlap are mutually independent, so the executor runs each *group* of
+``s + 1`` consecutive blocks as one fused, vectorised sampling step and
+merges all of the group's deltas at the boundary -- fewer, larger device
+ops and one cross-worker reduction per group instead of per block.
+
+**Double-buffered pulls.**  While a group samples, the next group's
+``n_wk`` rows are pulled (``DistributedMatrix.pull_block``).  The prefetch
+is *exact*, not just statistically tolerable: a group's write-back (hot
+dense slice and cold coordinate push alike) only ever touches its own
+physical rows, so the next group's rows cannot change while the pull is in
+flight.  XLA is free to overlap the slice-pull with the Metropolis-Hastings
+chain; on a pod the pull is the cross-server collective of paper
+section 3.4.
+
+**Hybrid dense/sparse delta push (paper section 3.3).**  Words are
+frequency-ordered, so the hottest ``H`` words are a logical-id prefix.
+Their reassignments aggregate through the dense one-hot MXU kernel
+(kernels/delta_push.py); the cold tail is emitted as compressed
+``(row, col, +/-1)`` coordinate deltas -- the paper's 100k-reassignment
+buffer -- and applied through ``DistributedMatrix.push_sparse``.  Both
+halves are integer additions, so the hybrid split never changes results,
+only traffic shape.
+
+Entry points:
+  * ``pipelined_sweep``  -- the blocked model-parallel executor (the
+    generalisation of ``lightlda.sweep_blocked``; worker memory
+    O(group x K), the Web-scale path),
+  * ``snapshot_sweep``   -- the full-snapshot executor (the generalisation
+    of ``lightlda.sweep``; used by the SPMD distributed launcher),
+  * ``make_executor``    -- host-side factory the launchers and
+    ``train.loop.fit_lda`` drive.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import alias as alias_mod
+from repro.core import lightlda as lda
+from repro.core.pserver import DistributedMatrix, DistributedVector
+from repro.kernels import delta_push as _delta
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecConfig:
+    """Executor schedule knobs (orthogonal to the model's ``LDAConfig``).
+
+    ``staleness``: how many block deltas may be in flight while a block
+    samples; 0 reproduces the synchronous schedule exactly.
+    ``hot_words``: hot/cold boundary H of the hybrid delta push; ``None``
+    routes every word through the dense path (today's behaviour), 0 sends
+    everything as coordinate deltas.
+    ``model_blocks``: >0 selects the blocked executor (``pipelined_sweep``)
+    with the model pulled in that many blocks; 0 selects the full-snapshot
+    executor (``snapshot_sweep``).
+    """
+
+    staleness: int = 0
+    hot_words: Optional[int] = None
+    model_blocks: int = 0
+
+
+def effective_staleness(n_blocks: int, staleness: int) -> int:
+    """Largest usable bound <= ``staleness``.
+
+    The group formulation needs the group size ``s + 1`` to divide the
+    block count (scan steps must be uniform); the executor rounds the
+    requested bound down to the nearest divisor rather than failing.
+    """
+    s = max(0, min(int(staleness), n_blocks - 1))
+    while s > 0 and n_blocks % (s + 1):
+        s -= 1
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Shared pieces.
+# ---------------------------------------------------------------------------
+
+def hybrid_count_deltas(w_b, d_b, z_old, z_new, valid_b, num_docs: int,
+                        hot_words: int, cfg: "lda.LDAConfig",
+                        use_kernel: bool = False, interpret: bool = True
+                        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """``lightlda.count_deltas`` with the hybrid hot/cold word split.
+
+    The top-``hot_words`` words aggregate densely (one-hot MXU kernel or
+    scatter); the cold tail is compressed to coordinate deltas and applied
+    sparsely.  Same (d_nwk [V,K], d_nk [K], d_ndk [D,K]) contract and --
+    addition being exact on int32 -- the same values for every ``H``.
+    """
+    changed = (z_old != z_new) & valid_b
+    amt = changed.astype(jnp.int32)
+    hot_m, cold_m = _delta.split_hot_cold(w_b, changed, hot_words)
+    amt_hot = hot_m.astype(jnp.int32)
+    if hot_words > 0:
+        if use_kernel:
+            from repro.kernels import ops as kops
+            d_hot = kops.delta_push(w_b, z_old, z_new, hot_m, hot_words,
+                                    cfg.K, interpret=interpret)
+        else:
+            # out-of-range (cold) rows are dropped by the scatter; their
+            # amt_hot is 0 anyway
+            d_hot = (jnp.zeros((hot_words, cfg.K), jnp.int32)
+                     .at[w_b, z_old].add(-amt_hot)
+                     .at[w_b, z_new].add(amt_hot))
+        d_nwk = jnp.pad(d_hot, ((0, cfg.V - hot_words), (0, 0)))
+    else:
+        d_nwk = jnp.zeros((cfg.V, cfg.K), jnp.int32)
+    rows, cols, vals = _delta.cold_coo(w_b, z_old, z_new, cold_m)
+    d_nwk = d_nwk.at[rows, cols].add(vals)
+
+    d_nk = (jnp.zeros((cfg.K,), jnp.int32)
+            .at[z_old].add(-amt).at[z_new].add(amt))
+    d_ndk = (jnp.zeros((num_docs, cfg.K), jnp.int32)
+             .at[d_b, z_old].add(-amt).at[d_b, z_new].add(amt))
+    return d_nwk, d_nk, d_ndk
+
+
+# ---------------------------------------------------------------------------
+# Blocked executor (generalises lightlda.sweep_blocked_ref; paper sec 3.4).
+# ---------------------------------------------------------------------------
+
+def pipelined_sweep(state: "lda.SamplerState", key: jax.Array,
+                    cfg: "lda.LDAConfig", block_idx: jax.Array,
+                    block_valid: jax.Array, rows_per_block: int,
+                    staleness: int = 0,
+                    hot_words: Optional[int] = None) -> "lda.SamplerState":
+    """One staleness-bounded, double-buffered, hybrid-push blocked sweep.
+
+    Schedule per group of ``s + 1`` consecutive model blocks (see module
+    docstring for why group-mates are independent):
+
+      1. the group's ``n_wk`` rows arrive from the previous step's
+         prefetch; the *next* group's pull is issued immediately
+         (``pull_block``), overlapping the sampling below;
+      2. alias tables are built for the group's rows only (worker memory
+         O(group x K));
+      3. all of the group's tokens are resampled in one fused MH chain
+         against the group-start (bounded-stale) counts;
+      4. deltas merge at the group boundary: hot words through the dense
+         slice write-back, the cold tail through
+         ``DistributedMatrix.push_sparse``, and ``n_k``/``n_dk``/``z``
+         through duplicate-tolerant adds.
+
+    ``staleness=0`` is bitwise-identical to ``lightlda.sweep_blocked_ref``.
+    """
+    rpb = rows_per_block
+    layout = state.nwk.layout
+    n_blocks = block_idx.shape[0]
+    cap = block_idx.shape[1]
+    assert n_blocks * rpb == layout.pad_rows, (layout.pad_rows, rpb)
+    s = effective_staleness(n_blocks, staleness)
+    group = s + 1
+    n_groups = n_blocks // group
+    grp_rows = group * rpb
+    hot = cfg.V if hot_words is None else int(hot_words)
+
+    # Fuse each group of s+1 consecutive blocks into one scan step.  (The
+    # host-side ``make_executor`` instead builds the token index directly
+    # at group granularity, which amortises per-block padding; this
+    # reshape path serves direct callers with a per-block index.)
+    gidx = block_idx.reshape(n_groups, group * cap)
+    gval = block_valid.reshape(n_groups, group * cap)
+    gcap = group * cap
+
+    def group_body(carry, inp):
+        nwk_phys, nk, ndk, z_flat, rows = carry
+        grp, key_g = inp
+
+        # 1. double buffer: issue the next group's pull before sampling.
+        # Exact, not approximate: this group's write-back only touches its
+        # own physical rows, so the prefetched rows cannot be invalidated.
+        rows_next = DistributedMatrix(nwk_phys, cfg.V, cfg.num_shards) \
+            .pull_block((grp + 1) % n_groups, grp_rows)
+
+        # 2. alias tables for the group's rows only
+        weights = (rows.astype(jnp.float32) + cfg.beta) / (
+            nk.astype(jnp.float32)[None, :] + cfg.V * cfg.beta)
+        table = alias_mod.build_alias_rows(weights)
+
+        # 3. fused resample of the group's tokens against the stale view
+        idx = gidx[grp]
+        vb = gval[grp]
+        wb = jnp.take(state.w, idx)
+        db = jnp.take(state.d, idx)
+        z0 = jnp.take(z_flat, idx)
+        local = jnp.clip(layout.to_physical(wb) - grp * grp_rows, 0,
+                         grp_rows - 1)
+        nwk_rows = jnp.take(rows, local, axis=0)
+        ndk_rows = jnp.take(ndk, db, axis=0)
+        aprob = jnp.take(table.prob, local, axis=0)
+        aalias = jnp.take(table.alias, local, axis=0)
+        doc_draw = lda.make_doc_draw(None, db, z_flat, state.doc_start,
+                                     state.doc_len, cfg)
+        rng = lda.draw_mh_randoms(key_g, doc_draw, gcap, cfg)
+        if cfg.use_kernels:
+            from repro.kernels import ops as kops
+            z_new = kops.mh_sample(rng, z0, nwk_rows, ndk_rows, nk, aprob,
+                                   aalias, cfg,
+                                   interpret=cfg.kernel_interpret)
+        else:
+            z_new = lda.mh_chain(rng, z0, nwk_rows, ndk_rows, nk, aprob,
+                                 aalias, cfg)
+        z_new = jnp.where(vb, z_new, z0)
+
+        # 4. group-boundary merge (duplicate-tolerant adds throughout)
+        changed = (z_new != z0) & vb
+        amt = changed.astype(jnp.int32)
+        hot_m, cold_m = _delta.split_hot_cold(wb, changed, hot)
+        amt_hot = hot_m.astype(jnp.int32)
+        if cfg.use_kernels:
+            from repro.kernels import ops as kops
+            d_rows = kops.delta_push(local, z0, z_new, hot_m, grp_rows,
+                                     cfg.K, interpret=cfg.kernel_interpret)
+            if hot < cfg.V:
+                # cold tail, kernel route: a group's cold words live in
+                # its own physical slice, so the COO buffer applies
+                # *group-locally* (O(grp_rows x K), never O(pad_rows x K))
+                _, ccols, cvals = _delta.cold_coo(wb, z0, z_new, cold_m)
+                lrows = jnp.concatenate([local, local])
+                d_rows = d_rows + kops.delta_apply_coo(
+                    lrows, ccols, cvals, grp_rows, cfg.K,
+                    interpret=cfg.kernel_interpret)
+        else:
+            d_rows = (jnp.zeros((grp_rows, cfg.K), jnp.int32)
+                      .at[local, z0].add(-amt_hot)
+                      .at[local, z_new].add(amt_hot))
+        nwk_phys = jax.lax.dynamic_update_slice_in_dim(
+            nwk_phys, rows + d_rows, grp * grp_rows, axis=0)
+        if hot < cfg.V and not cfg.use_kernels:
+            # cold tail, scatter route: compressed coordinate push through
+            # the server primitive (paper section 3.3's message buffer)
+            crows, ccols, cvals = _delta.cold_coo(wb, z0, z_new, cold_m)
+            nwk_phys = DistributedMatrix(nwk_phys, cfg.V, cfg.num_shards) \
+                .push_sparse(crows, ccols, cvals).value
+
+        nk = nk + (jnp.zeros((cfg.K,), jnp.int32)
+                   .at[z0].add(-amt).at[z_new].add(amt))
+        ndk = ndk.at[db, z0].add(-amt).at[db, z_new].add(amt)
+        z_flat = z_flat.at[idx].add(jnp.where(vb, z_new - z0, 0))
+        return (nwk_phys, nk, ndk, z_flat, rows_next), ()
+
+    keys = jax.random.split(key, n_groups)
+    rows0 = DistributedMatrix(state.nwk.value, cfg.V, cfg.num_shards) \
+        .pull_block(0, grp_rows)
+    carry = (state.nwk.value, state.nk.value, state.ndk, state.z, rows0)
+    (nwk_phys, nk, ndk, z, _), _ = jax.lax.scan(
+        group_body, carry, (jnp.arange(n_groups), keys))
+    return lda.SamplerState(state.w, state.d, z, state.valid,
+                            state.doc_start, state.doc_len,
+                            DistributedMatrix(nwk_phys, cfg.V,
+                                              cfg.num_shards),
+                            DistributedVector(nk), ndk)
+
+
+# ---------------------------------------------------------------------------
+# Full-snapshot executor (generalises lightlda.sweep; paper Alg. 1).
+# ---------------------------------------------------------------------------
+
+def snapshot_sweep(state: "lda.SamplerState", key: jax.Array,
+                   cfg: "lda.LDAConfig",
+                   axis_name=None, model_axis=None,
+                   staleness: int = 0,
+                   hot_words: Optional[int] = None) -> "lda.SamplerState":
+    """One full-snapshot sweep with staleness-grouped token blocks.
+
+    Identical to the classic ``lightlda.sweep`` schedule except that
+    groups of ``staleness + 1`` consecutive token blocks are resampled as
+    one fused step against the group-start counts, and the group's deltas
+    (hybrid hot/cold when ``hot_words`` is set) merge -- including the
+    cross-worker ``psum`` "push" -- once per group instead of per block.
+    ``staleness=0`` reproduces the per-block schedule exactly.
+    """
+    num_docs = state.ndk.shape[0]
+    n = state.w.shape[0]
+    nblocks = n // cfg.block_tokens
+    s = effective_staleness(nblocks, staleness)
+    group = s + 1
+    n_groups = nblocks // group
+    gtok = group * cfg.block_tokens
+    hot = cfg.V if hot_words is None else int(hot_words)
+
+    # --- snapshot "pull" (paper section 2.3 / 3.4) ---
+    if model_axis is not None:
+        phys = jax.lax.all_gather(state.nwk.value, model_axis, axis=0,
+                                  tiled=True)
+        nwk_full = DistributedMatrix(phys, cfg.V, cfg.num_shards)
+    else:
+        nwk_full = state.nwk
+    snapshot = nwk_full.to_dense()                      # [V, K] stale counts
+    nk_snap = state.nk.value                            # [K]
+
+    # --- alias tables from the snapshot (paper section 3, ref [14]) ---
+    # NOTE: always the jnp construction here so the kernel sweep is
+    # bit-identical to the oracle sweep (see lightlda.sweep's original
+    # note; the Pallas alias_build kernel is exercised via its own tests).
+    weights = (snapshot.astype(jnp.float32) + cfg.beta) / (
+        nk_snap.astype(jnp.float32)[None, :] + cfg.V * cfg.beta)
+    table = alias_mod.build_alias_rows(weights)
+
+    w_groups = state.w.reshape(n_groups, gtok)
+    d_groups = state.d.reshape(n_groups, gtok)
+    v_groups = state.valid.reshape(n_groups, gtok)
+
+    def group_body(carry, inp):
+        z_flat, ndk, nwk_dense, nk = carry
+        grp, key_g = inp
+        w_b = w_groups[grp]
+        d_b = d_groups[grp]
+        valid_b = v_groups[grp]
+        z0 = jax.lax.dynamic_slice_in_dim(z_flat, grp * gtok, gtok)
+
+        # Pre-gather per-token rows (the "pull" of the rows this group
+        # needs).  The word rows come from the sweep-start snapshot; the
+        # doc rows and n_k are stale by at most ``staleness`` blocks.
+        nwk_rows = jnp.take(snapshot, w_b, axis=0)
+        ndk_rows = jnp.take(ndk, d_b, axis=0)
+        aprob_rows = jnp.take(table.prob, w_b, axis=0)
+        aalias_rows = jnp.take(table.alias, w_b, axis=0)
+        doc_draw = lda.make_doc_draw(None, d_b, z_flat, state.doc_start,
+                                     state.doc_len, cfg)
+        rng = lda.draw_mh_randoms(key_g, doc_draw, gtok, cfg)
+
+        if cfg.use_kernels:
+            from repro.kernels import ops as kops
+            z_new = kops.mh_sample(rng, z0, nwk_rows, ndk_rows, nk,
+                                   aprob_rows, aalias_rows, cfg,
+                                   interpret=cfg.kernel_interpret)
+        else:
+            z_new = lda.mh_chain(rng, z0, nwk_rows, ndk_rows, nk,
+                                 aprob_rows, aalias_rows, cfg)
+        z_new = jnp.where(valid_b, z_new, z0)
+
+        # --- buffered delta aggregation + group-boundary merge (3.3) ---
+        if hot >= cfg.V:
+            d_nwk, d_nk, d_ndk = lda.count_deltas(
+                w_b, d_b, z0, z_new, valid_b, num_docs, cfg,
+                use_kernel=cfg.use_kernels, interpret=cfg.kernel_interpret)
+        else:
+            d_nwk, d_nk, d_ndk = hybrid_count_deltas(
+                w_b, d_b, z0, z_new, valid_b, num_docs, hot, cfg,
+                use_kernel=cfg.use_kernels, interpret=cfg.kernel_interpret)
+        if axis_name is not None:
+            # SPMD "push": sum deltas over the data-parallel workers --
+            # one collective per group, not per block.
+            d_nwk = jax.lax.psum(d_nwk, axis_name)
+            d_nk = jax.lax.psum(d_nk, axis_name)
+            # n_dk stays local: docs are owned by one worker (paper sec. 3).
+
+        z_flat = jax.lax.dynamic_update_slice_in_dim(
+            z_flat, z_new, grp * gtok, axis=0)
+        return (z_flat, ndk + d_ndk, nwk_dense + d_nwk, nk + d_nk), ()
+
+    keys = jax.random.split(key, n_groups)
+    carry = (state.z, state.ndk, snapshot, nk_snap)
+    (z, ndk, nwk_dense, nk), _ = jax.lax.scan(
+        group_body, carry, (jnp.arange(n_groups), keys))
+
+    # --- write back to the server layout ---
+    new_full = DistributedMatrix.from_dense(nwk_dense, cfg.num_shards)
+    if model_axis is not None:
+        # Keep only this server shard's physical rows.
+        rps = new_full.layout.rows_per_shard
+        sidx = jax.lax.axis_index(model_axis)
+        local = jax.lax.dynamic_slice_in_dim(new_full.value, sidx * rps,
+                                             rps, axis=0)
+        new_nwk = DistributedMatrix(local, cfg.V, cfg.num_shards)
+    else:
+        new_nwk = new_full
+    return lda.SamplerState(state.w, state.d, z, state.valid,
+                            state.doc_start, state.doc_len, new_nwk,
+                            DistributedVector(nk), ndk)
+
+
+# ---------------------------------------------------------------------------
+# Host-side factory: what the launchers and train.loop.fit_lda drive.
+# ---------------------------------------------------------------------------
+
+def make_executor(state: "lda.SamplerState", cfg: "lda.LDAConfig",
+                  exec_cfg: ExecConfig):
+    """Build the jitted one-sweep step function for an executor config.
+
+    Returns ``(step_fn, info)`` where ``step_fn(state, key) -> state`` and
+    ``info`` describes the realised schedule (block geometry, effective
+    staleness after divisor rounding, hot-word boundary).
+    """
+    if exec_cfg.model_blocks > 0:
+        layout = state.nwk.layout
+        rpb = -(-layout.pad_rows // exec_cfg.model_blocks)
+        # pad_rows must divide evenly into blocks; bump rpb until it does
+        while layout.pad_rows % rpb:
+            rpb += 1
+        n_blocks = layout.pad_rows // rpb
+        s = effective_staleness(n_blocks, exec_cfg.staleness)
+        # Build the token index at *merge-unit* granularity (s+1 fused
+        # blocks): the per-block cap is sized by the hottest block, so
+        # grouping at index-build time lets hot and cold blocks average
+        # out and the padding shrink -- a throughput win only the
+        # staleness-bounded schedule can take.
+        rpb_step = rpb * (s + 1)
+        idx, bval = lda.block_token_index(
+            np.asarray(state.w), np.asarray(state.valid), rpb_step, layout)
+        idx, bval = jnp.asarray(idx), jnp.asarray(bval)
+        step = jax.jit(lambda st, k: pipelined_sweep(
+            st, k, cfg, idx, bval, rpb_step, staleness=0,
+            hot_words=exec_cfg.hot_words))
+        info = {"mode": "blocked", "n_blocks": n_blocks,
+                "rows_per_block": rpb, "staleness": s,
+                "group": s + 1, "token_cap": int(idx.shape[1]),
+                "hot_words": exec_cfg.hot_words}
+    else:
+        n = state.w.shape[0]
+        n_blocks = n // cfg.block_tokens
+        s = effective_staleness(n_blocks, exec_cfg.staleness)
+        step = jax.jit(lambda st, k: snapshot_sweep(
+            st, k, cfg, staleness=exec_cfg.staleness,
+            hot_words=exec_cfg.hot_words))
+        info = {"mode": "snapshot", "n_blocks": n_blocks,
+                "rows_per_block": None, "staleness": s, "group": s + 1,
+                "token_cap": cfg.block_tokens,
+                "hot_words": exec_cfg.hot_words}
+    return step, info

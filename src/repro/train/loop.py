@@ -3,6 +3,10 @@
 ``make_train_step`` returns the exact function the multi-pod dry-run lowers:
 loss -> grads -> clip -> AdamW, with parameters/moments sharded per
 sharding/specs.py and batch inputs sharded over the dp axes.
+
+``fit_lda`` is the LDA-side counterpart: the host loop that drives the
+asynchronous pipelined executor (train/async_exec.py) sweep by sweep --
+the single entry point the LDA launcher and benchmarks build on.
 """
 from __future__ import annotations
 
@@ -130,6 +134,55 @@ def jit_train_step(cfg: ModelConfig, tc: TrainConfig, ctx: MeshCtx,
                    in_shardings=in_shardings,
                    out_shardings=(s_shard, None),
                    donate_argnums=(0,) if donate else ())
+
+
+def fit_lda(state, key: jax.Array, cfg, exec_cfg, sweeps: int,
+            eval_every: int = 10, log_fn=print):
+    """Host loop for LDA training through the asynchronous executor.
+
+    Builds the jitted sweep step for ``exec_cfg`` (blocked/pipelined or
+    full-snapshot schedule, staleness bound, hybrid hot/cold push -- see
+    ``train.async_exec.ExecConfig``) and runs ``sweeps`` Gibbs sweeps,
+    evaluating training perplexity every ``eval_every``.
+
+    Returns ``(state, history, info)`` where ``history`` rows carry
+    perplexity, elapsed seconds and tokens/sec, and ``info`` is the
+    executor's realised-schedule description.
+    """
+    from repro.core import perplexity as ppl
+    from repro.train import async_exec
+
+    step, info = async_exec.make_executor(state, cfg, exec_cfg)
+    if info["mode"] == "blocked":
+        rpb = info["rows_per_block"]
+        log_fn(f"[lda] blocked executor: {info['n_blocks']} model blocks "
+               f"x {rpb} rows, group {info['group']} (staleness "
+               f"{info['staleness']}), hot_words {info['hot_words']}, "
+               f"worker block mem "
+               f"{info['group'] * rpb * cfg.K * 4 / 2**20:.1f} MiB (vs "
+               f"{state.nwk.layout.pad_rows * cfg.K * 4 / 2**20:.1f} MiB "
+               f"snapshot)")
+    else:
+        log_fn(f"[lda] snapshot executor: {info['n_blocks']} token blocks, "
+               f"group {info['group']} (staleness {info['staleness']}), "
+               f"hot_words {info['hot_words']}")
+    num_tokens = int(jnp.sum(state.valid))
+    history = []
+    t0 = time.time()
+    for i in range(sweeps):
+        key, sub = jax.random.split(key)
+        state = step(state, sub)
+        if (i + 1) % eval_every == 0 or i == sweeps - 1:
+            jax.block_until_ready(state.z)
+            el = time.time() - t0
+            p = float(ppl.training_perplexity(
+                state.w, state.d, state.valid, state.ndk,
+                state.nwk.to_dense(), state.nk.value, cfg.alpha, cfg.beta))
+            history.append({"sweep": i + 1, "perplexity": p, "elapsed_s": el,
+                            "tokens_per_s": num_tokens * (i + 1) / el})
+            log_fn(f"[lda] sweep {i+1:4d}  perplexity {p:9.2f}  "
+                   f"({el:.1f}s, {num_tokens * (i + 1) / el:,.0f} tok/s)")
+    return state, history, info
 
 
 def fit(state: TrainState, batches, cfg: ModelConfig, tc: TrainConfig,

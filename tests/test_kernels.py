@@ -84,6 +84,95 @@ class TestDeltaPushKernel:
         assert int(jnp.abs(out).sum()) == 0
 
 
+class TestDeltaApplyCooKernel:
+    """Sparse cold-tail application kernel vs the scatter-add oracle."""
+
+    @pytest.mark.parametrize("m,v,k", [
+        (64, 50, 8),
+        (700, 513, 40),
+        (2048, 1024, 100),
+        (130, 128, 128),
+    ])
+    def test_matches_scatter(self, m, v, k):
+        key = jax.random.PRNGKey(m + v + k)
+        ks = jax.random.split(key, 4)
+        rows = jax.random.randint(ks[0], (m,), 0, v, dtype=jnp.int32)
+        cols = jax.random.randint(ks[1], (m,), 0, k, dtype=jnp.int32)
+        vals = jax.random.randint(ks[2], (m,), -1, 2, dtype=jnp.int32)
+        ref = kref.delta_apply_coo_ref(rows, cols, vals, v, k)
+        got = kops.delta_apply_coo(rows, cols, vals, v, k,
+                                   tile_tokens=256, tile_vocab=128)
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+    def test_zero_vals_are_padding(self):
+        rows = jnp.zeros((32,), jnp.int32)
+        cols = jnp.zeros((32,), jnp.int32)
+        vals = jnp.zeros((32,), jnp.int32)
+        out = kops.delta_apply_coo(rows, cols, vals, 10, 6)
+        assert int(jnp.abs(out).sum()) == 0
+
+
+class TestHybridDeltaParity:
+    """Hybrid hot-dense + cold-sparse path == the dense scatter oracle
+    (ref.delta_push_ref) at every hot/cold boundary, including the
+    boundary row itself and the all-cold / all-hot edge cases."""
+
+    def _batch(self, b, v, k, seed, include_boundary=None):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        w = jax.random.randint(ks[0], (b,), 0, v, dtype=jnp.int32)
+        if include_boundary is not None:
+            # force tokens exactly on both sides of the hot/cold boundary
+            w = (w.at[0].set(max(include_boundary - 1, 0))
+                 .at[1].set(min(include_boundary, v - 1)))
+        zo = jax.random.randint(ks[1], (b,), 0, k, dtype=jnp.int32)
+        zn = jax.random.randint(ks[2], (b,), 0, k, dtype=jnp.int32)
+        return w, zo, zn, zo != zn
+
+    @pytest.mark.parametrize("use_kernel", [False, True])
+    @pytest.mark.parametrize("hot", [0, 1, 64, 199, 200])  # 0=all-cold, V=all-hot
+    def test_matches_dense_oracle(self, hot, use_kernel):
+        from repro.core import lightlda as lda_mod
+        from repro.train.async_exec import hybrid_count_deltas
+
+        v, k, b = 200, 12, 512
+        cfg = lda_mod.LDAConfig(num_topics=k, vocab_size=v)
+        w, zo, zn, chg = self._batch(b, v, k, seed=hot + 1,
+                                     include_boundary=max(hot, 1))
+        d = jnp.zeros((b,), jnp.int32)
+        valid = jnp.ones((b,), bool)
+        ref = kref.delta_push_ref(w, zo, zn, chg, v, k)
+        d_nwk, d_nk, d_ndk = hybrid_count_deltas(
+            w, d, zo, zn, valid, 1, hot, cfg, use_kernel=use_kernel)
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(d_nwk))
+        # the split must also conserve: every changed token moves one count
+        assert int(np.asarray(d_nwk).sum()) == 0
+        assert int(np.asarray(d_nk).sum()) == 0
+
+    def test_cold_coo_through_push_sparse(self):
+        """The executor's actual cold path: COO emitted by cold_coo and
+        applied via DistributedMatrix.push_sparse equals the dense push
+        of the same delta, on both the scatter and the kernel route."""
+        from repro.core.pserver import DistributedMatrix
+        from repro.kernels.delta_push import cold_coo, split_hot_cold
+
+        v, k, b, hot = 150, 10, 256, 40
+        w, zo, zn, chg = self._batch(b, v, k, seed=9, include_boundary=hot)
+        m = DistributedMatrix.from_dense(
+            jax.random.randint(jax.random.PRNGKey(1), (v, k), 5, 50), 3)
+        _, cold = split_hot_cold(w, chg, hot)
+        rows, cols, vals = cold_coo(w, zo, zn, cold)
+        amt = cold.astype(jnp.int32)
+        dense_delta = (jnp.zeros((v, k), jnp.int32)
+                       .at[w, zo].add(-amt).at[w, zn].add(amt))
+        want = m.push_dense(dense_delta).to_dense()
+        got_scatter = m.push_sparse(rows, cols, vals).to_dense()
+        got_kernel = m.push_sparse(rows, cols, vals, use_kernel=True).to_dense()
+        np.testing.assert_array_equal(np.asarray(want),
+                                      np.asarray(got_scatter))
+        np.testing.assert_array_equal(np.asarray(want),
+                                      np.asarray(got_kernel))
+
+
 class TestAliasBuildKernel:
     @pytest.mark.parametrize("v,k", [
         (16, 8),

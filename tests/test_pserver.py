@@ -1,36 +1,55 @@
-"""Parameter-server unit + property tests (paper section 2)."""
+"""Parameter-server unit + property tests (paper section 2).
+
+Hypothesis-based property tests run when hypothesis is installed; the
+fixed-case tests (including the push_sparse exactly-once suite) run
+everywhere.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis", reason="hypothesis not installed")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core.pserver import (CyclicLayout, DeltaBuffer, DistributedMatrix,
                                 DistributedVector)
 
 
-class TestCyclicLayout:
-    @given(st.integers(1, 200), st.integers(1, 17))
-    @settings(max_examples=50, deadline=None)
-    def test_physical_logical_bijection(self, rows, shards):
-        lay = CyclicLayout(rows, shards)
-        phys = np.arange(lay.pad_rows)
-        logical = np.asarray(lay.to_logical(phys))
-        assert sorted(logical.tolist()) == list(range(lay.pad_rows))
-        back = np.asarray(lay.to_physical(logical))
-        assert np.array_equal(back, phys)
+if HAVE_HYPOTHESIS:
+    class TestCyclicLayoutProperties:
+        @given(st.integers(1, 200), st.integers(1, 17))
+        @settings(max_examples=50, deadline=None)
+        def test_physical_logical_bijection(self, rows, shards):
+            lay = CyclicLayout(rows, shards)
+            phys = np.arange(lay.pad_rows)
+            logical = np.asarray(lay.to_logical(phys))
+            assert sorted(logical.tolist()) == list(range(lay.pad_rows))
+            back = np.asarray(lay.to_physical(logical))
+            assert np.array_equal(back, phys)
 
-    @given(st.integers(1, 200), st.integers(1, 17))
-    @settings(max_examples=50, deadline=None)
-    def test_shard_ownership(self, rows, shards):
-        """Row r lives on shard r mod S (paper section 2.2)."""
-        lay = CyclicLayout(rows, shards)
-        r = np.arange(rows)
-        phys = np.asarray(lay.to_physical(r))
-        shard_of_phys = phys // lay.rows_per_shard
-        assert np.array_equal(shard_of_phys, r % shards)
+        @given(st.integers(1, 200), st.integers(1, 17))
+        @settings(max_examples=50, deadline=None)
+        def test_shard_ownership(self, rows, shards):
+            """Row r lives on shard r mod S (paper section 2.2)."""
+            lay = CyclicLayout(rows, shards)
+            r = np.arange(rows)
+            phys = np.asarray(lay.to_physical(r))
+            shard_of_phys = phys // lay.rows_per_shard
+            assert np.array_equal(shard_of_phys, r % shards)
+
+
+class TestCyclicLayout:
+    def test_bijection_fixed_cases(self):
+        for rows, shards in ((7, 3), (16, 4), (100, 7), (5, 8)):
+            lay = CyclicLayout(rows, shards)
+            phys = np.arange(lay.pad_rows)
+            logical = np.asarray(lay.to_logical(phys))
+            assert sorted(logical.tolist()) == list(range(lay.pad_rows))
+            assert np.array_equal(np.asarray(lay.to_physical(logical)), phys)
 
     def test_load_balance_zipf(self):
         """Paper section 3.2 + fig. 5: cyclic partitioning of frequency-
@@ -98,6 +117,105 @@ class TestDistributedMatrix:
                     assert (vals == np.arange(48).reshape(12, 4)[r]).all()
                     seen.append(int(r))
         assert sorted(seen) == list(range(12))
+
+
+class TestPushSparse:
+    """Commutativity / exactly-once of the sparse coordinate push
+    (paper section 2.5: addition makes any order and batching legal)."""
+
+    def _batches(self, v, k, n_batches, per_batch, seed):
+        rng = np.random.default_rng(seed)
+        out = []
+        for _ in range(n_batches):
+            rows = rng.integers(0, v, size=per_batch).astype(np.int32)
+            cols = rng.integers(0, k, size=per_batch).astype(np.int32)
+            vals = rng.integers(-1, 2, size=per_batch).astype(np.int32)
+            out.append((jnp.asarray(rows), jnp.asarray(cols),
+                        jnp.asarray(vals)))
+        return out
+
+    @pytest.mark.parametrize("shards", [1, 2, 4])
+    def test_permuted_batches_equal_merged_dense_push(self, shards):
+        """Applying a permuted sequence of sparse delta batches yields the
+        same matrix as one merged dense push -- each delta applies exactly
+        once regardless of arrival order or batching."""
+        v, k = 23, 7
+        base = jax.random.randint(jax.random.PRNGKey(shards), (v, k), 0, 50)
+        m0 = DistributedMatrix.from_dense(base, shards)
+        batches = self._batches(v, k, n_batches=5, per_batch=40,
+                                seed=shards)
+
+        # one merged dense push of everything
+        merged = jnp.zeros((v, k), jnp.int32)
+        for rows, cols, vals in batches:
+            merged = merged.at[rows, cols].add(vals)
+        want = m0.push_dense(merged).to_dense()
+
+        for perm in ([0, 1, 2, 3, 4], [4, 2, 0, 3, 1], [1, 0, 4, 2, 3]):
+            m = m0
+            for i in perm:
+                m = m.push_sparse(*batches[i])
+            np.testing.assert_array_equal(np.asarray(m.to_dense()),
+                                          np.asarray(want))
+
+    @pytest.mark.parametrize("shards", [1, 2, 4])
+    def test_kernel_route_matches_scatter_route(self, shards):
+        v, k = 40, 9
+        m0 = DistributedMatrix.from_dense(
+            jax.random.randint(jax.random.PRNGKey(7), (v, k), 0, 9), shards)
+        (rows, cols, vals), = self._batches(v, k, 1, 64, seed=3)
+        a = m0.push_sparse(rows, cols, vals).to_dense()
+        b = m0.push_sparse(rows, cols, vals, use_kernel=True).to_dense()
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_zero_vals_are_noops(self):
+        """Masked-tail padding entries (value 0) must not disturb the
+        matrix even when their row/col indices are arbitrary."""
+        m0 = DistributedMatrix.from_dense(jnp.ones((6, 4), jnp.int32), 2)
+        rows = jnp.array([0, 5, 3], jnp.int32)
+        cols = jnp.array([1, 2, 3], jnp.int32)
+        vals = jnp.zeros((3,), jnp.int32)
+        np.testing.assert_array_equal(
+            np.asarray(m0.push_sparse(rows, cols, vals).to_dense()),
+            np.asarray(m0.to_dense()))
+
+    def test_duplicates_accumulate(self):
+        m0 = DistributedMatrix.zeros(5, 3, 2)
+        rows = jnp.array([2, 2, 2, 2], jnp.int32)
+        cols = jnp.array([1, 1, 1, 0], jnp.int32)
+        vals = jnp.array([1, 1, -1, 1], jnp.int32)
+        d = m0.push_sparse(rows, cols, vals).to_dense()
+        assert int(d[2, 1]) == 1 and int(d[2, 0]) == 1
+
+
+if HAVE_HYPOTHESIS:
+    class TestPushSparseProperties:
+        @given(shards=st.integers(1, 5), seed=st.integers(0, 1000),
+               n_batches=st.integers(1, 6))
+        @settings(max_examples=20, deadline=None)
+        def test_any_order_exactly_once(self, shards, seed, n_batches):
+            v, k = 17, 5
+            rng = np.random.default_rng(seed)
+            m0 = DistributedMatrix.from_dense(
+                jnp.asarray(rng.integers(0, 20, size=(v, k)),
+                            dtype=jnp.int32), shards)
+            batches = []
+            merged = np.zeros((v, k), np.int64)
+            for _ in range(n_batches):
+                rows = rng.integers(0, v, size=16).astype(np.int32)
+                cols = rng.integers(0, k, size=16).astype(np.int32)
+                vals = rng.integers(-1, 2, size=16).astype(np.int32)
+                np.add.at(merged, (rows, cols), vals)
+                batches.append((jnp.asarray(rows), jnp.asarray(cols),
+                                jnp.asarray(vals)))
+            want = m0.push_dense(jnp.asarray(merged, dtype=jnp.int32)) \
+                .to_dense()
+            order = rng.permutation(n_batches)
+            m = m0
+            for i in order:
+                m = m.push_sparse(*batches[i])
+            np.testing.assert_array_equal(np.asarray(m.to_dense()),
+                                          np.asarray(want))
 
 
 class TestDeltaBuffer:

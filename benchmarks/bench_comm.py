@@ -30,8 +30,8 @@ def ps_bytes_from_hlo(workers: int, model: int, vocab: int, k: int,
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={workers}"
         import jax, jax.numpy as jnp, numpy as np, json
+        from repro import ps
         from repro.core import lightlda as lda
-        from repro.core.pserver import DistributedMatrix
         from repro.data import corpus as corpus_mod
         from repro.launch import lda as L
         from repro.analysis import hlo_stats as H
@@ -54,7 +54,7 @@ def ps_bytes_from_hlo(workers: int, model: int, vocab: int, k: int,
             sds((W, npad), jnp.int32), sds((W, npad), jnp.bool_),
             sds((W, dmax), jnp.int32), sds((W, dmax), jnp.int32),
             sds((W, dmax, cfg.K), jnp.int32),
-            sds((DistributedMatrix.zeros(cfg.V, cfg.K, {model}).value.shape), jnp.int32),
+            sds((ps.client_for(cfg).matrix(cfg.V, cfg.K).value.shape), jnp.int32),
             sds((cfg.K,), jnp.int32), sds((W, 2), jnp.uint32))
         st = H.analyze_text(lowered.compile().as_text())
         print(json.dumps(dict(wire=st.coll_wire_bytes,

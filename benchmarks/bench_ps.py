@@ -1,0 +1,92 @@
+"""PS client route microbenchmark: dense vs COO vs hybrid push.
+
+Pushes identical Zipfian reassignment batches through ``MatrixHandle.push``
+under each ``PushRoute`` (paper section 3.3: the hot/cold boundary is a
+traffic-shape knob, never a semantic one) and measures pushes/sec and
+reassignments/sec.  Verifies first that every route lands on the bitwise-
+identical matrix -- the invariance the whole route design rests on -- then
+times the jitted push path per route.  Writes
+``experiments/bench/BENCH_ps.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import ps
+
+OUT = "experiments/bench/BENCH_ps.json"
+
+
+def _zipf_reassign(v: int, k: int, batch: int, seed: int) -> ps.Reassign:
+    """Reassignment batch with Zipfian word ids (frequency-ordered, like
+    the corpus pipeline) so hybrid hot/cold boundaries bite."""
+    rng = np.random.default_rng(seed)
+    u = rng.random(batch)
+    w = np.minimum((u ** -1.05 - 1).astype(np.int64), v - 1).astype(np.int32)
+    z0 = rng.integers(0, k, size=batch).astype(np.int32)
+    z1 = rng.integers(0, k, size=batch).astype(np.int32)
+    changed = rng.random(batch) < 0.6
+    w = jnp.asarray(w)
+    return ps.Reassign(rows=w, words=w, z_old=jnp.asarray(z0),
+                       z_new=jnp.asarray(z1), changed=jnp.asarray(changed))
+
+
+def main(fast: bool = False):
+    v, k, batch = (2000, 64, 16384) if fast else (8000, 128, 65536)
+    iters = 20 if fast else 30
+    hot = max(v // 8, 1)
+    routes = {
+        "dense": ps.DenseRoute(),
+        "coo": ps.CooRoute(),
+        "hybrid": ps.HybridRoute(hot_words=hot),
+    }
+    client = ps.PSClient.create(num_shards=8)
+    re = _zipf_reassign(v, k, batch, seed=0)
+    print(f"ps,config,V={v},K={k},batch={batch},hot={hot}")
+
+    # --- route invariance first: all routes must land on the same matrix
+    base = client.matrix(v, k)
+    finals = {name: np.asarray(base.with_route(r).push(re).to_dense())
+              for name, r in routes.items()}
+    ref = finals["dense"]
+    for name, got in finals.items():
+        np.testing.assert_array_equal(got, ref,
+                                      err_msg=f"route {name} diverged")
+    print("ps,route_invariance,ok")
+
+    results = {}
+    for name, route in routes.items():
+        h = base.with_route(route)
+        step = jax.jit(lambda hh, rr: hh.push(rr))
+        h2 = step(h, re)
+        jax.block_until_ready(h2.value)          # compile + warm
+        t0 = time.time()
+        for _ in range(iters):
+            h2 = step(h2, re)
+        jax.block_until_ready(h2.value)
+        dt = time.time() - t0
+        results[name] = {
+            "pushes_per_s": iters / dt,
+            "reassign_per_s": iters * batch / dt,
+        }
+        print(f"ps,route_{name},{iters / dt:.1f},pushes_per_s,"
+              f"{iters * batch / dt:,.0f},reassign_per_s")
+
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        json.dump({
+            "config": {"V": v, "K": k, "batch": batch, "hot_words": hot,
+                       "iters": iters},
+            "routes": results,
+        }, f, indent=2)
+    print(f"ps,wrote,{OUT}")
+
+
+if __name__ == "__main__":
+    main(fast=True)

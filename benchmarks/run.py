@@ -10,6 +10,8 @@
                latency (emits BENCH_infer.json)
   async        pipelined executor: tokens/sec vs staleness bound, hybrid
                dense/sparse push (emits BENCH_async.json)
+  ps           PS client routes: dense vs COO vs hybrid push through
+               MatrixHandle.push (emits BENCH_ps.json)
 
 ``python -m benchmarks.run`` runs everything at reduced ("fast") sizes and
 prints CSV-ish lines; ``--full`` uses the paper-ladder sizes; ``--only X``
@@ -24,7 +26,7 @@ import traceback
 
 from benchmarks import (bench_async, bench_comm, bench_convergence,
                         bench_infer, bench_kernels, bench_loadbalance,
-                        bench_roofline, bench_table1)
+                        bench_ps, bench_roofline, bench_table1)
 
 MODULES = {
     "table1": bench_table1.main,
@@ -35,6 +37,7 @@ MODULES = {
     "roofline": bench_roofline.main,
     "infer": bench_infer.main,
     "async": bench_async.main,
+    "ps": bench_ps.main,
 }
 
 

@@ -1,9 +1,12 @@
 """Distributed LDA: the paper's architecture on an SPMD mesh.
 
 Workers (all mesh shards) sample their document partitions; servers (the
-model axis) hold cyclic rows of n_wk; pushes are reduce-scattered deltas.
-Runs on 8 fake host devices here; on a pod the same code uses
-make_production_mesh().
+model axis) hold cyclic rows of n_wk.  The count tables enter the sweep
+as ``repro.ps`` handles on an ``SpmdBackend`` (built by
+``PSClient.create(axis_name=..., model_axis=...)`` inside
+``launch/lda.make_spmd_sweep``): pulls are all-gathers over the server
+axis, pushes one psum per merge group.  Runs on 8 fake host devices
+here; on a pod the same code uses make_production_mesh().
 
   PYTHONPATH=src python examples/lda_distributed.py
 """
@@ -20,6 +23,9 @@ if __name__ == "__main__":
     cmd = [sys.executable, "-m", "repro.launch.lda",
            "--devices", "8", "--mesh-model", "2",
            "--docs", "600", "--vocab", "1500", "-k", "30",
-           "--sweeps", "30", "--eval-every", "10"]
+           "--sweeps", "30", "--eval-every", "10",
+           # hybrid push route: hottest 200 words dense, cold tail as
+           # coordinate deltas (paper section 3.3)
+           "--staleness", "2", "--hot-words", "200"]
     env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
     raise SystemExit(subprocess.call(cmd, env=env, cwd=ROOT))

@@ -1,5 +1,5 @@
-"""Quickstart: train a topic model on the parameter server (the paper's
-workload end-to-end) and print the discovered topics.
+"""Quickstart: train a topic model through the parameter-server client
+API (the paper's workload end-to-end) and print the discovered topics.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,9 +7,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import ps
 from repro.core import lightlda as lda
 from repro.core import perplexity as ppl
 from repro.data import corpus as corpus_mod
+from repro.train import async_exec
+from repro.train import loop as train_loop
 
 
 def main():
@@ -21,25 +24,33 @@ def main():
     print(f"corpus: {corp.num_tokens} tokens, {corp.num_docs} docs, "
           f"V={corp.vocab_size}")
 
-    # 2. LightLDA on the parameter server: n_wk lives on 4 cyclic shards,
-    #    MH sampling is amortized O(1) per token via alias tables.
+    # 2. The Glint-style client is the gateway to the count tables: it
+    #    owns the backend (in-process here; SpmdBackend on a mesh) and
+    #    hands out matrix/vector handles with async pull futures and
+    #    routed pushes.
     cfg = lda.LDAConfig(num_topics=20, vocab_size=corp.vocab_size,
                         block_tokens=8192, num_shards=4, mh_steps=2)
+    client = ps.client_for(cfg)
     state = lda.init_state(jax.random.PRNGKey(0), jnp.asarray(corp.w),
-                           jnp.asarray(corp.d), corp.num_docs, cfg)
-    sweep = jax.jit(lambda s, k: lda.sweep(s, k, cfg))
+                           jnp.asarray(corp.d), corp.num_docs, cfg,
+                           client=client)
+    print(f"n_wk handle: {state.nwk.num_rows}x{state.nwk.cols} over "
+          f"{state.nwk.num_shards} cyclic shards, backend "
+          f"{type(client.backend).__name__}")
 
-    key = jax.random.PRNGKey(1)
-    for i in range(60):
-        key, sub = jax.random.split(key)
-        state = sweep(state, sub)
-        if (i + 1) % 15 == 0:
-            p = float(ppl.training_perplexity(
-                state.w, state.d, state.valid, state.ndk,
-                state.nwk.to_dense(), state.nk.value, cfg.alpha, cfg.beta))
-            print(f"sweep {i+1:3d}: perplexity {p:.1f}")
+    #    The two Glint primitives, directly on the handle:
+    rows = state.nwk.pull(jnp.arange(4)).result()   # async pull -> await
+    print(f"pull(rows 0..3) -> {rows.shape}, {int(rows.sum())} tokens")
 
-    # 3. Inspect the topics: top words by *lift* (phi_wk / p(w)) -- raw
+    # 3. Train through the executor: pushes travel the HybridRoute --
+    #    the 100 hottest words dense, the cold tail as (row, col, +/-1)
+    #    coordinate deltas (paper section 3.3).
+    exec_cfg = async_exec.ExecConfig(route=ps.HybridRoute(hot_words=100))
+    state, history, info = train_loop.fit_lda(
+        state, jax.random.PRNGKey(1), cfg, exec_cfg, sweeps=60,
+        eval_every=15)
+
+    # 4. Inspect the topics: top words by *lift* (phi_wk / p(w)) -- raw
     #    probability would just list the Zipf head for every topic.
     from repro.core import coherence
     phi = np.asarray(ppl.phi_from_counts(

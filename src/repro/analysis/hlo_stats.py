@@ -101,7 +101,12 @@ def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
         m = _INSTR_RE.match(line)
         if m:
             _, name, shape, op, operands, attrs = m.groups()
-            ops = [o.strip().lstrip("%") for o in _split_operands(operands)]
+            # Post-optimization HLO writes operands with inline shapes
+            # ("dot(f32[64,32]{1,0} %Arg_0.1, ...)"): the name is the last
+            # whitespace-separated token; keeping the full string would
+            # break the shape lookup (and hence dot contraction dims).
+            ops = [o.strip().split()[-1].lstrip("%")
+                   for o in _split_operands(operands) if o.strip()]
             cur.instructions.append(Instruction(name, shape, op, ops, attrs))
     if cur is not None:
         comps[cur.name] = cur

@@ -2,8 +2,8 @@
 
 Collapsed Gibbs sampling for LDA keeps three count statistics
 
-  n_k   -- tokens assigned to topic k               (DistributedVector, replicated)
-  n_wk  -- word w assigned to topic k               (DistributedMatrix, cyclic over servers)
+  n_k   -- tokens assigned to topic k               (ps.VectorHandle, replicated)
+  n_wk  -- word w assigned to topic k               (ps.MatrixHandle, cyclic over servers)
   n_dk  -- tokens of doc d assigned to topic k      (worker-local, never shared)
 
 and resamples every token's topic ``z`` from the collapsed conditional
@@ -44,9 +44,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import ps
 from repro.core import alias as alias_mod
-from repro.core.pserver import (DeltaBuffer, DistributedMatrix,
-                                DistributedVector)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,7 +58,8 @@ class LDAConfig:
     block_tokens: int = 8192      # staleness window == paper's push buffer
     num_shards: int = 1           # parameter-server shards (mesh model axis)
     use_kernels: bool = False     # Pallas kernels for MH + delta aggregation
-    kernel_interpret: bool = True # interpret=True on CPU (TPU: False)
+    kernel_interpret: Optional[bool] = None  # None: kernels.ops.default_interpret
+                                  # (REPRO_INTERPRET env var / CPU autodetect)
 
     @property
     def K(self) -> int:
@@ -80,8 +80,8 @@ class SamplerState(NamedTuple):
     valid: jax.Array      # [N] bool, False for padding
     doc_start: jax.Array  # [D] first token index of each doc
     doc_len: jax.Array    # [D] token count of each doc
-    nwk: DistributedMatrix  # (V, K) word-topic counts, cyclic layout
-    nk: DistributedVector   # (K,)  topic counts
+    nwk: "ps.MatrixHandle"  # (V, K) word-topic counts (PS client handle)
+    nk: "ps.VectorHandle"   # (K,)  topic counts (PS client handle)
     ndk: jax.Array          # [D, K] doc-topic counts (worker-local)
 
 
@@ -91,7 +91,8 @@ class SamplerState(NamedTuple):
 
 def init_state(key: jax.Array, w: jax.Array, d: jax.Array, num_docs: int,
                cfg: LDAConfig, doc_start: Optional[jax.Array] = None,
-               doc_len: Optional[jax.Array] = None) -> SamplerState:
+               doc_len: Optional[jax.Array] = None,
+               client: Optional["ps.PSClient"] = None) -> SamplerState:
     """Random topic init + count-table construction.
 
     Counts are *rebuilt from z* with segment sums -- this same routine is the
@@ -112,19 +113,27 @@ def init_state(key: jax.Array, w: jax.Array, d: jax.Array, num_docs: int,
             [jnp.zeros((1,), jnp.int32), jnp.cumsum(doc_len_)[:-1]])
         doc_start, doc_len = doc_start_, doc_len_
 
-    nwk, nk, ndk = rebuild_counts(w, d, z, valid, num_docs, cfg)
+    nwk, nk, ndk = rebuild_counts(w, d, z, valid, num_docs, cfg,
+                                  client=client)
     return SamplerState(w, d, z, valid, doc_start, doc_len, nwk, nk, ndk)
 
 
-def rebuild_counts(w, d, z, valid, num_docs, cfg: LDAConfig
-                   ) -> Tuple[DistributedMatrix, DistributedVector, jax.Array]:
-    """Rebuild (n_wk, n_k, n_dk) from assignments (paper section 3.5)."""
+def rebuild_counts(w, d, z, valid, num_docs, cfg: LDAConfig,
+                   client: Optional["ps.PSClient"] = None
+                   ) -> Tuple["ps.MatrixHandle", "ps.VectorHandle", jax.Array]:
+    """Rebuild (n_wk, n_k, n_dk) from assignments (paper section 3.5).
+
+    Counts come back as PS client handles (``repro.ps``); pass ``client``
+    to place them on a specific backend (default: in-process for
+    ``cfg.num_shards`` cyclic shards).
+    """
+    if client is None:
+        client = ps.client_for(cfg)
     one = valid.astype(jnp.int32)
     nwk_dense = jnp.zeros((cfg.V, cfg.K), jnp.int32).at[w, z].add(one)
     nk = jnp.zeros((cfg.K,), jnp.int32).at[z].add(one)
     ndk = jnp.zeros((num_docs, cfg.K), jnp.int32).at[d, z].add(one)
-    nwk = DistributedMatrix.from_dense(nwk_dense, cfg.num_shards)
-    return nwk, DistributedVector(nk), ndk
+    return client.matrix_from_dense(nwk_dense), client.wrap_vector(nk), ndk
 
 
 # ---------------------------------------------------------------------------
@@ -321,7 +330,7 @@ def freeze_model(nwk_dense: jax.Array, nk: jax.Array, cfg: LDAConfig,
 def sample_tokens_frozen(model: FrozenModel, rng: MHRandoms, z0: jax.Array,
                          w: jax.Array, ndk_rows: jax.Array, cfg: LDAConfig,
                          use_kernels: bool = False,
-                         interpret: bool = True) -> jax.Array:
+                         interpret: Optional[bool] = None) -> jax.Array:
     """Resample a flat batch of tokens against a frozen model.
 
     ``w``/``z0`` are [B]; ``ndk_rows`` is the per-token gather of the local
@@ -341,33 +350,10 @@ def sample_tokens_frozen(model: FrozenModel, rng: MHRandoms, z0: jax.Array,
                     aprob_rows, aalias_rows, cfg, frozen=True)
 
 
-# ---------------------------------------------------------------------------
-# Dense delta aggregation (paper section 3.3 generalised; kernel in
-# kernels/delta_push.py).
-# ---------------------------------------------------------------------------
-
-def count_deltas(w_b, d_b, z_old, z_new, valid_b, num_docs, cfg: LDAConfig,
-                 use_kernel: bool = False, interpret: bool = True):
-    """Aggregate a block's reassignments into dense count deltas.
-
-    Returns (d_nwk [V,K], d_nk [K], d_ndk [num_docs,K]).  The one-hot-matmul
-    kernel path is the TPU-native replacement for scatter-add (DESIGN.md
-    section 2) -- numerically identical, asserted in tests.
-    """
-    changed = (z_old != z_new) & valid_b
-    amt = changed.astype(jnp.int32)
-    if use_kernel:
-        from repro.kernels import ops as kops
-        d_nwk = kops.delta_push(w_b, z_old, z_new, changed, cfg.V, cfg.K,
-                                interpret=interpret)
-    else:
-        d_nwk = (jnp.zeros((cfg.V, cfg.K), jnp.int32)
-                 .at[w_b, z_old].add(-amt).at[w_b, z_new].add(amt))
-    d_nk = (jnp.zeros((cfg.K,), jnp.int32)
-            .at[z_old].add(-amt).at[z_new].add(amt))
-    d_ndk = (jnp.zeros((num_docs, cfg.K), jnp.int32)
-             .at[d_b, z_old].add(-amt).at[d_b, z_new].add(amt))
-    return d_nwk, d_nk, d_ndk
+# Dense delta aggregation (paper section 3.3) lives in ps/routes.py now:
+# a block's reassignments aggregate through the handle's PushRoute
+# (DenseRoute covers the old count_deltas; the executors add the
+# worker-local n_k/n_dk halves via train.async_exec.token_deltas).
 
 
 # ---------------------------------------------------------------------------
@@ -378,26 +364,29 @@ def sweep(state: SamplerState, key: jax.Array, cfg: LDAConfig,
           axis_name: Optional[str] = None,
           model_axis: Optional[str] = None,
           staleness: int = 0,
-          hot_words: Optional[int] = None) -> SamplerState:
+          hot_words: Optional[int] = None,
+          route: Optional["ps.PushRoute"] = None) -> SamplerState:
     """Resample every token once (one Gibbs sweep == one paper "iteration").
 
-    ``axis_name``: data-parallel mesh axis when running under shard_map (the
-    delta reduction then includes a psum over workers -- the SPMD "push").
-    ``model_axis``: parameter-server mesh axis; when set, ``state.nwk.value``
-    is this shard's local rows and the snapshot pull is an all-gather.
+    The SPMD collectives come from ``state.nwk``'s client backend
+    (``repro.ps``): wrap the counts with ``PSClient.create(axis_name=...,
+    model_axis=...)`` to run under shard_map.  The legacy
+    ``axis_name``/``model_axis`` kwargs override the handle's backend for
+    callers that have not migrated.
 
     Routed through the asynchronous executor
-    (``train.async_exec.snapshot_sweep``); ``staleness``/``hot_words``
-    select the bounded-staleness schedule and the hybrid dense/sparse delta
-    push.  The defaults reproduce the classic per-block synchronous
-    schedule exactly -- single-device defaults are the oracle used in
-    tests.
+    (``train.async_exec.snapshot_sweep``); ``staleness`` selects the
+    bounded-staleness schedule and ``route`` (or the legacy ``hot_words``
+    knob) the push policy -- ``ps.DenseRoute`` / ``ps.CooRoute`` /
+    ``ps.HybridRoute``.  The defaults reproduce the classic per-block
+    synchronous schedule exactly -- single-device defaults are the oracle
+    used in tests.
     """
     from repro.train import async_exec
     return async_exec.snapshot_sweep(state, key, cfg, axis_name=axis_name,
                                      model_axis=model_axis,
                                      staleness=staleness,
-                                     hot_words=hot_words)
+                                     hot_words=hot_words, route=route)
 
 
 def train(state: SamplerState, key: jax.Array, cfg: LDAConfig,
@@ -467,22 +456,24 @@ def block_token_index(w: np.ndarray, valid: np.ndarray, rows_per_block: int,
 def sweep_blocked(state: SamplerState, key: jax.Array, cfg: LDAConfig,
                   block_idx: jax.Array, block_valid: jax.Array,
                   rows_per_block: int, staleness: int = 0,
-                  hot_words: Optional[int] = None) -> SamplerState:
+                  hot_words: Optional[int] = None,
+                  route: Optional["ps.PushRoute"] = None) -> SamplerState:
     """One sweep processing the model in pulled blocks (paper section 3.4).
 
     Routed through the asynchronous pipelined executor
-    (``train.async_exec.pipelined_sweep``): double-buffered block pulls,
-    a bounded-staleness merge schedule (``staleness`` block deltas may be
-    in flight while a block samples) and the hybrid dense/sparse delta
-    push (``hot_words``).  The defaults reproduce the synchronous
-    schedule of ``sweep_blocked_ref`` bitwise (asserted in
+    (``train.async_exec.pipelined_sweep``): double-buffered block pulls
+    (``PullHandle`` futures), a bounded-staleness merge schedule
+    (``staleness`` block deltas may be in flight while a block samples)
+    and a declarative push policy (``route``, or the legacy ``hot_words``
+    knob for the hybrid dense/sparse split).  The defaults reproduce the
+    synchronous schedule of ``sweep_blocked_ref`` bitwise (asserted in
     tests/test_async_exec.py).
     """
     from repro.train import async_exec
     return async_exec.pipelined_sweep(state, key, cfg, block_idx,
                                       block_valid, rows_per_block,
                                       staleness=staleness,
-                                      hot_words=hot_words)
+                                      hot_words=hot_words, route=route)
 
 
 def sweep_blocked_ref(state: SamplerState, key: jax.Array, cfg: LDAConfig,
@@ -561,5 +552,5 @@ def sweep_blocked_ref(state: SamplerState, key: jax.Array, cfg: LDAConfig,
         block_body, carry, (jnp.arange(n_blocks), keys))
     return SamplerState(state.w, state.d, z, state.valid,
                         state.doc_start, state.doc_len,
-                        DistributedMatrix(nwk_phys, cfg.V, cfg.num_shards),
-                        DistributedVector(nk), ndk)
+                        state.nwk.with_value(nwk_phys),
+                        state.nk.with_value(nk), ndk)

@@ -27,6 +27,14 @@ accumulating local deltas (the paper's 100k-reassignment buffer / hot-word
 dense matrix, section 3.3), and the deltas are merged at block boundaries
 with a reduction -- addition being commutative/associative is exactly what
 makes this legal, as the paper argues in section 2.5.
+
+**This module is the storage layer.**  Application code goes through the
+Glint-style client API in ``repro/ps`` (``PSClient`` handles, pull
+futures, push routes, swappable backends); constructing the classes below
+directly outside ``repro/ps`` is deprecated and gated in CI (DESIGN.md
+section 8).  In particular the raw ``push_sparse`` assumes in-range
+logical row ids -- the client layer (``MatrixHandle.push_coo``) masks
+padded ids, which would otherwise alias real rows under the cyclic map.
 """
 from __future__ import annotations
 
@@ -169,7 +177,7 @@ class DistributedMatrix:
 
     def push_sparse(self, rows: jax.Array, cols: jax.Array, vals: jax.Array,
                     *, use_kernel: bool = False,
-                    interpret: bool = True) -> "DistributedMatrix":
+                    interpret: Optional[bool] = None) -> "DistributedMatrix":
         """Push compressed ``(row, col, +/-value)`` coordinate deltas.
 
         This is the cold-tail half of the hybrid push (paper section 3.3):

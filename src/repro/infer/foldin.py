@@ -48,7 +48,7 @@ class FoldInConfig:
     num_sweeps: int = 30
     burnin: int = 10
     use_kernels: bool = False     # Pallas inference kernel (frozen=True)
-    kernel_interpret: bool = True # interpret mode on CPU
+    kernel_interpret: Optional[bool] = None  # None: ops.default_interpret
 
     def __post_init__(self):
         assert 0 <= self.burnin < self.num_sweeps, (self.burnin,

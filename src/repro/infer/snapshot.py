@@ -15,6 +15,12 @@ active index in a single reference store.  Readers (``acquire``) never
 block and never observe a half-built snapshot; in-flight requests keep the
 version they started with until they drop it.  The version counter is
 strictly monotonic (asserted in tests).
+
+The publisher is a *read-only consumer* of the parameter-server client
+API: ``publish_view`` takes a ``ps.ReadOnlyView`` of the training
+``MatrixHandle`` -- pulls only, pushes are a type error -- so the
+training-to-serving handoff is the same pull primitive as everything
+else (paper section 2.3), never a private peek at storage.
 """
 from __future__ import annotations
 
@@ -24,6 +30,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import ps
 from repro.core import lightlda as lda
 from repro.core import perplexity as ppl
 
@@ -94,9 +101,15 @@ class SnapshotPublisher:
             self._active = target        # the flip: one reference store
         return snap
 
+    def publish_view(self, view: "ps.ReadOnlyView",
+                     nk: "ps.VectorHandle") -> Snapshot:
+        """Publish from a read-only snapshot view of the training handles
+        (the sanctioned serving-side read: pull, never push)."""
+        return self.publish(view.to_dense(), nk.pull_all().result())
+
     def publish_state(self, state: lda.SamplerState) -> Snapshot:
         """Publish straight from a training ``SamplerState``."""
-        return self.publish(state.nwk.to_dense(), state.nk.value)
+        return self.publish_view(state.nwk.read_view(), state.nk)
 
     # -- serving side ----------------------------------------------------
     def acquire(self) -> Optional[Snapshot]:

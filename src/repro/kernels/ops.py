@@ -2,14 +2,20 @@
 
 These handle the padding/layout contract (token-dim multiples of the tile,
 K padded to 128 lanes, per-token vectors promoted to [1, B]) and fall back
-to the jnp oracles where a kernel does not exist.  ``interpret=True``
-executes the kernel body in Python on CPU (the validation mode used by this
-repo's tests); on a real TPU pass ``interpret=False``.
+to the jnp oracles where a kernel does not exist.
+
+``interpret`` is resolved in ONE place -- ``default_interpret()`` -- so a
+TPU run flips a single switch instead of touching every signature: every
+wrapper takes ``interpret=None`` meaning "the process default", which is
+the ``REPRO_INTERPRET`` env var when set (``0``/``false`` compiles,
+anything else interprets), else interpret-on-CPU / compiled-on-accelerator.
+Explicit ``True``/``False`` still override per call.
 """
 from __future__ import annotations
 
+import os
 from functools import partial
-from typing import TYPE_CHECKING
+from typing import TYPE_CHECKING, Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +30,22 @@ if TYPE_CHECKING:  # avoid import cycle at runtime
 LANES = 128  # TPU lane width: K is padded to a multiple of this
 
 
+def default_interpret() -> bool:
+    """The process-wide Pallas interpret default (see module docstring).
+
+    Precedence: ``REPRO_INTERPRET`` env var, else interpret when the JAX
+    backend is CPU (kernels cannot compile there) and compile otherwise.
+    """
+    env = os.environ.get("REPRO_INTERPRET")
+    if env is not None:
+        return env.strip().lower() not in ("0", "false", "no", "")
+    return jax.default_backend() == "cpu"
+
+
+def _resolve_interpret(interpret: Optional[bool]) -> bool:
+    return default_interpret() if interpret is None else bool(interpret)
+
+
 def _pad_axis(x, mult, axis, value=0):
     pad = (-x.shape[axis]) % mult
     if pad == 0:
@@ -35,7 +57,7 @@ def _pad_axis(x, mult, axis, value=0):
 
 def mh_sample(rng: "MHRandoms", z0, nwk_rows, ndk_rows, nk,
               aprob_rows, aalias_rows, cfg: "LDAConfig", *,
-              tile_tokens: int = 1024, interpret: bool = True,
+              tile_tokens: int = 1024, interpret: Optional[bool] = None,
               frozen: bool = False) -> jax.Array:
     """Fused MH chain for one block of tokens (kernels/mh_sample.py).
 
@@ -47,6 +69,7 @@ def mh_sample(rng: "MHRandoms", z0, nwk_rows, ndk_rows, nk,
     -dw-correction variant (doc counts only), for sampling unseen documents
     against a frozen snapshot.
     """
+    interpret = _resolve_interpret(interpret)
     b = z0.shape[0]
     bp = b + ((-b) % tile_tokens)
 
@@ -76,9 +99,10 @@ def mh_sample(rng: "MHRandoms", z0, nwk_rows, ndk_rows, nk,
 
 def delta_push(w, z_old, z_new, changed, vocab_size: int, num_topics: int, *,
                tile_tokens: int = 1024, tile_vocab: int = 512,
-               interpret: bool = True) -> jax.Array:
+               interpret: Optional[bool] = None) -> jax.Array:
     """Dense [V, K] reassignment delta via one-hot MXU matmuls
     (kernels/delta_push.py).  Matches ``ref.delta_push_ref`` exactly."""
+    interpret = _resolve_interpret(interpret)
     vb = min(tile_vocab, vocab_size + ((-vocab_size) % 8))
     vp = vocab_size + ((-vocab_size) % vb)
     kp = num_topics + ((-num_topics) % LANES)
@@ -96,11 +120,12 @@ def delta_push(w, z_old, z_new, changed, vocab_size: int, num_topics: int, *,
 
 def delta_apply_coo(rows, cols, vals, num_rows: int, num_topics: int, *,
                     tile_tokens: int = 1024, tile_vocab: int = 512,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: Optional[bool] = None) -> jax.Array:
     """Dense [num_rows, num_topics] delta from compressed ``(row, col, +/-1)``
     coordinate entries (kernels/delta_push.py ``_coo_kernel``) -- the server
     side of the hybrid cold-tail push.  Value-0 entries are padding.
     Matches ``ref.delta_apply_coo_ref`` exactly."""
+    interpret = _resolve_interpret(interpret)
     vb = min(tile_vocab, num_rows + ((-num_rows) % 8))
     vp = num_rows + ((-num_rows) % vb)
     kp = num_topics + ((-num_topics) % LANES)
@@ -117,7 +142,7 @@ def delta_apply_coo(rows, cols, vals, num_rows: int, num_topics: int, *,
 
 
 def alias_build(weights, *, tile_rows: int = 64,
-                interpret: bool = True) -> "alias_mod.AliasTable":
+                interpret: Optional[bool] = None) -> "alias_mod.AliasTable":
     """Alias-table construction via the Pallas kernel
     (kernels/alias_build.py).
 
@@ -130,6 +155,7 @@ def alias_build(weights, *, tile_rows: int = 64,
     Matches ``alias.build_alias_rows`` on the induced pmf (asserted in
     tests; alias assignments themselves are permutation-dependent).
     """
+    interpret = _resolve_interpret(interpret)
     v, k = weights.shape
     q = weights.astype(jnp.float32) * (
         k / jnp.maximum(weights.sum(-1, keepdims=True), 1e-30))

@@ -29,9 +29,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import ps
 from repro.core import lightlda as lda
 from repro.core import perplexity as ppl
-from repro.core.pserver import DistributedMatrix, DistributedVector
 from repro.data import corpus as corpus_mod
 from repro.sharding.compat import shard_map
 from repro.train import async_exec, checkpoint
@@ -63,20 +63,25 @@ def run_single(corp, cfg: "lda.LDAConfig", sweeps: int, seed: int,
 def make_spmd_sweep(mesh, cfg: "lda.LDAConfig", staleness: int = 0,
                     hot_words=None):
     """shard_map'd sweep: tokens split over (data, model); n_wk rows cyclic
-    over model (the servers); deltas psum'd over all workers.  The executor
-    schedule knobs thread through: with ``staleness`` s, each worker merges
-    (and psums) deltas once per group of s+1 token blocks -- fewer, larger
-    collectives -- and ``hot_words`` splits the pushed delta into the dense
-    hot prefix and the sparse cold tail."""
+    over model (the servers); deltas psum'd over all workers.  The count
+    tables enter through an SPMD-backed ``PSClient`` -- the sweep gets its
+    collectives (all-gather pull, one psum push per group) from the
+    handle's backend, not from axis kwargs.  The executor schedule knobs
+    thread through: with ``staleness`` s, each worker merges (and psums)
+    deltas once per group of s+1 token blocks -- fewer, larger
+    collectives -- and ``hot_words`` selects the push route (dense hot
+    prefix + sparse cold tail)."""
     from jax.sharding import PartitionSpec as P
+
+    client = ps.client_for(cfg, axis_name=("data", "model"),
+                           model_axis="model")
 
     def local(w, d, z, valid, doc_start, doc_len, ndk, nwk_local, nk, keys):
         state = lda.SamplerState(
             w[0], d[0], z[0], valid[0], doc_start[0], doc_len[0],
-            DistributedMatrix(nwk_local, cfg.V, cfg.num_shards),
-            DistributedVector(nk), ndk[0])
+            client.wrap_matrix(nwk_local, cfg.V),
+            client.wrap_vector(nk), ndk[0])
         out = lda.sweep(state, keys[0], cfg,
-                        axis_name=("data", "model"), model_axis="model",
                         staleness=staleness, hot_words=hot_words)
         return (out.z[None], out.ndk[None], out.nwk.value, out.nk.value)
 
@@ -124,7 +129,7 @@ def init_distributed_state(corp, cfg: "lda.LDAConfig", workers: int,
     ndk = jnp.zeros((workers, dmax, cfg.K), jnp.int32)
     idx = jnp.arange(workers)[:, None].repeat(npad, 1)
     ndk = ndk.at[idx.reshape(-1), d.reshape(-1), z.reshape(-1)].add(one)
-    nwk = DistributedMatrix.from_dense(nwk_dense, cfg.num_shards)
+    nwk = ps.client_for(cfg).matrix_from_dense(nwk_dense)
     return w, d, valid, doc_start, doc_len, z, ndk, nwk, nk
 
 
@@ -155,7 +160,7 @@ def run_distributed(corp, cfg, sweeps, seed, eval_every, mesh_model: int,
         z, ndk, nwk_val, nk_val = sweep_fn(
             w, d, z, valid, doc_start, doc_len, ndk, nwk_val, nk_val, keys)
         if (i + 1) % eval_every == 0 or i == sweeps - 1:
-            full = DistributedMatrix(nwk_val, cfg.V, model).to_dense()
+            full = ps.client_for(cfg).wrap_matrix(nwk_val, cfg.V).to_dense()
             theta_like_ndk = ndk.reshape(workers * dmax, cfg.K)
             p = float(ppl.training_perplexity(
                 w.reshape(-1), (d + jnp.arange(workers)[:, None] * dmax

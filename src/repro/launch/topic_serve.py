@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import ps
 from repro.core import lightlda as lda
 from repro.data import corpus as corpus_mod
 from repro.infer.engine import EngineConfig
@@ -70,8 +71,10 @@ def run(args) -> int:
         foldin=FoldInConfig(num_sweeps=args.foldin_sweeps,
                             burnin=args.foldin_burnin,
                             use_kernels=args.kernels))
-    svc = TopicService(cfg, ecfg)
+    route = ps.route_for(args.hot_words, cfg.V)
+    svc = TopicService(cfg, ecfg, route=route)
     svc.init_from_corpus(train_corp, seed=args.seed)
+    print(f"[topic_serve] training via PSClient route {route!r}")
 
     # --- train, publishing versioned snapshots along the way -----------
     t0 = time.time()
@@ -134,7 +137,11 @@ def main():
     ap.add_argument("--mh-steps", type=int, default=2)
     ap.add_argument("--block-tokens", type=int, default=8192)
     ap.add_argument("--kernels", action="store_true",
-                    help="Pallas kernel path (interpret on CPU)")
+                    help="Pallas kernel path (interpret resolved by "
+                         "kernels.ops.default_interpret / REPRO_INTERPRET)")
+    ap.add_argument("--hot-words", type=int, default=None,
+                    help="training push route: H hottest words dense, cold "
+                         "tail as coordinate deltas (default: all dense)")
     ap.add_argument("--publish-every", type=int, default=10,
                     help="publish a snapshot every N training sweeps")
     ap.add_argument("--serve-docs", type=int, default=32,

@@ -1,0 +1,30 @@
+"""Glint-style parameter-server client layer (paper section 2).
+
+The single sanctioned gateway to the distributed count tables:
+
+  client  = PSClient.create(...)            # backend inferred (in-process / SPMD)
+  nwk     = client.matrix(V, K)             # MatrixHandle (Glint BigMatrix)
+  fut     = nwk.pull_block(b, rpb)          # PullHandle future: issue ...
+  rows    = fut.result()                    # ... overlap ... await
+  nwk     = nwk.push(reassign)              # routed via the handle's PushRoute
+
+Routes (``DenseRoute`` / ``CooRoute`` / ``HybridRoute``) make the paper's
+section-3.3 hybrid push a declarative policy; backends
+(``InProcessBackend`` / ``SpmdBackend``) swap the collectives without
+touching call sites.  ``core/pserver.py`` remains the storage layer
+underneath -- constructing ``DistributedMatrix`` / ``DistributedVector``
+directly outside this package is deprecated (CI-gated).
+"""
+from repro.ps.backend import Backend, InProcessBackend, SpmdBackend
+from repro.ps.client import (MatrixHandle, PSClient, PullHandle,
+                             ReadOnlyView, VectorHandle, client_for)
+from repro.ps.routes import (CooRoute, DenseRoute, HybridRoute, PushRoute,
+                             Reassign, RouteDelta, route_for)
+
+__all__ = [
+    "Backend", "InProcessBackend", "SpmdBackend",
+    "MatrixHandle", "PSClient", "PullHandle", "ReadOnlyView",
+    "VectorHandle", "client_for",
+    "CooRoute", "DenseRoute", "HybridRoute", "PushRoute", "Reassign",
+    "RouteDelta", "route_for",
+]

@@ -1,0 +1,91 @@
+"""Swappable parameter-server backends (paper section 2, DESIGN.md sec. 8).
+
+A ``Backend`` realises the three collective moments of the paper's
+pull/push protocol for one execution substrate; everything else (layout,
+routes, handles) is backend-agnostic:
+
+  * ``pull_full``  -- materialise the full physical (cyclic-ordered) count
+    matrix from whatever this worker holds (the paper's snapshot pull,
+    section 2.3);
+  * ``reduce``     -- combine the push deltas of all workers exactly once
+    (the paper's section 2.4/2.5 additive push);
+  * ``localize``   -- keep only this server shard's rows of a full
+    physical matrix (the write-back half of a sharded push).
+
+``InProcessBackend`` is the single-device functional-update backend: one
+process holds the whole matrix, every moment is the identity.
+``SpmdBackend`` is the pod backend: it runs under ``shard_map`` and maps
+the three moments onto hardware collectives -- ``all_gather`` over the
+model (server) axis for pulls, ``psum`` over the worker axes for pushes,
+and a dynamic row-slice for localisation.  Both are frozen dataclasses so
+they can ride in a handle's static pytree metadata (and hence through
+``jit``/``scan`` carries).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pserver import DistributedMatrix
+
+
+@dataclasses.dataclass(frozen=True)
+class InProcessBackend:
+    """Single-device backend: the whole matrix lives in this process and
+    updates are pure functional replacements.  All three protocol moments
+    degenerate to the identity."""
+
+    axis_name = None
+    model_axis = None
+
+    def pull_full(self, storage: DistributedMatrix) -> DistributedMatrix:
+        return storage
+
+    def reduce(self, delta: jax.Array) -> jax.Array:
+        return delta
+
+    def localize(self, full: DistributedMatrix) -> DistributedMatrix:
+        return full
+
+
+@dataclasses.dataclass(frozen=True)
+class SpmdBackend:
+    """SPMD backend: runs inside ``shard_map`` on a device mesh.
+
+    ``axis_name`` names the worker axes whose push deltas must be summed
+    (the paper's exactly-once push, realised as one ``psum``);
+    ``model_axis`` names the server axis over which ``n_wk`` rows are
+    sharded (pulls all-gather along it, localisation keeps this shard's
+    slice).  Either may be None: a replicated-matrix data-parallel
+    program sets only ``axis_name``.
+    """
+
+    axis_name: Optional[Union[str, Tuple[str, ...]]] = None
+    model_axis: Optional[str] = None
+
+    def pull_full(self, storage: DistributedMatrix) -> DistributedMatrix:
+        if self.model_axis is None:
+            return storage
+        from repro.core.pserver import spmd_pull_all
+        phys = spmd_pull_all(storage.value, self.model_axis)
+        return dataclasses.replace(storage, value=phys)
+
+    def reduce(self, delta: jax.Array) -> jax.Array:
+        if self.axis_name is None:
+            return delta
+        return jax.lax.psum(delta, self.axis_name)
+
+    def localize(self, full: DistributedMatrix) -> DistributedMatrix:
+        if self.model_axis is None:
+            return full
+        rps = full.layout.rows_per_shard
+        sidx = jax.lax.axis_index(self.model_axis)
+        local = jax.lax.dynamic_slice_in_dim(full.value, sidx * rps, rps,
+                                             axis=0)
+        return dataclasses.replace(full, value=local)
+
+
+Backend = Union[InProcessBackend, SpmdBackend]

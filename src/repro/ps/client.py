@@ -1,0 +1,413 @@
+"""Glint-style parameter-server client API (paper section 2).
+
+This module is the **only** sanctioned way the rest of the codebase
+touches parameters.  It mirrors Glint's client surface on JAX:
+
+  * ``PSClient`` is the factory -- ``client.matrix(rows, cols)`` /
+    ``client.vector(n)`` return handles, exactly like Glint's
+    ``client.matrix[Double](rows, cols)`` returning a ``BigMatrix``;
+  * ``MatrixHandle.pull(...)`` / ``pull_block(...)`` / ``pull_all()``
+    return ``PullHandle`` *futures*: the read is issued immediately (JAX
+    dispatch is asynchronous, so the transfer is in flight the moment the
+    handle exists) and ``result()`` awaits it.  Issue -> overlap -> await
+    is therefore a first-class primitive -- the pipelined executor's
+    double-buffered prefetch is ``h = handle.pull_block(b + 1); ...;
+    rows = h.result()``, no hand-rolled carry threading;
+  * ``MatrixHandle.push(reassign)`` routes the update through the
+    handle's declarative ``PushRoute`` (repro/ps/routes.py) and the
+    client's ``Backend`` (repro/ps/backend.py): route decides the traffic
+    shape (dense / coordinate / hybrid), backend supplies the collectives
+    (identity in-process, ``psum``/``all_gather`` under SPMD).
+
+Handles are registered pytrees whose array storage is the leaf and whose
+client/route are static metadata, so they travel through ``jit`` /
+``scan`` carries / ``shard_map`` unchanged.  The storage layer underneath
+remains ``core/pserver.py``'s ``DistributedMatrix`` / ``DistributedVector``
+(row-cyclic layout, paper section 2.2); constructing those directly
+outside ``repro/ps`` is deprecated and gated in CI.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pserver import DistributedMatrix, DistributedVector
+from repro.ps.backend import Backend, InProcessBackend, SpmdBackend
+from repro.ps.routes import DenseRoute, PushRoute, Reassign
+
+
+@jax.tree_util.register_pytree_node_class
+class PullHandle:
+    """Future for an issued pull (Glint's asynchronous read, section 2.3).
+
+    JAX dispatch is asynchronous: the gather/slice behind this handle is
+    already in flight (or, under ``jit``, schedulable by XLA wherever it
+    overlaps best) when the handle is constructed.  ``result()`` awaits
+    the value.  Registered as a pytree so an in-flight pull can ride a
+    ``scan`` carry across loop iterations -- the executor's double buffer.
+    """
+
+    def __init__(self, value: jax.Array):
+        self._value = value
+
+    def result(self) -> jax.Array:
+        """Await and return the pulled rows."""
+        return self._value
+
+    # Glint naming; identical semantics.
+    wait = result
+
+    def tree_flatten(self):
+        return (self._value,), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0])
+
+    def __repr__(self):
+        return f"PullHandle(shape={getattr(self._value, 'shape', None)})"
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class MatrixHandle:
+    """Client handle for one distributed matrix (Glint's ``BigMatrix``).
+
+    ``storage`` is the row-cyclic physical matrix; ``client`` (backend,
+    defaults) and ``route`` (push policy) are static metadata.  All reads
+    return ``PullHandle`` futures; all writes return a new handle
+    (functional updates -- the in-process analogue of an acknowledged
+    push).
+    """
+
+    storage: DistributedMatrix
+    client: "PSClient"
+    route: PushRoute
+
+    # --- pytree plumbing (client/route are static) ---
+    def tree_flatten(self):
+        return (self.storage,), (self.client, self.route)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux[0], aux[1])
+
+    # --- storage mirror ---------------------------------------------------
+    @property
+    def value(self) -> jax.Array:
+        """Physical (cyclic-ordered) array, [pad_rows, cols]."""
+        return self.storage.value
+
+    @property
+    def num_rows(self) -> int:
+        return self.storage.num_rows
+
+    @property
+    def num_shards(self) -> int:
+        return self.storage.num_shards
+
+    @property
+    def cols(self) -> int:
+        return self.storage.cols
+
+    @property
+    def layout(self):
+        return self.storage.layout
+
+    def spec(self, axis):
+        return self.storage.spec(axis)
+
+    def to_dense(self) -> jax.Array:
+        return self.storage.to_dense()
+
+    def num_blocks(self, rows_per_block: int) -> int:
+        return self.storage.num_blocks(rows_per_block)
+
+    def block_logical_rows(self, block, rows_per_block: int) -> jax.Array:
+        return self.storage.block_logical_rows(block, rows_per_block)
+
+    def with_value(self, value: jax.Array) -> "MatrixHandle":
+        """Same handle over replaced physical storage (client/route kept)."""
+        return dataclasses.replace(
+            self, storage=dataclasses.replace(self.storage, value=value))
+
+    def with_route(self, route: PushRoute) -> "MatrixHandle":
+        return dataclasses.replace(self, route=route)
+
+    # --- pulls (all asynchronous: they return futures) --------------------
+    def pull(self, rows: jax.Array) -> PullHandle:
+        """Pull logical rows (idempotent read, paper section 2.3)."""
+        return PullHandle(self.storage.pull(rows))
+
+    def pull_block(self, block, rows_per_block: int) -> PullHandle:
+        """Pull a contiguous physical block -- the pipelined executor's
+        prefetch unit (paper section 3.4)."""
+        return PullHandle(self.storage.pull_block(block, rows_per_block))
+
+    def pull_all(self) -> PullHandle:
+        """Pull the full dense logical matrix (the snapshot pull; under
+        ``SpmdBackend`` this is the all-gather over the server axis)."""
+        full = self.client.backend.pull_full(self.storage)
+        return PullHandle(full.to_dense())
+
+    # --- pushes -----------------------------------------------------------
+    def push(self, re: Reassign, *, use_kernels: bool = False,
+             interpret: Optional[bool] = None) -> "MatrixHandle":
+        """Push a reassignment batch through the handle's ``PushRoute``.
+
+        The route plans the traffic (dense / coordinate / hybrid), the
+        backend reduces worker deltas exactly once (identity in-process,
+        ``psum`` under SPMD).  A cross-worker reduction needs elementwise-
+        alignable deltas, so when one is configured the plan is
+        materialised densely first; in-process, the coordinate part is
+        applied compressed -- the paper's per-reassignment message.
+        """
+        interpret = self.client.interpret if interpret is None else interpret
+        backend = self.client.backend
+        if backend.axis_name is not None:
+            dense = self.route.block_delta(
+                re, self.num_rows, self.cols, use_kernels=use_kernels,
+                prefix_rows=True, interpret=interpret)
+            return self.push_dense(backend.reduce(dense))
+        plan = self.route.plan(re, self.num_rows, self.cols,
+                               use_kernels=use_kernels, prefix_rows=True,
+                               interpret=interpret)
+        out = self
+        if plan.dense is not None:
+            out = out.push_dense(plan.dense)
+        if plan.coo is not None:
+            rows, cols, vals = plan.coo
+            out = out.push_coo(rows, cols, vals,
+                               use_kernel=self.route.coo_kernel(use_kernels),
+                               interpret=interpret)
+        return out
+
+    def push_dense(self, delta_dense: jax.Array) -> "MatrixHandle":
+        """Push a dense logical [num_rows, cols] delta."""
+        return dataclasses.replace(
+            self, storage=self.storage.push_dense(delta_dense))
+
+    def push_rows(self, rows: jax.Array, deltas: jax.Array) -> "MatrixHandle":
+        """Push row deltas to logical rows (duplicates accumulate)."""
+        return dataclasses.replace(self,
+                                   storage=self.storage.push(rows, deltas))
+
+    def push_coo(self, rows: jax.Array, cols: jax.Array, vals: jax.Array, *,
+                 use_kernel: bool = False,
+                 interpret: Optional[bool] = None) -> "MatrixHandle":
+        """Push compressed ``(row, col, +/-value)`` coordinate deltas.
+
+        Guards the storage layer's padding-row invariant: logical row ids
+        ``>= num_rows`` (fixed-size buffers padded with arbitrary ids, or
+        ids beyond ``pad_rows`` that would *alias a real row* under the
+        cyclic physical map) are masked to value-0 no-ops here, in the
+        client, so ``DistributedMatrix.push_sparse`` only ever sees
+        in-range traffic.
+        """
+        interpret = self.client.interpret if interpret is None else interpret
+        vals = jnp.where(rows < self.num_rows, vals, 0)
+        rows = jnp.where(rows < self.num_rows, rows, 0)
+        return dataclasses.replace(
+            self, storage=self.storage.push_sparse(
+                rows, cols, vals, use_kernel=use_kernel,
+                interpret=interpret))
+
+    def store_block(self, block, rows: jax.Array,
+                    rows_per_block: int) -> "MatrixHandle":
+        """Write back a physical block previously pulled by its exclusive
+        owner (``rows`` replaces the block).  This is the pipelined
+        executor's group-boundary merge: legal because blocks own disjoint
+        physical rows, so pulled-rows + local-delta *is* the push."""
+        new = jax.lax.dynamic_update_slice_in_dim(
+            self.storage.value, rows, block * rows_per_block, axis=0)
+        return self.with_value(new)
+
+    def push_block(self, block, delta_rows: jax.Array,
+                   rows_per_block: int) -> "MatrixHandle":
+        """Additive push of a [rows_per_block, cols] delta to one physical
+        block (pull + add + store; prefer ``store_block`` when the pulled
+        rows are already in hand)."""
+        cur = self.storage.pull_block(block, rows_per_block)
+        return self.store_block(block, cur + delta_rows.astype(cur.dtype),
+                                rows_per_block)
+
+    # --- backend moments --------------------------------------------------
+    def localize(self) -> "MatrixHandle":
+        """Keep only this server shard's rows (SPMD write-back)."""
+        return dataclasses.replace(
+            self, storage=self.client.backend.localize(self.storage))
+
+    # --- serving ----------------------------------------------------------
+    def read_view(self) -> "ReadOnlyView":
+        """Read-only snapshot view of this handle (serving side)."""
+        return ReadOnlyView(self)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class VectorHandle:
+    """Client handle for one distributed vector (Glint's ``BigVector``).
+
+    For LDA this holds ``n_k`` -- tiny and read by every sampling step, so
+    the natural placement is replicated and pushes reduce over workers."""
+
+    storage: DistributedVector
+    client: "PSClient"
+
+    def tree_flatten(self):
+        return (self.storage,), (self.client,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux[0])
+
+    @property
+    def value(self) -> jax.Array:
+        return self.storage.value
+
+    def with_value(self, value: jax.Array) -> "VectorHandle":
+        return dataclasses.replace(self, storage=DistributedVector(value))
+
+    def pull(self, idx: jax.Array) -> PullHandle:
+        return PullHandle(self.storage.pull(idx))
+
+    def pull_all(self) -> PullHandle:
+        return PullHandle(self.storage.value)
+
+    def push(self, idx: jax.Array, deltas: jax.Array) -> "VectorHandle":
+        return dataclasses.replace(self, storage=self.storage.push(idx,
+                                                                   deltas))
+
+    def push_dense(self, delta: jax.Array) -> "VectorHandle":
+        """Push a dense delta, reduced exactly once over workers."""
+        delta = self.client.backend.reduce(delta)
+        return dataclasses.replace(self,
+                                   storage=self.storage.push_dense(delta))
+
+
+@dataclasses.dataclass(frozen=True)
+class ReadOnlyView:
+    """Read-only snapshot view of a ``MatrixHandle`` (DESIGN.md sec. 3).
+
+    The serving-side face of a handle: pulls only.  The snapshot
+    publisher freezes one of these per published version; any attempt to
+    push through a view is a programming error and raises."""
+
+    handle: MatrixHandle
+
+    @property
+    def num_rows(self) -> int:
+        return self.handle.num_rows
+
+    @property
+    def cols(self) -> int:
+        return self.handle.cols
+
+    def pull(self, rows: jax.Array) -> PullHandle:
+        return self.handle.pull(rows)
+
+    def pull_block(self, block, rows_per_block: int) -> PullHandle:
+        return self.handle.pull_block(block, rows_per_block)
+
+    def to_dense(self) -> jax.Array:
+        return self.handle.pull_all().result()
+
+    def push(self, *a, **k):
+        raise TypeError("ReadOnlyView is read-only: serving snapshots "
+                        "never push (publish from the training handle)")
+
+    push_dense = push_coo = store_block = push_rows = push
+
+
+@dataclasses.dataclass(frozen=True)
+class PSClient:
+    """The parameter-server client factory (Glint's ``Client``).
+
+    ``backend`` supplies the collectives (``InProcessBackend`` /
+    ``SpmdBackend``); ``interpret`` is the client-level Pallas-interpret
+    default threaded to every kernel call issued through handles (None:
+    resolved by ``kernels.ops.default_interpret`` -- the ``REPRO_INTERPRET``
+    env var, else interpret-on-CPU / compiled-on-TPU).
+    """
+
+    backend: Backend = InProcessBackend()
+    num_shards: int = 1
+    interpret: Optional[bool] = None
+
+    @classmethod
+    def create(cls, num_shards: int = 1, *, mesh=None, axis_name=None,
+               model_axis: Optional[str] = None,
+               interpret: Optional[bool] = None) -> "PSClient":
+        """Build a client; the backend is inferred from the mesh arguments.
+
+        No mesh/axes: ``InProcessBackend`` (single device).  Any of
+        ``mesh`` / ``axis_name`` / ``model_axis``: ``SpmdBackend`` for use
+        under ``shard_map`` -- ``axis_name`` defaults to all of the mesh's
+        axes (every shard is a worker), ``model_axis`` names the server
+        axis holding the cyclic ``n_wk`` rows.
+        """
+        if mesh is None and axis_name is None and model_axis is None:
+            backend: Backend = InProcessBackend()
+        else:
+            if axis_name is None and mesh is not None:
+                axis_name = tuple(mesh.axis_names)
+            if isinstance(axis_name, list):
+                axis_name = tuple(axis_name)
+            backend = SpmdBackend(axis_name=axis_name, model_axis=model_axis)
+        return cls(backend=backend, num_shards=num_shards,
+                   interpret=interpret)
+
+    def with_backend(self, backend: Backend) -> "PSClient":
+        return dataclasses.replace(self, backend=backend)
+
+    # --- matrix factories (the only sanctioned construction points) ------
+    def matrix(self, rows: int, cols: int, dtype=jnp.int32, *,
+               route: PushRoute = DenseRoute()) -> MatrixHandle:
+        """Allocate a zeroed [rows, cols] distributed matrix."""
+        return MatrixHandle(
+            DistributedMatrix.zeros(rows, cols, self.num_shards, dtype),
+            self, route)
+
+    def matrix_from_dense(self, dense: jax.Array, *,
+                          route: PushRoute = DenseRoute()) -> MatrixHandle:
+        """Wrap a dense logical matrix (rows scattered cyclically)."""
+        return MatrixHandle(
+            DistributedMatrix.from_dense(dense, self.num_shards), self,
+            route)
+
+    def wrap_matrix(self, value: Union[jax.Array, DistributedMatrix],
+                    num_rows: Optional[int] = None, *,
+                    route: PushRoute = DenseRoute()) -> MatrixHandle:
+        """Adopt existing physical (cyclic-ordered) storage into a handle.
+
+        ``value`` is either a ``DistributedMatrix`` or a raw physical
+        array (then ``num_rows`` is required) -- the bridge for storage
+        arriving from a ``shard_map`` boundary or a checkpoint.
+        """
+        if isinstance(value, DistributedMatrix):
+            storage = value
+        else:
+            assert num_rows is not None, "num_rows required for raw arrays"
+            storage = DistributedMatrix(value, num_rows, self.num_shards)
+        return MatrixHandle(storage, self, route)
+
+    # --- vector factories -------------------------------------------------
+    def vector(self, n: int, dtype=jnp.int32) -> VectorHandle:
+        return VectorHandle(DistributedVector.zeros(n, dtype), self)
+
+    def wrap_vector(self, value: Union[jax.Array, DistributedVector]
+                    ) -> VectorHandle:
+        if not isinstance(value, DistributedVector):
+            value = DistributedVector(value)
+        return VectorHandle(value, self)
+
+
+def client_for(cfg, *, mesh=None, axis_name=None,
+               model_axis: Optional[str] = None) -> PSClient:
+    """Client matching an ``LDAConfig`` (shard count + interpret default)."""
+    return PSClient.create(num_shards=cfg.num_shards, mesh=mesh,
+                           axis_name=axis_name, model_axis=model_axis,
+                           interpret=cfg.kernel_interpret)

@@ -1,0 +1,203 @@
+"""Declarative push routes (paper section 3.3 as policy objects).
+
+A ``PushRoute`` decides *how a batch of topic reassignments travels to the
+parameter server*: fully dense (the MXU-friendly generalisation of the
+paper's hot-word buffer), fully compressed ``(row, col, +/-1)`` coordinate
+deltas (the paper's 100k-reassignment message), or the paper's actual
+hybrid — dense for the ``H`` hottest words, coordinates for the cold tail.
+Because every route is integer addition underneath, the choice never
+changes values, only traffic shape; the executors and tests rely on that
+invariance.
+
+Routes replace the ``hot_words=...`` / ``use_kernel=...`` kwargs that used
+to thread through every sweep signature: the policy lives on the route
+object, the mechanism in ``MatrixHandle.push`` / the executors.
+
+  * ``DenseRoute()``              -- everything through the dense path;
+  * ``CooRoute(use_kernel=...)``  -- everything as coordinate deltas,
+    applied server-side by scatter-add or the ``delta_apply_coo`` one-hot
+    MXU kernel;
+  * ``HybridRoute(hot_words=H)``  -- paper section 3.3 verbatim: hot
+    prefix dense, cold tail as coordinates.
+
+``plan`` produces the traffic plan (dense part + coordinate part);
+``block_delta`` materialises it into one dense delta for callers that
+merge group-locally (the pipelined executor's block write-back).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import delta_push as _delta
+
+
+class Reassign(NamedTuple):
+    """One batch of topic reassignments, the unit every route consumes.
+
+    ``rows`` are row ids in the *aggregation space* (logical word ids for a
+    full-matrix push, block-local physical ids inside the pipelined
+    executor); ``words`` are always the logical word ids — the hot/cold
+    boundary of ``HybridRoute`` classifies on these (frequency-ordered, so
+    hot words are an id prefix).  ``changed`` already folds in validity:
+    masked-out tokens contribute nothing on any route.
+    """
+
+    rows: jax.Array     # [B] int32, aggregation-space row ids
+    words: jax.Array    # [B] int32, logical word ids (hot/cold split)
+    z_old: jax.Array    # [B] int32
+    z_new: jax.Array    # [B] int32
+    changed: jax.Array  # [B] bool, True where z_old != z_new and valid
+
+
+class RouteDelta(NamedTuple):
+    """A route's traffic plan for one ``Reassign`` batch.
+
+    ``dense`` is a ``[num_rows, K]`` int32 delta (or None when the route
+    sends nothing densely); ``coo`` is a compressed
+    ``(rows, cols, +/-1 vals)`` triple in the aggregation row space (or
+    None).  Value-0 coordinate entries are padding and apply as no-ops.
+    """
+
+    dense: Optional[jax.Array]
+    coo: Optional[Tuple[jax.Array, jax.Array, jax.Array]]
+
+
+def _dense_delta(rows, z_old, z_new, amount, num_rows: int, num_topics: int,
+                 *, use_kernels: bool, interpret: Optional[bool]):
+    """Dense [num_rows, K] delta for the masked reassignments ``amount``."""
+    if use_kernels:
+        from repro.kernels import ops as kops
+        return kops.delta_push(rows, z_old, z_new, amount, num_rows,
+                               num_topics, interpret=interpret)
+    amt = amount.astype(jnp.int32)
+    return (jnp.zeros((num_rows, num_topics), jnp.int32)
+            .at[rows, z_old].add(-amt).at[rows, z_new].add(amt))
+
+
+@dataclasses.dataclass(frozen=True)
+class PushRoute:
+    """Base policy.  Subclasses define ``plan``; ``block_delta`` is the
+    shared materialisation used by group-local merges."""
+
+    def plan(self, re: Reassign, num_rows: int, num_topics: int, *,
+             use_kernels: bool = False, prefix_rows: bool = False,
+             interpret: Optional[bool] = None) -> RouteDelta:
+        """Plan the traffic for one batch.  ``prefix_rows=True`` tells the
+        route that ``re.rows`` are the logical word ids themselves (hot
+        words form an id prefix -- enables the hybrid's prefix-sized
+        kernel); it never changes values."""
+        raise NotImplementedError
+
+    def coo_kernel(self, use_kernels: bool) -> bool:
+        """Whether the server applies this route's COO part through the
+        ``delta_apply_coo`` kernel (subclasses may pin it)."""
+        return use_kernels
+
+    def block_delta(self, re: Reassign, num_rows: int, num_topics: int, *,
+                    use_kernels: bool = False, prefix_rows: bool = False,
+                    interpret: Optional[bool] = None) -> jax.Array:
+        """Materialise ``plan`` as one dense [num_rows, K] int32 delta."""
+        d = self.plan(re, num_rows, num_topics, use_kernels=use_kernels,
+                      prefix_rows=prefix_rows, interpret=interpret)
+        dense = (jnp.zeros((num_rows, num_topics), jnp.int32)
+                 if d.dense is None else d.dense)
+        if d.coo is not None:
+            rows, cols, vals = d.coo
+            if self.coo_kernel(use_kernels):
+                from repro.kernels import ops as kops
+                dense = dense + kops.delta_apply_coo(
+                    rows, cols, vals, num_rows, num_topics,
+                    interpret=interpret)
+            else:
+                dense = dense.at[rows, cols].add(vals)
+        return dense
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseRoute(PushRoute):
+    """All words through the dense path (the pre-hybrid default: the
+    paper's hot-word buffer generalised to the whole matrix)."""
+
+    def plan(self, re: Reassign, num_rows: int, num_topics: int, *,
+             use_kernels: bool = False, prefix_rows: bool = False,
+             interpret: Optional[bool] = None) -> RouteDelta:
+        return RouteDelta(
+            _dense_delta(re.rows, re.z_old, re.z_new, re.changed, num_rows,
+                         num_topics, use_kernels=use_kernels,
+                         interpret=interpret), None)
+
+
+@dataclasses.dataclass(frozen=True)
+class CooRoute(PushRoute):
+    """Every reassignment as a compressed coordinate delta -- the paper's
+    per-reassignment message with no dense buffer at all.  ``use_kernel``
+    pins the server-side application (None: follow the caller's kernel
+    setting)."""
+
+    use_kernel: Optional[bool] = None
+
+    def coo_kernel(self, use_kernels: bool) -> bool:
+        return use_kernels if self.use_kernel is None else self.use_kernel
+
+    def plan(self, re: Reassign, num_rows: int, num_topics: int, *,
+             use_kernels: bool = False, prefix_rows: bool = False,
+             interpret: Optional[bool] = None) -> RouteDelta:
+        rows, cols, vals = _delta.cold_coo(re.rows, re.z_old, re.z_new,
+                                           re.changed)
+        return RouteDelta(None, (rows, cols, vals))
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridRoute(PushRoute):
+    """Paper section 3.3 verbatim: the ``hot_words`` hottest words (a
+    logical-id prefix under frequency ordering) aggregate densely, the
+    cold tail travels as coordinate deltas."""
+
+    hot_words: int = 2000
+    use_kernel: Optional[bool] = None
+
+    def coo_kernel(self, use_kernels: bool) -> bool:
+        return use_kernels if self.use_kernel is None else self.use_kernel
+
+    def plan(self, re: Reassign, num_rows: int, num_topics: int, *,
+             use_kernels: bool = False, prefix_rows: bool = False,
+             interpret: Optional[bool] = None) -> RouteDelta:
+        hot_m, cold_m = _delta.split_hot_cold(re.words, re.changed,
+                                              self.hot_words)
+        dense = None
+        if self.hot_words > 0:
+            if (prefix_rows and use_kernels
+                    and self.hot_words < num_rows):
+                # rows ARE the logical word ids, so the hot words occupy
+                # the id prefix: aggregate over [0, H) only and pad --
+                # identical values, V/H fewer kernel vocab tiles
+                from repro.kernels import ops as kops
+                d_hot = kops.delta_push(re.rows, re.z_old, re.z_new, hot_m,
+                                        self.hot_words, num_topics,
+                                        interpret=interpret)
+                dense = jnp.pad(d_hot,
+                                ((0, num_rows - self.hot_words), (0, 0)))
+            else:
+                dense = _dense_delta(re.rows, re.z_old, re.z_new, hot_m,
+                                     num_rows, num_topics,
+                                     use_kernels=use_kernels,
+                                     interpret=interpret)
+        rows, cols, vals = _delta.cold_coo(re.rows, re.z_old, re.z_new,
+                                           cold_m)
+        return RouteDelta(dense, (rows, cols, vals))
+
+
+def route_for(hot_words: Optional[int], vocab_size: int) -> PushRoute:
+    """Map the legacy ``hot_words`` knob onto a route.
+
+    ``None`` (or a boundary covering the whole vocabulary) is the dense
+    path, ``0`` all-coordinates, anything else the paper's hybrid."""
+    if hot_words is None or hot_words >= vocab_size:
+        return DenseRoute()
+    if hot_words <= 0:
+        return CooRoute()
+    return HybridRoute(hot_words=int(hot_words))

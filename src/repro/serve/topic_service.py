@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import ps
 from repro.core import lightlda as lda
 from repro.infer.engine import EngineConfig, QueryEngine, Result
 from repro.infer.snapshot import Snapshot, SnapshotPublisher
@@ -30,14 +31,19 @@ from repro.infer.snapshot import Snapshot, SnapshotPublisher
 
 @dataclasses.dataclass
 class TopicService:
+    """``route`` selects the training push policy (``ps.DenseRoute`` /
+    ``ps.CooRoute`` / ``ps.HybridRoute``; None: dense)."""
+
     cfg: lda.LDAConfig
     ecfg: EngineConfig = EngineConfig()
     state: Optional[lda.SamplerState] = None
+    route: Optional[ps.PushRoute] = None
 
     def __post_init__(self):
         self.publisher = SnapshotPublisher(self.cfg)
         self.engine = QueryEngine(self.publisher, self.ecfg)
-        self._sweep = jax.jit(lambda s, k: lda.sweep(s, k, self.cfg))
+        self._sweep = jax.jit(
+            lambda s, k: lda.sweep(s, k, self.cfg, route=self.route))
 
     # -- training side ---------------------------------------------------
     def init_from_corpus(self, corp, seed: int = 0) -> None:

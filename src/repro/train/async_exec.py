@@ -4,44 +4,46 @@ The paper's headline numbers come from its *asynchronous* workload shape:
 workers sample against a bounded-stale snapshot while pulls and pushes are
 still in flight, and reassignment deltas are buffered -- the hottest words
 aggregated densely, the cold tail shipped as per-reassignment messages.
-This module is that schedule, made deterministic for SPMD JAX:
+This module is that schedule, made deterministic for SPMD JAX and
+expressed entirely through the Glint-style client API (``repro.ps``):
+the executor holds ``MatrixHandle``/``VectorHandle``s, prefetches through
+``PullHandle`` futures, and merges through the handle's ``PushRoute``.
 
 **Staleness bound ``s``.**  Block ``i`` samples against a view of
 ``(n_k, n_dk, z)`` that is missing the deltas of the ``s`` most recent
 blocks -- those pushes are "in flight".  Because block deltas only commute
-(addition, paper section 2.5), any merge order is exactly-once-correct; the
-bound makes the paper's unstructured asynchrony testable: ``s = 0`` is the
-synchronous schedule and must match ``lightlda.sweep_blocked_ref`` bitwise
-(asserted in tests/test_async_exec.py).  Blocks whose in-flight windows
-overlap are mutually independent, so the executor runs each *group* of
-``s + 1`` consecutive blocks as one fused, vectorised sampling step and
-merges all of the group's deltas at the boundary -- fewer, larger device
-ops and one cross-worker reduction per group instead of per block.
+(addition, paper section 2.5), any merge order is exactly-once-correct;
+the bound makes the paper's unstructured asynchrony testable: ``s = 0`` is
+the synchronous schedule and must match ``lightlda.sweep_blocked_ref``
+bitwise (asserted in tests/test_async_exec.py).  Blocks whose in-flight
+windows overlap are mutually independent, so the executor runs each
+*group* of ``s + 1`` consecutive blocks as one fused, vectorised sampling
+step and merges all of the group's deltas at the boundary -- fewer, larger
+device ops and one cross-worker reduction per group instead of per block.
 
-**Double-buffered pulls.**  While a group samples, the next group's
-``n_wk`` rows are pulled (``DistributedMatrix.pull_block``).  The prefetch
-is *exact*, not just statistically tolerable: a group's write-back (hot
-dense slice and cold coordinate push alike) only ever touches its own
-physical rows, so the next group's rows cannot change while the pull is in
-flight.  XLA is free to overlap the slice-pull with the Metropolis-Hastings
-chain; on a pod the pull is the cross-server collective of paper
-section 3.4.
+**Double-buffered pulls, as futures.**  While a group samples, the next
+group's ``n_wk`` rows are in flight as a ``PullHandle`` riding the scan
+carry: ``issue (pull_block) -> overlap (sample) -> await (result)``.  The
+prefetch is *exact*, not just statistically tolerable: a group's
+write-back only ever touches its own physical rows, so the next group's
+rows cannot change while the pull is in flight.  XLA is free to overlap
+the slice-pull with the Metropolis-Hastings chain; on a pod the pull is
+the cross-server collective of paper section 3.4.
 
-**Hybrid dense/sparse delta push (paper section 3.3).**  Words are
-frequency-ordered, so the hottest ``H`` words are a logical-id prefix.
-Their reassignments aggregate through the dense one-hot MXU kernel
-(kernels/delta_push.py); the cold tail is emitted as compressed
-``(row, col, +/-1)`` coordinate deltas -- the paper's 100k-reassignment
-buffer -- and applied through ``DistributedMatrix.push_sparse``.  Both
-halves are integer additions, so the hybrid split never changes results,
-only traffic shape.
+**Routed delta push (paper section 3.3).**  The group-boundary merge goes
+through a declarative ``PushRoute`` -- ``DenseRoute`` (all words through
+the dense MXU path), ``CooRoute`` (everything as compressed
+``(row, col, +/-1)`` coordinates), or ``HybridRoute(hot_words=H)`` (the
+paper's split: hot prefix dense, cold tail as the 100k-reassignment
+message).  All routes are integer additions underneath, so the choice
+never changes results, only traffic shape.
 
 Entry points:
   * ``pipelined_sweep``  -- the blocked model-parallel executor (the
     generalisation of ``lightlda.sweep_blocked``; worker memory
     O(group x K), the Web-scale path),
   * ``snapshot_sweep``   -- the full-snapshot executor (the generalisation
-    of ``lightlda.sweep``; used by the SPMD distributed launcher),
+    of ``lightlda.sweep``; collectives supplied by the handle's backend),
   * ``make_executor``    -- host-side factory the launchers and
     ``train.loop.fit_lda`` drive.
 """
@@ -54,10 +56,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import ps
 from repro.core import alias as alias_mod
 from repro.core import lightlda as lda
-from repro.core.pserver import DistributedMatrix, DistributedVector
-from repro.kernels import delta_push as _delta
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,9 +67,9 @@ class ExecConfig:
 
     ``staleness``: how many block deltas may be in flight while a block
     samples; 0 reproduces the synchronous schedule exactly.
-    ``hot_words``: hot/cold boundary H of the hybrid delta push; ``None``
-    routes every word through the dense path (today's behaviour), 0 sends
-    everything as coordinate deltas.
+    ``route``: the declarative push policy (``ps.DenseRoute`` /
+    ``ps.CooRoute`` / ``ps.HybridRoute``); ``hot_words`` is the legacy
+    scalar knob mapped through ``ps.route_for`` when ``route`` is None.
     ``model_blocks``: >0 selects the blocked executor (``pipelined_sweep``)
     with the model pulled in that many blocks; 0 selects the full-snapshot
     executor (``snapshot_sweep``).
@@ -77,6 +78,12 @@ class ExecConfig:
     staleness: int = 0
     hot_words: Optional[int] = None
     model_blocks: int = 0
+    route: Optional[ps.PushRoute] = None
+
+    def resolve_route(self, vocab_size: int) -> ps.PushRoute:
+        if self.route is not None:
+            return self.route
+        return ps.route_for(self.hot_words, vocab_size)
 
 
 def effective_staleness(n_blocks: int, staleness: int) -> int:
@@ -96,42 +103,37 @@ def effective_staleness(n_blocks: int, staleness: int) -> int:
 # Shared pieces.
 # ---------------------------------------------------------------------------
 
+def token_deltas(d_b, z_old, z_new, changed, num_docs: int, num_topics: int
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """The worker-local halves of a reassignment batch: (d_nk [K],
+    d_ndk [num_docs, K]).  These never route -- ``n_k`` reduces over
+    workers, ``n_dk`` stays with the document's owner (paper section 3)."""
+    amt = changed.astype(jnp.int32)
+    d_nk = (jnp.zeros((num_topics,), jnp.int32)
+            .at[z_old].add(-amt).at[z_new].add(amt))
+    d_ndk = (jnp.zeros((num_docs, num_topics), jnp.int32)
+             .at[d_b, z_old].add(-amt).at[d_b, z_new].add(amt))
+    return d_nk, d_ndk
+
+
 def hybrid_count_deltas(w_b, d_b, z_old, z_new, valid_b, num_docs: int,
                         hot_words: int, cfg: "lda.LDAConfig",
-                        use_kernel: bool = False, interpret: bool = True
+                        use_kernel: bool = False,
+                        interpret: Optional[bool] = None
                         ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """``lightlda.count_deltas`` with the hybrid hot/cold word split.
+    """Block-level count deltas with the hybrid hot/cold word split.
 
-    The top-``hot_words`` words aggregate densely (one-hot MXU kernel or
-    scatter); the cold tail is compressed to coordinate deltas and applied
-    sparsely.  Same (d_nwk [V,K], d_nk [K], d_ndk [D,K]) contract and --
+    Legacy entry point, now a thin wrapper over ``ps.route_for``: the
+    top-``hot_words`` words aggregate densely, the cold tail as coordinate
+    deltas.  Same (d_nwk [V,K], d_nk [K], d_ndk [D,K]) contract and --
     addition being exact on int32 -- the same values for every ``H``.
     """
     changed = (z_old != z_new) & valid_b
-    amt = changed.astype(jnp.int32)
-    hot_m, cold_m = _delta.split_hot_cold(w_b, changed, hot_words)
-    amt_hot = hot_m.astype(jnp.int32)
-    if hot_words > 0:
-        if use_kernel:
-            from repro.kernels import ops as kops
-            d_hot = kops.delta_push(w_b, z_old, z_new, hot_m, hot_words,
-                                    cfg.K, interpret=interpret)
-        else:
-            # out-of-range (cold) rows are dropped by the scatter; their
-            # amt_hot is 0 anyway
-            d_hot = (jnp.zeros((hot_words, cfg.K), jnp.int32)
-                     .at[w_b, z_old].add(-amt_hot)
-                     .at[w_b, z_new].add(amt_hot))
-        d_nwk = jnp.pad(d_hot, ((0, cfg.V - hot_words), (0, 0)))
-    else:
-        d_nwk = jnp.zeros((cfg.V, cfg.K), jnp.int32)
-    rows, cols, vals = _delta.cold_coo(w_b, z_old, z_new, cold_m)
-    d_nwk = d_nwk.at[rows, cols].add(vals)
-
-    d_nk = (jnp.zeros((cfg.K,), jnp.int32)
-            .at[z_old].add(-amt).at[z_new].add(amt))
-    d_ndk = (jnp.zeros((num_docs, cfg.K), jnp.int32)
-             .at[d_b, z_old].add(-amt).at[d_b, z_new].add(amt))
+    route = ps.route_for(hot_words, cfg.V)
+    d_nwk = route.block_delta(
+        ps.Reassign(w_b, w_b, z_old, z_new, changed), cfg.V, cfg.K,
+        use_kernels=use_kernel, prefix_rows=True, interpret=interpret)
+    d_nk, d_ndk = token_deltas(d_b, z_old, z_new, changed, num_docs, cfg.K)
     return d_nwk, d_nk, d_ndk
 
 
@@ -143,23 +145,25 @@ def pipelined_sweep(state: "lda.SamplerState", key: jax.Array,
                     cfg: "lda.LDAConfig", block_idx: jax.Array,
                     block_valid: jax.Array, rows_per_block: int,
                     staleness: int = 0,
-                    hot_words: Optional[int] = None) -> "lda.SamplerState":
-    """One staleness-bounded, double-buffered, hybrid-push blocked sweep.
+                    hot_words: Optional[int] = None,
+                    route: Optional[ps.PushRoute] = None
+                    ) -> "lda.SamplerState":
+    """One staleness-bounded, double-buffered, routed blocked sweep.
 
     Schedule per group of ``s + 1`` consecutive model blocks (see module
     docstring for why group-mates are independent):
 
-      1. the group's ``n_wk`` rows arrive from the previous step's
-         prefetch; the *next* group's pull is issued immediately
-         (``pull_block``), overlapping the sampling below;
+      1. the group's ``n_wk`` rows arrive by awaiting the previous step's
+         ``PullHandle``; the *next* group's pull is issued immediately
+         (``MatrixHandle.pull_block``), overlapping the sampling below;
       2. alias tables are built for the group's rows only (worker memory
          O(group x K));
       3. all of the group's tokens are resampled in one fused MH chain
          against the group-start (bounded-stale) counts;
-      4. deltas merge at the group boundary: hot words through the dense
-         slice write-back, the cold tail through
-         ``DistributedMatrix.push_sparse``, and ``n_k``/``n_dk``/``z``
-         through duplicate-tolerant adds.
+      4. deltas merge at the group boundary: the ``PushRoute``
+         materialises the group-local delta (dense / COO-kernel / hybrid)
+         and ``MatrixHandle.store_block`` writes the owned rows back;
+         ``n_k``/``n_dk``/``z`` merge through duplicate-tolerant adds.
 
     ``staleness=0`` is bitwise-identical to ``lightlda.sweep_blocked_ref``.
     """
@@ -172,7 +176,8 @@ def pipelined_sweep(state: "lda.SamplerState", key: jax.Array,
     group = s + 1
     n_groups = n_blocks // group
     grp_rows = group * rpb
-    hot = cfg.V if hot_words is None else int(hot_words)
+    if route is None:
+        route = ps.route_for(hot_words, cfg.V)
 
     # Fuse each group of s+1 consecutive blocks into one scan step.  (The
     # host-side ``make_executor`` instead builds the token index directly
@@ -183,14 +188,15 @@ def pipelined_sweep(state: "lda.SamplerState", key: jax.Array,
     gcap = group * cap
 
     def group_body(carry, inp):
-        nwk_phys, nk, ndk, z_flat, rows = carry
+        nwk, nk, ndk, z_flat, pulled = carry
         grp, key_g = inp
 
-        # 1. double buffer: issue the next group's pull before sampling.
-        # Exact, not approximate: this group's write-back only touches its
-        # own physical rows, so the prefetched rows cannot be invalidated.
-        rows_next = DistributedMatrix(nwk_phys, cfg.V, cfg.num_shards) \
-            .pull_block((grp + 1) % n_groups, grp_rows)
+        # 1. double buffer: await this group's prefetched rows, issue the
+        # next group's pull before sampling.  Exact, not approximate: this
+        # group's write-back only touches its own physical rows, so the
+        # in-flight pull cannot be invalidated.
+        rows = pulled.result()
+        pulled_next = nwk.pull_block((grp + 1) % n_groups, grp_rows)
 
         # 2. alias tables for the group's rows only
         weights = (rows.astype(jnp.float32) + cfg.beta) / (
@@ -222,54 +228,32 @@ def pipelined_sweep(state: "lda.SamplerState", key: jax.Array,
                                  aalias, cfg)
         z_new = jnp.where(vb, z_new, z0)
 
-        # 4. group-boundary merge (duplicate-tolerant adds throughout)
+        # 4. group-boundary merge: the route materialises the group-local
+        # delta (hot dense slice, cold COO -- whatever the policy says);
+        # store_block writes the exclusively-owned rows back.
         changed = (z_new != z0) & vb
-        amt = changed.astype(jnp.int32)
-        hot_m, cold_m = _delta.split_hot_cold(wb, changed, hot)
-        amt_hot = hot_m.astype(jnp.int32)
-        if cfg.use_kernels:
-            from repro.kernels import ops as kops
-            d_rows = kops.delta_push(local, z0, z_new, hot_m, grp_rows,
-                                     cfg.K, interpret=cfg.kernel_interpret)
-            if hot < cfg.V:
-                # cold tail, kernel route: a group's cold words live in
-                # its own physical slice, so the COO buffer applies
-                # *group-locally* (O(grp_rows x K), never O(pad_rows x K))
-                _, ccols, cvals = _delta.cold_coo(wb, z0, z_new, cold_m)
-                lrows = jnp.concatenate([local, local])
-                d_rows = d_rows + kops.delta_apply_coo(
-                    lrows, ccols, cvals, grp_rows, cfg.K,
-                    interpret=cfg.kernel_interpret)
-        else:
-            d_rows = (jnp.zeros((grp_rows, cfg.K), jnp.int32)
-                      .at[local, z0].add(-amt_hot)
-                      .at[local, z_new].add(amt_hot))
-        nwk_phys = jax.lax.dynamic_update_slice_in_dim(
-            nwk_phys, rows + d_rows, grp * grp_rows, axis=0)
-        if hot < cfg.V and not cfg.use_kernels:
-            # cold tail, scatter route: compressed coordinate push through
-            # the server primitive (paper section 3.3's message buffer)
-            crows, ccols, cvals = _delta.cold_coo(wb, z0, z_new, cold_m)
-            nwk_phys = DistributedMatrix(nwk_phys, cfg.V, cfg.num_shards) \
-                .push_sparse(crows, ccols, cvals).value
+        d_rows = route.block_delta(
+            ps.Reassign(rows=local, words=wb, z_old=z0, z_new=z_new,
+                        changed=changed),
+            grp_rows, cfg.K, use_kernels=cfg.use_kernels,
+            interpret=cfg.kernel_interpret)
+        nwk = nwk.store_block(grp, rows + d_rows, grp_rows)
 
+        amt = changed.astype(jnp.int32)
         nk = nk + (jnp.zeros((cfg.K,), jnp.int32)
                    .at[z0].add(-amt).at[z_new].add(amt))
         ndk = ndk.at[db, z0].add(-amt).at[db, z_new].add(amt)
         z_flat = z_flat.at[idx].add(jnp.where(vb, z_new - z0, 0))
-        return (nwk_phys, nk, ndk, z_flat, rows_next), ()
+        return (nwk, nk, ndk, z_flat, pulled_next), ()
 
     keys = jax.random.split(key, n_groups)
-    rows0 = DistributedMatrix(state.nwk.value, cfg.V, cfg.num_shards) \
-        .pull_block(0, grp_rows)
-    carry = (state.nwk.value, state.nk.value, state.ndk, state.z, rows0)
-    (nwk_phys, nk, ndk, z, _), _ = jax.lax.scan(
+    pulled0 = state.nwk.pull_block(0, grp_rows)
+    carry = (state.nwk, state.nk.value, state.ndk, state.z, pulled0)
+    (nwk, nk, ndk, z, _), _ = jax.lax.scan(
         group_body, carry, (jnp.arange(n_groups), keys))
     return lda.SamplerState(state.w, state.d, z, state.valid,
-                            state.doc_start, state.doc_len,
-                            DistributedMatrix(nwk_phys, cfg.V,
-                                              cfg.num_shards),
-                            DistributedVector(nk), ndk)
+                            state.doc_start, state.doc_len, nwk,
+                            state.nk.with_value(nk), ndk)
 
 
 # ---------------------------------------------------------------------------
@@ -280,14 +264,22 @@ def snapshot_sweep(state: "lda.SamplerState", key: jax.Array,
                    cfg: "lda.LDAConfig",
                    axis_name=None, model_axis=None,
                    staleness: int = 0,
-                   hot_words: Optional[int] = None) -> "lda.SamplerState":
+                   hot_words: Optional[int] = None,
+                   route: Optional[ps.PushRoute] = None
+                   ) -> "lda.SamplerState":
     """One full-snapshot sweep with staleness-grouped token blocks.
 
     Identical to the classic ``lightlda.sweep`` schedule except that
     groups of ``staleness + 1`` consecutive token blocks are resampled as
     one fused step against the group-start counts, and the group's deltas
-    (hybrid hot/cold when ``hot_words`` is set) merge -- including the
-    cross-worker ``psum`` "push" -- once per group instead of per block.
+    (shaped by ``route``) merge -- including the cross-worker "push"
+    reduction -- once per group instead of per block.
+
+    The collectives come from ``state.nwk``'s client backend: an
+    ``SpmdBackend`` turns the snapshot pull into an all-gather over the
+    server axis and the delta merge into one ``psum`` over the worker
+    axes; in-process both are the identity.  The legacy
+    ``axis_name``/``model_axis`` kwargs override the handle's backend.
     ``staleness=0`` reproduces the per-block schedule exactly.
     """
     num_docs = state.ndk.shape[0]
@@ -297,16 +289,19 @@ def snapshot_sweep(state: "lda.SamplerState", key: jax.Array,
     group = s + 1
     n_groups = nblocks // group
     gtok = group * cfg.block_tokens
-    hot = cfg.V if hot_words is None else int(hot_words)
+    if route is None:
+        route = ps.route_for(hot_words, cfg.V)
+
+    # --- backend: the handle's client, unless legacy kwargs override ---
+    handle = state.nwk
+    if axis_name is not None or model_axis is not None:
+        client = handle.client.with_backend(
+            ps.SpmdBackend(axis_name=axis_name, model_axis=model_axis))
+        handle = ps.MatrixHandle(handle.storage, client, handle.route)
+    backend = handle.client.backend
 
     # --- snapshot "pull" (paper section 2.3 / 3.4) ---
-    if model_axis is not None:
-        phys = jax.lax.all_gather(state.nwk.value, model_axis, axis=0,
-                                  tiled=True)
-        nwk_full = DistributedMatrix(phys, cfg.V, cfg.num_shards)
-    else:
-        nwk_full = state.nwk
-    snapshot = nwk_full.to_dense()                      # [V, K] stale counts
+    snapshot = handle.pull_all().result()               # [V, K] stale counts
     nk_snap = state.nk.value                            # [K]
 
     # --- alias tables from the snapshot (paper section 3, ref [14]) ---
@@ -350,21 +345,20 @@ def snapshot_sweep(state: "lda.SamplerState", key: jax.Array,
                                  aprob_rows, aalias_rows, cfg)
         z_new = jnp.where(valid_b, z_new, z0)
 
-        # --- buffered delta aggregation + group-boundary merge (3.3) ---
-        if hot >= cfg.V:
-            d_nwk, d_nk, d_ndk = lda.count_deltas(
-                w_b, d_b, z0, z_new, valid_b, num_docs, cfg,
-                use_kernel=cfg.use_kernels, interpret=cfg.kernel_interpret)
-        else:
-            d_nwk, d_nk, d_ndk = hybrid_count_deltas(
-                w_b, d_b, z0, z_new, valid_b, num_docs, hot, cfg,
-                use_kernel=cfg.use_kernels, interpret=cfg.kernel_interpret)
-        if axis_name is not None:
-            # SPMD "push": sum deltas over the data-parallel workers --
-            # one collective per group, not per block.
-            d_nwk = jax.lax.psum(d_nwk, axis_name)
-            d_nk = jax.lax.psum(d_nk, axis_name)
-            # n_dk stays local: docs are owned by one worker (paper sec. 3).
+        # --- routed delta aggregation + group-boundary merge (3.3) ---
+        changed = (z0 != z_new) & valid_b
+        d_nwk = route.block_delta(
+            ps.Reassign(rows=w_b, words=w_b, z_old=z0, z_new=z_new,
+                        changed=changed),
+            cfg.V, cfg.K, use_kernels=cfg.use_kernels, prefix_rows=True,
+            interpret=cfg.kernel_interpret)
+        d_nk, d_ndk = token_deltas(d_b, z0, z_new, changed, num_docs,
+                                   cfg.K)
+        # SPMD "push": sum deltas over the workers -- one collective per
+        # group, not per block (identity in-process).
+        d_nwk = backend.reduce(d_nwk)
+        d_nk = backend.reduce(d_nk)
+        # n_dk stays local: docs are owned by one worker (paper sec. 3).
 
         z_flat = jax.lax.dynamic_update_slice_in_dim(
             z_flat, z_new, grp * gtok, axis=0)
@@ -375,20 +369,12 @@ def snapshot_sweep(state: "lda.SamplerState", key: jax.Array,
     (z, ndk, nwk_dense, nk), _ = jax.lax.scan(
         group_body, carry, (jnp.arange(n_groups), keys))
 
-    # --- write back to the server layout ---
-    new_full = DistributedMatrix.from_dense(nwk_dense, cfg.num_shards)
-    if model_axis is not None:
-        # Keep only this server shard's physical rows.
-        rps = new_full.layout.rows_per_shard
-        sidx = jax.lax.axis_index(model_axis)
-        local = jax.lax.dynamic_slice_in_dim(new_full.value, sidx * rps,
-                                             rps, axis=0)
-        new_nwk = DistributedMatrix(local, cfg.V, cfg.num_shards)
-    else:
-        new_nwk = new_full
+    # --- write back to the server layout (SPMD keeps only own rows) ---
+    new_nwk = handle.client.matrix_from_dense(
+        nwk_dense, route=handle.route).localize()
     return lda.SamplerState(state.w, state.d, z, state.valid,
                             state.doc_start, state.doc_len, new_nwk,
-                            DistributedVector(nk), ndk)
+                            state.nk.with_value(nk), ndk)
 
 
 # ---------------------------------------------------------------------------
@@ -401,8 +387,9 @@ def make_executor(state: "lda.SamplerState", cfg: "lda.LDAConfig",
 
     Returns ``(step_fn, info)`` where ``step_fn(state, key) -> state`` and
     ``info`` describes the realised schedule (block geometry, effective
-    staleness after divisor rounding, hot-word boundary).
+    staleness after divisor rounding, push route).
     """
+    route = exec_cfg.resolve_route(cfg.V)
     if exec_cfg.model_blocks > 0:
         layout = state.nwk.layout
         rpb = -(-layout.pad_rows // exec_cfg.model_blocks)
@@ -421,21 +408,19 @@ def make_executor(state: "lda.SamplerState", cfg: "lda.LDAConfig",
             np.asarray(state.w), np.asarray(state.valid), rpb_step, layout)
         idx, bval = jnp.asarray(idx), jnp.asarray(bval)
         step = jax.jit(lambda st, k: pipelined_sweep(
-            st, k, cfg, idx, bval, rpb_step, staleness=0,
-            hot_words=exec_cfg.hot_words))
+            st, k, cfg, idx, bval, rpb_step, staleness=0, route=route))
         info = {"mode": "blocked", "n_blocks": n_blocks,
                 "rows_per_block": rpb, "staleness": s,
                 "group": s + 1, "token_cap": int(idx.shape[1]),
-                "hot_words": exec_cfg.hot_words}
+                "hot_words": exec_cfg.hot_words, "route": repr(route)}
     else:
         n = state.w.shape[0]
         n_blocks = n // cfg.block_tokens
         s = effective_staleness(n_blocks, exec_cfg.staleness)
         step = jax.jit(lambda st, k: snapshot_sweep(
-            st, k, cfg, staleness=exec_cfg.staleness,
-            hot_words=exec_cfg.hot_words))
+            st, k, cfg, staleness=exec_cfg.staleness, route=route))
         info = {"mode": "snapshot", "n_blocks": n_blocks,
                 "rows_per_block": None, "staleness": s, "group": s + 1,
                 "token_cap": cfg.block_tokens,
-                "hot_words": exec_cfg.hot_words}
+                "hot_words": exec_cfg.hot_words, "route": repr(route)}
     return step, info

@@ -157,7 +157,7 @@ def fit_lda(state, key: jax.Array, cfg, exec_cfg, sweeps: int,
         rpb = info["rows_per_block"]
         log_fn(f"[lda] blocked executor: {info['n_blocks']} model blocks "
                f"x {rpb} rows, group {info['group']} (staleness "
-               f"{info['staleness']}), hot_words {info['hot_words']}, "
+               f"{info['staleness']}), route {info['route']}, "
                f"worker block mem "
                f"{info['group'] * rpb * cfg.K * 4 / 2**20:.1f} MiB (vs "
                f"{state.nwk.layout.pad_rows * cfg.K * 4 / 2**20:.1f} MiB "
@@ -165,7 +165,7 @@ def fit_lda(state, key: jax.Array, cfg, exec_cfg, sweeps: int,
     else:
         log_fn(f"[lda] snapshot executor: {info['n_blocks']} token blocks, "
                f"group {info['group']} (staleness {info['staleness']}), "
-               f"hot_words {info['hot_words']}")
+               f"route {info['route']}")
     num_tokens = int(jnp.sum(state.valid))
     history = []
     t0 = time.time()

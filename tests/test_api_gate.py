@@ -1,0 +1,46 @@
+"""Deprecation gate: the PS client API is the only parameter gateway.
+
+``repro/ps`` (DESIGN.md section 8) is the sanctioned way to obtain
+``DistributedMatrix`` / ``DistributedVector`` storage; direct construction
+anywhere else under ``src/repro`` is deprecated and fails this test (and
+the matching grep step in CI).  Allowed:
+
+  * ``src/repro/core/pserver.py`` -- the storage layer itself;
+  * ``src/repro/ps/``             -- the client layer wrapping it.
+
+Tests and benchmarks may still touch storage directly where they *test
+the storage layer*; application code may not.
+"""
+import pathlib
+import re
+
+SRC = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro"
+
+ALLOWED = {
+    SRC / "core" / "pserver.py",
+    SRC / "ps",
+}
+
+# constructor calls and classmethod factories
+PATTERN = re.compile(
+    r"Distributed(?:Matrix|Vector)(?:\.(?:zeros|from_dense))?\s*\(")
+
+
+def _allowed(path: pathlib.Path) -> bool:
+    return any(path == a or a in path.parents for a in ALLOWED)
+
+
+def test_no_direct_storage_construction_outside_ps():
+    offenders = []
+    for path in sorted(SRC.rglob("*.py")):
+        if _allowed(path):
+            continue
+        for lineno, line in enumerate(
+                path.read_text().splitlines(), start=1):
+            if PATTERN.search(line):
+                offenders.append(f"{path.relative_to(SRC.parent.parent)}"
+                                 f":{lineno}: {line.strip()}")
+    assert not offenders, (
+        "direct DistributedMatrix/DistributedVector construction outside "
+        "repro/ps (use PSClient factories / MatrixHandle instead):\n"
+        + "\n".join(offenders))

@@ -237,7 +237,7 @@ class TestDistributedExecutor:
     matrix entry; skipped on plain single-device hosts."""
 
     def test_spmd_sweep_with_staleness_conserves(self):
-        from repro.core.pserver import DistributedMatrix
+        from repro import ps
         from repro.launch import lda as launch_lda
 
         model = 2
@@ -262,7 +262,8 @@ class TestDistributedExecutor:
         n_tokens = int(valid.sum())
         one = valid.reshape(-1).astype(jnp.int32)
         assert int(nk2.sum()) == n_tokens
-        full = DistributedMatrix(nwk_val2, cfg.V, model).to_dense()
+        full = ps.PSClient.create(num_shards=model) \
+            .wrap_matrix(nwk_val2, cfg.V).to_dense()
         assert int(full.sum()) == n_tokens
         assert int(ndk2.sum()) == n_tokens
         # counts == histogram of the new assignments, globally

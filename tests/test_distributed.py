@@ -58,7 +58,6 @@ def test_lda_distributed_converges():
         import subprocess, sys, json
         import jax, jax.numpy as jnp, numpy as np
         from repro.core import lightlda as lda, perplexity as ppl
-        from repro.core.pserver import DistributedMatrix
         from repro.data import corpus as corpus_mod
         from repro.launch import lda as launch_lda
 
@@ -140,13 +139,14 @@ def test_pserver_spmd_pull_push():
     run_py("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
-        from repro.core.pserver import (DistributedMatrix, spmd_pull_all,
-                                        spmd_push_reduce)
+        from repro import ps
+        from repro.core.pserver import spmd_pull_all, spmd_push_reduce
         from repro.sharding.compat import shard_map
 
         mesh = jax.make_mesh((8,), ("model",))
         dense = jnp.arange(64, dtype=jnp.int32).reshape(16, 4)
-        m = DistributedMatrix.from_dense(dense, 8)
+        client = ps.PSClient.create(num_shards=8)
+        m = client.matrix_from_dense(dense)
 
         def body(local):
             full = spmd_pull_all(local, "model")
@@ -161,7 +161,7 @@ def test_pserver_spmd_pull_push():
         # snapshot equals the full physical matrix
         np.testing.assert_array_equal(np.asarray(full), np.asarray(m.value))
         # each worker contributed 1 -> +8 per entry on the owner shard
-        up = DistributedMatrix(updated, 16, 8).to_dense()
+        up = client.wrap_matrix(updated, 16).to_dense()
         np.testing.assert_array_equal(np.asarray(up), np.asarray(dense) + 8)
         print("ok")
     """)

@@ -148,25 +148,26 @@ class TestHybridDeltaParity:
         assert int(np.asarray(d_nwk).sum()) == 0
         assert int(np.asarray(d_nk).sum()) == 0
 
-    def test_cold_coo_through_push_sparse(self):
+    def test_cold_coo_through_push_coo(self):
         """The executor's actual cold path: COO emitted by cold_coo and
-        applied via DistributedMatrix.push_sparse equals the dense push
-        of the same delta, on both the scatter and the kernel route."""
-        from repro.core.pserver import DistributedMatrix
+        applied via the client's ``MatrixHandle.push_coo`` equals the
+        dense push of the same delta, on both the scatter and the kernel
+        route."""
+        from repro import ps
         from repro.kernels.delta_push import cold_coo, split_hot_cold
 
         v, k, b, hot = 150, 10, 256, 40
         w, zo, zn, chg = self._batch(b, v, k, seed=9, include_boundary=hot)
-        m = DistributedMatrix.from_dense(
-            jax.random.randint(jax.random.PRNGKey(1), (v, k), 5, 50), 3)
+        m = ps.PSClient.create(num_shards=3).matrix_from_dense(
+            jax.random.randint(jax.random.PRNGKey(1), (v, k), 5, 50))
         _, cold = split_hot_cold(w, chg, hot)
         rows, cols, vals = cold_coo(w, zo, zn, cold)
         amt = cold.astype(jnp.int32)
         dense_delta = (jnp.zeros((v, k), jnp.int32)
                        .at[w, zo].add(-amt).at[w, zn].add(amt))
         want = m.push_dense(dense_delta).to_dense()
-        got_scatter = m.push_sparse(rows, cols, vals).to_dense()
-        got_kernel = m.push_sparse(rows, cols, vals, use_kernel=True).to_dense()
+        got_scatter = m.push_coo(rows, cols, vals).to_dense()
+        got_kernel = m.push_coo(rows, cols, vals, use_kernel=True).to_dense()
         np.testing.assert_array_equal(np.asarray(want),
                                       np.asarray(got_scatter))
         np.testing.assert_array_equal(np.asarray(want),

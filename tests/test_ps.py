@@ -1,0 +1,305 @@
+"""Parameter-server client API tests (repro/ps: DESIGN.md section 8).
+
+Covers the Glint-style surface -- factory, handles, pull futures, push
+routes -- plus the two cross-cutting guarantees the redesign rests on:
+
+  * **route invariance**: every ``PushRoute`` produces bitwise-identical
+    matrices for the same reassignment batch (integer addition underneath);
+  * **backend parity**: the same client script on ``InProcessBackend``
+    and ``SpmdBackend`` (under forced host devices) produces bitwise-
+    identical matrices, for each route.
+
+Also the regression test for the padding-row invariant: coordinate pushes
+with logical ids >= num_rows (fixed-buffer padding, or ids that would
+*alias real rows* under the cyclic physical map) must be no-ops.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import ps
+from repro.core.pserver import CyclicLayout
+
+ROUTES = [
+    ps.DenseRoute(),
+    ps.CooRoute(),
+    ps.CooRoute(use_kernel=True),
+    ps.HybridRoute(hot_words=7),
+    ps.HybridRoute(hot_words=7, use_kernel=True),
+]
+
+
+def _reassign(v, k, n, seed, rows=None):
+    rng = np.random.default_rng(seed)
+    w = rng.integers(0, v, size=n).astype(np.int32)
+    z0 = rng.integers(0, k, size=n).astype(np.int32)
+    z1 = rng.integers(0, k, size=n).astype(np.int32)
+    changed = rng.random(n) < 0.7
+    w = jnp.asarray(w)
+    return ps.Reassign(rows=w if rows is None else jnp.asarray(rows),
+                       words=w, z_old=jnp.asarray(z0),
+                       z_new=jnp.asarray(z1), changed=jnp.asarray(changed))
+
+
+def _oracle_delta(re, v, k):
+    """Dense reference: what any route must add to the matrix."""
+    d = np.zeros((v, k), np.int64)
+    rows = np.asarray(re.rows)
+    zo, zn, ch = np.asarray(re.z_old), np.asarray(re.z_new), np.asarray(
+        re.changed)
+    np.add.at(d, (rows[ch], zo[ch]), -1)
+    np.add.at(d, (rows[ch], zn[ch]), 1)
+    return d
+
+
+class TestFactoryAndHandles:
+    def test_matrix_factory_roundtrip(self):
+        client = ps.PSClient.create(num_shards=3)
+        dense = jnp.arange(35, dtype=jnp.int32).reshape(7, 5)
+        h = client.matrix_from_dense(dense)
+        assert isinstance(h, ps.MatrixHandle)
+        assert h.num_rows == 7 and h.cols == 5 and h.num_shards == 3
+        np.testing.assert_array_equal(np.asarray(h.to_dense()),
+                                      np.asarray(dense))
+
+    def test_zeros_and_vector(self):
+        client = ps.PSClient.create(num_shards=2)
+        m = client.matrix(6, 4)
+        assert int(m.to_dense().sum()) == 0
+        vec = client.vector(5)
+        vec = vec.push(jnp.array([1, 1, 3]), jnp.array([2, 1, 7]))
+        np.testing.assert_array_equal(np.asarray(vec.value),
+                                      [0, 3, 0, 7, 0])
+
+    def test_pull_returns_future(self):
+        client = ps.PSClient.create(num_shards=2)
+        dense = jnp.arange(24, dtype=jnp.int32).reshape(8, 3)
+        h = client.matrix_from_dense(dense)
+        fut = h.pull(jnp.array([0, 7, 3]))
+        assert isinstance(fut, ps.PullHandle)
+        np.testing.assert_array_equal(np.asarray(fut.result()),
+                                      np.asarray(dense)[[0, 7, 3]])
+        # wait() is the Glint-named alias
+        assert fut.wait() is fut.result()
+
+    def test_pull_block_future_rides_scan_carry(self):
+        """A PullHandle is a pytree: an in-flight pull can be carried
+        across scan iterations -- the executor's double buffer."""
+        client = ps.PSClient.create(num_shards=2)
+        h = client.matrix_from_dense(
+            jnp.arange(32, dtype=jnp.int32).reshape(8, 4))
+        rpb = 4
+
+        def body(carry, b):
+            fut = carry
+            rows = fut.result()
+            nxt = h.pull_block((b + 1) % 2, rpb)
+            return nxt, rows.sum()
+
+        _, sums = jax.lax.scan(body, h.pull_block(0, rpb), jnp.arange(2))
+        total = int(sums.sum())
+        assert total == int(h.value.sum())
+
+    def test_handle_is_jit_and_scan_compatible(self):
+        client = ps.PSClient.create(num_shards=2)
+        h = client.matrix(10, 4)
+
+        @jax.jit
+        def steps(h):
+            def body(h, _):
+                re = _reassign(10, 4, 16, 0)
+                return h.push(re), ()
+            h, _ = jax.lax.scan(body, h, jnp.arange(3))
+            return h
+
+        out = steps(h)
+        want = _oracle_delta(_reassign(10, 4, 16, 0), 10, 4) * 3
+        np.testing.assert_array_equal(np.asarray(out.to_dense()), want)
+
+
+class TestRouteInvariance:
+    """Paper section 3.3: the hybrid split is a traffic policy, not a
+    semantic one -- every route yields identical matrices."""
+
+    @pytest.mark.parametrize("use_kernels", [False, True])
+    def test_all_routes_identical(self, use_kernels):
+        v, k = 23, 8
+        client = ps.PSClient.create(num_shards=3)
+        base = jax.random.randint(jax.random.PRNGKey(0), (v, k), 0, 50)
+        re = _reassign(v, k, 64, seed=1)
+        want = np.asarray(base) + _oracle_delta(re, v, k)
+        for route in ROUTES:
+            h = client.matrix_from_dense(base, route=route)
+            out = h.push(re, use_kernels=use_kernels)
+            np.testing.assert_array_equal(
+                np.asarray(out.to_dense()), want,
+                err_msg=f"route {route!r} kernels={use_kernels}")
+
+    def test_plan_traffic_shapes(self):
+        """Routes differ in *what travels*, which plan() exposes."""
+        v, k = 20, 6
+        re = _reassign(v, k, 32, seed=3)
+        dense_plan = ps.DenseRoute().plan(re, v, k)
+        assert dense_plan.dense is not None and dense_plan.coo is None
+        coo_plan = ps.CooRoute().plan(re, v, k)
+        assert coo_plan.dense is None and coo_plan.coo is not None
+        hyb = ps.HybridRoute(hot_words=5).plan(re, v, k)
+        assert hyb.dense is not None and hyb.coo is not None
+        # cold coordinates never name hot rows (with nonzero values)
+        rows, _, vals = hyb.coo
+        hot_hit = (np.asarray(rows) < 5) & (np.asarray(vals) != 0)
+        assert not hot_hit.any()
+
+    def test_route_for_mapping(self):
+        assert isinstance(ps.route_for(None, 100), ps.DenseRoute)
+        assert isinstance(ps.route_for(100, 100), ps.DenseRoute)
+        assert isinstance(ps.route_for(0, 100), ps.CooRoute)
+        r = ps.route_for(10, 100)
+        assert isinstance(r, ps.HybridRoute) and r.hot_words == 10
+
+
+class TestPushCooPaddingInvariant:
+    """Regression: raw ``DistributedMatrix.push_sparse`` trusts its row
+    ids; the client layer must mask padded logical ids >= num_rows, which
+    otherwise either dirty padding rows or -- for ids >= pad_rows --
+    *alias a real row* under the cyclic physical map."""
+
+    def test_out_of_range_rows_are_noops(self):
+        client = ps.PSClient.create(num_shards=3)
+        h = client.matrix_from_dense(jnp.ones((7, 4), jnp.int32))
+        lay = h.layout
+        # id in [num_rows, pad_rows): a padding row; id >= pad_rows: would
+        # alias a real row (to_physical is only injective below pad_rows)
+        alias_id = lay.pad_rows + 1
+        victim = int(lay.to_logical(lay.to_physical(alias_id) %
+                                    lay.pad_rows))
+        rows = jnp.array([7, alias_id, 2], jnp.int32)
+        cols = jnp.array([1, 2, 3], jnp.int32)
+        vals = jnp.array([5, 5, 1], jnp.int32)
+        out = h.push_coo(rows, cols, vals)
+        want = np.ones((7, 4), np.int64)
+        want[2, 3] += 1                      # the only in-range entry
+        np.testing.assert_array_equal(np.asarray(out.to_dense()), want)
+        assert int(out.to_dense()[victim].sum()) == want[victim].sum()
+        # padding rows of the physical array stay zero
+        phys = np.asarray(out.value)
+        logical = np.asarray(lay.to_logical(np.arange(lay.pad_rows)))
+        assert (phys[logical >= 7] == 0).all()
+
+    def test_aliasing_would_corrupt_without_mask(self):
+        """Documents WHY the mask exists: the raw storage primitive does
+        alias out-of-range ids onto real rows."""
+        lay = CyclicLayout(7, 3)
+        alias_id = lay.pad_rows + 1
+        phys_a = int(lay.to_physical(alias_id))
+        assert phys_a < lay.pad_rows  # lands inside the physical array...
+        owner = int(lay.to_logical(phys_a))
+        assert owner != alias_id      # ...on a row it does not own
+
+    def test_read_only_view_rejects_push(self):
+        client = ps.PSClient.create()
+        view = client.matrix(4, 3).read_view()
+        with pytest.raises(TypeError):
+            view.push(None)
+        with pytest.raises(TypeError):
+            view.push_coo(None, None, None)
+        assert view.to_dense().shape == (4, 3)
+
+
+class TestInterpretDefault:
+    def test_env_var_controls_default(self, monkeypatch):
+        from repro.kernels import ops
+        monkeypatch.setenv("REPRO_INTERPRET", "0")
+        assert ops.default_interpret() is False
+        monkeypatch.setenv("REPRO_INTERPRET", "1")
+        assert ops.default_interpret() is True
+        monkeypatch.delenv("REPRO_INTERPRET")
+        # unset: CPU hosts interpret (this suite runs on CPU)
+        if jax.default_backend() == "cpu":
+            assert ops.default_interpret() is True
+
+    def test_kernel_calls_resolve_none(self):
+        """interpret=None flows end-to-end (would raise inside pallas if
+        unresolved)."""
+        from repro.kernels import ops
+        re = _reassign(16, 8, 32, seed=5)
+        d = ops.delta_push(re.rows, re.z_old, re.z_new,
+                           re.changed, 16, 8, interpret=None)
+        np.testing.assert_array_equal(np.asarray(d),
+                                      _oracle_delta(re, 16, 8))
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs >= 2 devices (run tier-1 under "
+                           "XLA_FLAGS=--xla_force_host_platform_device_"
+                           "count=4 to exercise)")
+class TestBackendParity:
+    """The same PSClient script on InProcessBackend and SpmdBackend must
+    produce bitwise-identical matrices, for each PushRoute."""
+
+    def _script(self, client, base, batches, use_kernels=False):
+        """The backend-agnostic client script: adopt counts, push every
+        batch, read the result back."""
+        h = client.matrix_from_dense(base, route=self.route)
+        for re in batches:
+            h = h.push(re, use_kernels=use_kernels)
+        return h
+
+    @pytest.mark.parametrize("route", ROUTES)
+    def test_spmd_matches_in_process(self, route):
+        from repro.sharding.compat import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        self.route = route
+        v, k = 19, 6
+        n_dev = jax.device_count()
+        base = jax.random.randint(jax.random.PRNGKey(2), (v, k), 0, 30)
+        batches = [_reassign(v, k, 24, seed=10 + i) for i in range(n_dev)]
+
+        # --- in-process: one worker pushes every batch ---
+        host = self._script(ps.PSClient.create(num_shards=2), base, batches)
+        want = np.asarray(host.to_dense())
+
+        # --- SPMD: each worker pushes its own batch, psum merges ---
+        mesh = jax.make_mesh((n_dev,), ("x",))
+        client = ps.PSClient.create(num_shards=2, axis_name="x")
+
+        def worker(base_rep, re):
+            re = jax.tree.map(lambda a: a[0], re)
+            h = self._script(client, base_rep, [re])
+            # each worker pushed only its delta; the psum inside push()
+            # already merged all workers, so every replica holds the total
+            return h.to_dense()
+
+        stacked = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *batches)
+        fn = shard_map(worker, mesh=mesh,
+                       in_specs=(P(), P("x", None)), out_specs=P(),
+                       check_vma=False)
+        got = np.asarray(fn(base, stacked))
+        np.testing.assert_array_equal(got, want,
+                                      err_msg=f"route {route!r}")
+
+    def test_model_sharded_pull_all(self):
+        """pull_all on a model-sharded handle all-gathers the cyclic rows
+        back into the full dense matrix on every worker."""
+        from repro.sharding.compat import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        shards = 2
+        v, k = 10, 4
+        dense = jnp.arange(v * k, dtype=jnp.int32).reshape(v, k)
+        mesh = jax.make_mesh((shards,), ("model",))
+        full = ps.PSClient.create(num_shards=shards).matrix_from_dense(
+            dense)
+        client = ps.PSClient.create(num_shards=shards, model_axis="model")
+
+        def worker(phys_local):
+            h = client.wrap_matrix(phys_local, v)
+            return h.pull_all().result()
+
+        fn = shard_map(worker, mesh=mesh, in_specs=(P("model", None),),
+                       out_specs=P(), check_vma=False)
+        got = np.asarray(fn(full.value))
+        np.testing.assert_array_equal(got, np.asarray(dense))

@@ -1,0 +1,220 @@
+"""Out-of-core streaming benchmark: tokens/sec + peak host RSS.
+
+The claim under test is the tentpole's: a corpus far larger than the
+loader's memory budget streams through the double-buffered loader
+(data/stream.py) without the process ever holding more than the budget.
+The measured phase runs in a **subprocess** so its ``ru_maxrss``
+high-water mark is clean -- not polluted by the JAX runtime or by other
+benchmark modules that ran earlier in the parent -- and the module
+deliberately imports no jax so the child stays a pure numpy data plane.
+
+Protocol (fast mode):
+  * write a synthetic Zipf-ish corpus of >= 4x the loader budget to a
+    temp dir, shard by shard (the writer itself is bounded-memory);
+  * child process: one full epoch through ``StreamingLoader`` with the
+    budget enforced, reporting tokens/sec and its peak RSS;
+  * assert peak RSS < 2x budget (the acceptance bar) and corpus >= 4x.
+
+Also reports a small in-process *training* throughput number (the
+stream trainer end to end at toy scale -- this one does use jax).
+Writes ``experiments/bench/BENCH_stream.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import resource
+import shutil
+import subprocess
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from repro.data import stream as stream_mod
+
+OUT = "experiments/bench/BENCH_stream.json"
+MiB = 2 ** 20
+
+
+def _write_synthetic(path: str, total_tokens: int, vocab: int,
+                     tokens_per_shard: int, seed: int = 0) -> "stream_mod.StreamMeta":
+    """Zipf-ish corpus written with bounded memory via the bulk API."""
+    rng = np.random.default_rng(seed)
+    writer = stream_mod.ShardedCorpusWriter(
+        path, vocab, tokens_per_shard,
+        doc_cap=max(64, tokens_per_shard // 64))
+    remaining = total_tokens
+    chunk_docs = 4096
+    while remaining > 0:
+        lens = rng.integers(64, 192, size=chunk_docs).astype(np.int64)
+        cum = np.cumsum(lens)
+        cut = int(np.searchsorted(cum, remaining, "right"))
+        if cut == 0:
+            lens = np.array([remaining], np.int64)
+        else:
+            lens = lens[:cut]
+        n = int(lens.sum())
+        # power-law-ish marginal: rank ~ u^gamma concentrates the head
+        w = (vocab * rng.random(n) ** 3.5).astype(np.int32)
+        writer.add_tokens(np.minimum(w, vocab - 1), lens)
+        remaining -= n
+    return writer.close()
+
+
+def _rss_bytes() -> int:
+    """Current resident set from /proc (Linux).  Deliberately *not*
+    ``ru_maxrss``: that high-water mark is inherited across ``fork`` from
+    the parent (whose jax runtime would be billed to us), and some
+    sandbox kernels omit VmHWM entirely.  The loader's footprint is
+    steady-state (two buffered shards), so sampling VmRSS once per shard
+    captures the true peak."""
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmRSS"):
+                    return int(line.split()[1]) * 1024
+    except OSError:
+        pass
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * 1024
+
+
+def _child_main(path: str, budget: int, epochs: int) -> None:
+    """The measured process: stream the corpus, print one JSON line."""
+    reader = stream_mod.ShardedCorpusReader(path)
+    loader = stream_mod.StreamingLoader(reader, seed=0,
+                                        memory_budget=budget, load_z=False)
+    tokens = 0
+    checksum = 0
+    peak_rss = _rss_bytes()
+    t0 = time.time()
+    for cur, sid, shard in loader.iterate(stream_mod.Cursor(0, 0), epochs):
+        tokens += shard.n_tokens
+        checksum ^= int(shard.w[shard.n_tokens - 1]) ^ int(
+            shard.w[: shard.n_tokens].max())
+        peak_rss = max(peak_rss, _rss_bytes())
+    dt = time.time() - t0
+    print(json.dumps({"tokens": tokens, "seconds": dt,
+                      "tokens_per_s": tokens / dt,
+                      "peak_rss_bytes": peak_rss,
+                      "checksum": checksum}))
+
+
+def _run_child(path: str, budget: int, epochs: int) -> dict:
+    src = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(
+        stream_mod.__file__))))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [src] + [p for p in env.get("PYTHONPATH", "").split(os.pathsep) if p])
+    # the measured process is a pure data plane: BLAS thread pools would
+    # only inflate its RSS baseline (numpy import alone costs hundreds of
+    # MiB of ru_maxrss on many-core hosts otherwise)
+    for var in ("OPENBLAS_NUM_THREADS", "OMP_NUM_THREADS",
+                "MKL_NUM_THREADS"):
+        env[var] = "1"
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_stream", "--child", path,
+         "--budget", str(budget), "--epochs", str(epochs)],
+        env=env, capture_output=True, text=True, check=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def _train_smoke() -> dict:
+    """Tiny end-to-end stream-training throughput (uses jax; in-process)."""
+    import jax  # noqa: F401  (deferred: the child must never see this)
+    from repro.core import lightlda as lda
+    from repro.data import corpus as corpus_mod
+    from repro.train import async_exec
+    from repro.train import loop as train_loop
+
+    work = tempfile.mkdtemp(prefix="bench_stream_train_")
+    try:
+        corp = corpus_mod.generate_lda_corpus(
+            seed=0, num_docs=800, mean_doc_len=60, vocab_size=2000,
+            num_topics=10)
+        stream_mod.write_sharded(os.path.join(work, "s"), corp,
+                                 tokens_per_shard=8192)
+        cfg = lda.LDAConfig(num_topics=20, vocab_size=2000,
+                            block_tokens=2048, num_shards=4)
+        reader = stream_mod.ShardedCorpusReader(os.path.join(work, "s"))
+        t0 = time.time()
+        train_loop.fit_lda_stream(reader, cfg,
+                                  async_exec.ExecConfig(staleness=1),
+                                  epochs=2, seed=0,
+                                  log_fn=lambda *a: None)
+        dt = time.time() - t0
+        return {"tokens": 2 * corp.num_tokens, "seconds": dt,
+                "tokens_per_s": 2 * corp.num_tokens / dt}
+    finally:
+        shutil.rmtree(work, ignore_errors=True)
+
+
+def main(fast: bool = False) -> None:
+    budget = (128 if fast else 256) * MiB
+    tokens_per_shard = 4 * MiB        # 4M tokens -> 32 MiB on disk (w+d)
+    bytes_per_token = 8               # w + d int32 (no z: load_z=False)
+    target_bytes = 4 * budget
+    total_tokens = -(-target_bytes // bytes_per_token)
+    vocab = 100_000
+
+    work = tempfile.mkdtemp(prefix="bench_stream_")
+    path = os.path.join(work, "corpus")
+    try:
+        t0 = time.time()
+        meta = _write_synthetic(path, total_tokens, vocab, tokens_per_shard)
+        write_s = time.time() - t0
+        corpus_bytes = meta.num_shards * (
+            meta.tokens_per_shard * bytes_per_token + meta.doc_cap * 8)
+        print(f"stream,corpus,{meta.num_tokens},tokens,"
+              f"{corpus_bytes / MiB:.0f},MiB,{meta.num_shards},shards,"
+              f"wrote_in,{write_s:.1f}s")
+        print(f"stream,budget,{budget / MiB:.0f},MiB,corpus_over_budget,"
+              f"{corpus_bytes / budget:.1f}x")
+        assert corpus_bytes >= 4 * budget, (corpus_bytes, budget)
+
+        child = _run_child(path, budget, epochs=1)
+        rss = child["peak_rss_bytes"]
+        print(f"stream,loader,{child['tokens_per_s']:,.0f},tok_per_s,"
+              f"peak_rss,{rss / MiB:.0f},MiB,"
+              f"rss_over_budget,{rss / budget:.2f}x")
+
+        train = _train_smoke()
+        print(f"stream,train_smoke,{train['tokens_per_s']:,.0f},tok_per_s")
+
+        os.makedirs(os.path.dirname(OUT), exist_ok=True)
+        with open(OUT, "w") as f:
+            json.dump({
+                "config": {"budget_bytes": budget, "vocab": vocab,
+                           "tokens_per_shard": tokens_per_shard,
+                           "num_shards": meta.num_shards,
+                           "corpus_bytes": corpus_bytes,
+                           "corpus_tokens": meta.num_tokens},
+                "write_seconds": write_s,
+                "loader_tokens_per_s": child["tokens_per_s"],
+                "peak_rss_bytes": rss,
+                "rss_over_budget_x": rss / budget,
+                "corpus_over_budget_x": corpus_bytes / budget,
+                "train_smoke_tokens_per_s": train["tokens_per_s"],
+            }, f, indent=2)
+        print(f"stream,wrote,{OUT}")
+        assert rss < 2 * budget, (
+            f"peak RSS {rss / MiB:.0f} MiB exceeds 2x the "
+            f"{budget / MiB:.0f} MiB loader budget")
+    finally:
+        shutil.rmtree(work, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--child", default="")
+    ap.add_argument("--budget", type=int, default=0)
+    ap.add_argument("--epochs", type=int, default=1)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.child:
+        _child_main(args.child, args.budget, args.epochs)
+    else:
+        main(fast=not args.full)

@@ -12,6 +12,8 @@
                dense/sparse push (emits BENCH_async.json)
   ps           PS client routes: dense vs COO vs hybrid push through
                MatrixHandle.push (emits BENCH_ps.json)
+  stream       out-of-core loader: tokens/sec + peak RSS streaming a
+               corpus >= 4x the loader budget (emits BENCH_stream.json)
 
 ``python -m benchmarks.run`` runs everything at reduced ("fast") sizes and
 prints CSV-ish lines; ``--full`` uses the paper-ladder sizes; ``--only X``
@@ -26,7 +28,8 @@ import traceback
 
 from benchmarks import (bench_async, bench_comm, bench_convergence,
                         bench_infer, bench_kernels, bench_loadbalance,
-                        bench_ps, bench_roofline, bench_table1)
+                        bench_ps, bench_roofline, bench_stream,
+                        bench_table1)
 
 MODULES = {
     "table1": bench_table1.main,
@@ -38,6 +41,7 @@ MODULES = {
     "infer": bench_infer.main,
     "async": bench_async.main,
     "ps": bench_ps.main,
+    "stream": bench_stream.main,
 }
 
 

@@ -421,8 +421,9 @@ def train(state: SamplerState, key: jax.Array, cfg: LDAConfig,
 # ---------------------------------------------------------------------------
 
 def block_token_index(w: np.ndarray, valid: np.ndarray, rows_per_block: int,
-                      layout, cap_round: int = 256) -> Tuple[np.ndarray,
-                                                             np.ndarray]:
+                      layout, cap_round: int = 256,
+                      cap: Optional[int] = None) -> Tuple[np.ndarray,
+                                                          np.ndarray]:
     """Host-side: group token indices by their word's *physical* model
     block.
 
@@ -432,24 +433,37 @@ def block_token_index(w: np.ndarray, valid: np.ndarray, rows_per_block: int,
     because the sweep applies all updates with duplicate-tolerant adds.
     Because physical (cyclic) row order interleaves hot and cold words
     (paper section 3.2), per-block token counts are naturally balanced.
+
+    By default the capacity is sized by this token set's hottest block,
+    rounded up to ``cap_round`` -- the stream executor's coarse bucket
+    (``make_stream_executor``), so same-bucket shards reuse one jitted
+    trace.  ``cap`` instead pins the capacity explicitly (raising if any
+    block overflows it) for callers that need identical index shapes
+    across every shard.  Fully vectorised: this runs once per shard per
+    epoch on the stream path, so an O(N) Python loop here would dominate
+    the host side.
     """
-    phys = np.asarray(layout.to_physical(w.astype(np.int64)))
+    phys = np.asarray(layout.to_physical(np.asarray(w).astype(np.int64)))
+    valid = np.asarray(valid)
     block = phys // rows_per_block
     n_blocks = layout.pad_rows // rows_per_block
     counts = np.bincount(block[valid], minlength=n_blocks)
-    cap = max(int(counts.max()), 1)
-    cap = -(-cap // cap_round) * cap_round
+    need = max(int(counts.max()) if counts.size else 0, 1)
+    if cap is None:
+        cap = -(-need // cap_round) * cap_round
+    elif need > cap:
+        raise ValueError(f"block capacity {cap} overflows: hottest block "
+                         f"holds {need} tokens")
     idx = np.zeros((n_blocks, cap), np.int32)
     bval = np.zeros((n_blocks, cap), bool)
-    fill = np.zeros(n_blocks, np.int64)
-    order = np.argsort(block, kind="stable")
-    for t in order:
-        if not valid[t]:
-            continue
-        b = block[t]
-        idx[b, fill[b]] = t
-        bval[b, fill[b]] = True
-        fill[b] += 1
+    tok = np.nonzero(valid)[0]                       # token order
+    order = np.argsort(block[tok], kind="stable")    # by block, ties in order
+    tok = tok[order]
+    bs = block[tok]
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    slot = np.arange(tok.shape[0]) - starts[bs]
+    idx[bs, slot] = tok
+    bval[bs, slot] = True
     return idx, bval
 
 

@@ -66,7 +66,7 @@ def reindex(w: np.ndarray, d: np.ndarray, vocab_size: int) -> Corpus:
     sort = np.argsort(d_new, kind="stable")
     w, d_new = w[sort], d_new[sort].astype(np.int32)
     doc_len = np.bincount(d_new, minlength=len(uniq)).astype(np.int32)
-    doc_start = np.concatenate([[0], np.cumsum(doc_len)[:-1]]).astype(np.int32)
+    doc_start = _starts_of(doc_len)
     return Corpus(w, d_new, doc_start, doc_len, vocab_size, freq)
 
 
@@ -134,11 +134,18 @@ def _compact_docs(d: np.ndarray) -> np.ndarray:
     return inv.astype(np.int32)
 
 
+def _starts_of(doc_len: np.ndarray) -> np.ndarray:
+    """Offsets from lengths; an empty doc set has *empty* offsets (not a
+    phantom [0] entry -- the doc_start/doc_len lengths must always agree)."""
+    if doc_len.shape[0] == 0:
+        return np.zeros(0, np.int32)
+    return np.concatenate([[0], np.cumsum(doc_len)[:-1]]).astype(np.int32)
+
+
 def _offsets(d: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
     dc = _compact_docs(d)
     doc_len = np.bincount(dc).astype(np.int32)
-    doc_start = np.concatenate([[0], np.cumsum(doc_len)[:-1]]).astype(np.int32)
-    return doc_start, doc_len
+    return _starts_of(doc_len), doc_len
 
 
 def fold_eval_split(corpus: Corpus, seed: int = 2
@@ -172,7 +179,12 @@ def shard_tokens(corpus: Corpus, num_shards: int, block_tokens: int
         w = corpus.w[tok_mask]
         d = _compact_docs(corpus.d[tok_mask])
         doc_start, doc_len = _offsets(corpus.d[tok_mask])
+        # every shard pads to at least one full block -- an empty shard
+        # (num_shards > num_docs) still yields block-shaped, all-invalid
+        # arrays, so downstream per-shard reshapes never see length 0
         pad = (-len(w)) % block_tokens
+        if len(w) + pad == 0:
+            pad = block_tokens
         valid = np.concatenate([np.ones(len(w), bool), np.zeros(pad, bool)])
         w = np.concatenate([w, np.zeros(pad, np.int32)])
         d = np.concatenate([d, np.zeros(pad, np.int32)])

@@ -33,6 +33,7 @@ from repro import ps
 from repro.core import lightlda as lda
 from repro.core import perplexity as ppl
 from repro.data import corpus as corpus_mod
+from repro.data import stream as stream_mod
 from repro.sharding.compat import shard_map
 from repro.train import async_exec, checkpoint
 from repro.train import loop as train_loop
@@ -58,6 +59,45 @@ def run_single(corp, cfg: "lda.LDAConfig", sweeps: int, seed: int,
     state, history, info = train_loop.fit_lda(state, sub, cfg, exec_cfg,
                                               sweeps, eval_every=eval_every)
     return state, history
+
+
+def run_stream(args, cfg: "lda.LDAConfig"):
+    """Out-of-core training from a sharded on-disk stream (data/stream.py).
+
+    If ``--stream-dir`` has no manifest yet, a synthetic corpus is
+    generated and sharded into it first (the stand-in for an offline
+    ingestion pass); an existing stream is reused as-is -- its manifest,
+    not the CLI corpus flags, then defines the data.  ``--resume``
+    restores the PS state + loader cursor from ``--checkpoint`` and
+    continues bitwise-identically.
+    """
+    path = args.stream_dir
+    if not os.path.exists(os.path.join(path, stream_mod.MANIFEST)):
+        corp = corpus_mod.generate_lda_corpus(
+            seed=args.seed, num_docs=args.docs,
+            mean_doc_len=args.mean_doc_len, vocab_size=args.vocab,
+            num_topics=args.true_topics)
+        meta = stream_mod.write_sharded(path, corp,
+                                        args.stream_shard_tokens)
+        print(f"[lda] sharded {meta.num_tokens} tokens into "
+              f"{meta.num_shards} shards at {path}")
+    reader = stream_mod.ShardedCorpusReader(path)
+    if reader.meta.vocab_size != cfg.vocab_size:
+        print(f"[lda] stream vocab {reader.meta.vocab_size} overrides "
+              f"--vocab {cfg.vocab_size}")
+        cfg = lda.LDAConfig(**{**cfg.__dict__,
+                               "vocab_size": reader.meta.vocab_size})
+    exec_cfg = async_exec.ExecConfig(staleness=args.staleness,
+                                     hot_words=args.hot_words,
+                                     model_blocks=args.model_blocks)
+    ckpt_path = args.checkpoint or os.path.join(args.out, "stream_ckpt.npz")
+    nwk, nk, history, info = train_loop.fit_lda_stream(
+        reader, cfg, exec_cfg, epochs=args.epochs, seed=args.seed,
+        checkpoint_path=ckpt_path, checkpoint_every=args.checkpoint_every,
+        resume=args.resume, eval_every=args.eval_every)
+    print(f"[lda] stream training done ({info['mode']} executor); "
+          f"checkpoint at {ckpt_path}")
+    return history
 
 
 def make_spmd_sweep(mesh, cfg: "lda.LDAConfig", staleness: int = 0,
@@ -203,18 +243,47 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="experiments/lda")
     ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--stream-dir", default="",
+                    help="out-of-core training: shard the corpus into (or "
+                         "reuse a manifest at) this directory and stream "
+                         "it through the PS client shard by shard")
+    ap.add_argument("--stream-shard-tokens", type=int, default=65536,
+                    help="token capacity of each stream shard (must be a "
+                         "multiple of --block-tokens for snapshot mode)")
+    ap.add_argument("--epochs", type=int, default=3,
+                    help="stream trainer: full passes over the shard "
+                         "stream (per-epoch shard-order shuffle)")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="stream trainer: checkpoint PS state + cursor "
+                         "every N shard visits (0: only at the end)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume the stream trainer from --checkpoint "
+                         "(bitwise-identical continuation)")
     args = ap.parse_args()
+
+    cfg = lda.LDAConfig(num_topics=args.topics, vocab_size=args.vocab,
+                        mh_steps=args.mh_steps,
+                        block_tokens=args.block_tokens,
+                        use_kernels=args.kernels)
+
+    if args.stream_dir:
+        if args.devices:
+            ap.error("--stream-dir does not combine with --devices: the "
+                     "stream trainer is single-process (its shards feed "
+                     "SPMD workers in-process; see DESIGN.md section 9)")
+        print(f"[lda] stream mode: training {args.epochs} epochs "
+              f"(--sweeps is the in-memory trainer's knob and is ignored)")
+        history = run_stream(args, cfg)
+        os.makedirs(args.out, exist_ok=True)
+        with open(os.path.join(args.out, "history.json"), "w") as f:
+            json.dump(history, f, indent=2)
+        return
 
     corp = corpus_mod.generate_lda_corpus(
         seed=args.seed, num_docs=args.docs, mean_doc_len=args.mean_doc_len,
         vocab_size=args.vocab, num_topics=args.true_topics)
     print(f"[lda] corpus: {corp.num_tokens} tokens, {corp.num_docs} docs, "
           f"V={corp.vocab_size}")
-
-    cfg = lda.LDAConfig(num_topics=args.topics, vocab_size=args.vocab,
-                        mh_steps=args.mh_steps,
-                        block_tokens=args.block_tokens,
-                        use_kernels=args.kernels)
 
     if args.devices:
         history = run_distributed(corp, cfg, args.sweeps, args.seed,

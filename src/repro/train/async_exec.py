@@ -381,6 +381,69 @@ def snapshot_sweep(state: "lda.SamplerState", key: jax.Array,
 # Host-side factory: what the launchers and train.loop.fit_lda drive.
 # ---------------------------------------------------------------------------
 
+def blocked_geometry(layout, model_blocks: int, staleness: int
+                     ) -> Tuple[int, int, int]:
+    """Resolve the blocked executor's (rows_per_block, n_blocks, effective
+    staleness) for a model layout: ``pad_rows`` must split evenly, so the
+    requested block count is rounded to the nearest feasible geometry."""
+    rpb = -(-layout.pad_rows // model_blocks)
+    while layout.pad_rows % rpb:
+        rpb += 1
+    n_blocks = layout.pad_rows // rpb
+    return rpb, n_blocks, effective_staleness(n_blocks, staleness)
+
+
+def make_stream_executor(cfg: "lda.LDAConfig", exec_cfg: ExecConfig,
+                         layout, cap_round: int = 2048):
+    """Build the per-shard step for the streaming trainer.
+
+    Unlike ``make_executor`` (which bakes one corpus's token index into
+    the jitted step), the stream trainer sees a *sequence* of shards, all
+    padded to the same token/doc geometry (data/stream.py).  Returns
+    ``(step, build_index, info)``:
+
+      * blocked mode (``model_blocks > 0``): ``step(state, key, idx,
+        bval)`` and ``build_index(w, valid, cap=None) -> (idx, bval)`` --
+        the host groups each shard's tokens by model block at merge-unit
+        granularity, with the capacity rounded to the coarse ``cap_round``
+        bucket so same-bucket shards reuse one compiled trace (pass
+        ``cap`` to pin one capacity for every shard; overflow raises);
+      * snapshot mode: ``step(state, key)`` with ``build_index`` None --
+        shard arrays reshape directly, one trace for the whole stream.
+
+    The step function object is created once, so JAX's jit cache keys
+    only on argument shapes -- visiting a shard never retraces unless its
+    index landed in a new capacity bucket.
+    """
+    route = exec_cfg.resolve_route(cfg.V)
+    if exec_cfg.model_blocks > 0:
+        rpb, n_blocks, s = blocked_geometry(layout, exec_cfg.model_blocks,
+                                            exec_cfg.staleness)
+        rpb_step = rpb * (s + 1)
+
+        step = jax.jit(lambda st, k, idx, bval: pipelined_sweep(
+            st, k, cfg, idx, bval, rpb_step, staleness=0, route=route))
+
+        def build_index(w, valid, cap=None):
+            idx, bval = lda.block_token_index(
+                np.asarray(w), np.asarray(valid), rpb_step, layout,
+                cap_round=cap_round, cap=cap)
+            return jnp.asarray(idx), jnp.asarray(bval)
+
+        info = {"mode": "blocked", "n_blocks": n_blocks,
+                "rows_per_block": rpb, "rows_per_step": rpb_step,
+                "staleness": s, "group": s + 1,
+                "hot_words": exec_cfg.hot_words, "route": repr(route)}
+        return step, build_index, info
+
+    jit_step = jax.jit(lambda st, k: snapshot_sweep(
+        st, k, cfg, staleness=exec_cfg.staleness, route=route))
+    info = {"mode": "snapshot", "n_blocks": None, "rows_per_block": None,
+            "staleness": exec_cfg.staleness,
+            "hot_words": exec_cfg.hot_words, "route": repr(route)}
+    return jit_step, None, info
+
+
 def make_executor(state: "lda.SamplerState", cfg: "lda.LDAConfig",
                   exec_cfg: ExecConfig):
     """Build the jitted one-sweep step function for an executor config.
@@ -392,12 +455,8 @@ def make_executor(state: "lda.SamplerState", cfg: "lda.LDAConfig",
     route = exec_cfg.resolve_route(cfg.V)
     if exec_cfg.model_blocks > 0:
         layout = state.nwk.layout
-        rpb = -(-layout.pad_rows // exec_cfg.model_blocks)
-        # pad_rows must divide evenly into blocks; bump rpb until it does
-        while layout.pad_rows % rpb:
-            rpb += 1
-        n_blocks = layout.pad_rows // rpb
-        s = effective_staleness(n_blocks, exec_cfg.staleness)
+        rpb, n_blocks, s = blocked_geometry(layout, exec_cfg.model_blocks,
+                                            exec_cfg.staleness)
         # Build the token index at *merge-unit* granularity (s+1 fused
         # blocks): the per-block cap is sized by the hottest block, so
         # grouping at index-build time lets hot and cold blocks average

@@ -10,7 +10,7 @@ only (w, d, z, valid) are stored; counts come back via
 from __future__ import annotations
 
 import os
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -67,3 +67,44 @@ def restore_lda(path: str, cfg, num_docs: int):
         doc_len = jnp.asarray(data["doc_len"])
     nwk, nk, ndk = lda.rebuild_counts(w, d, z, valid, num_docs, cfg)
     return lda.SamplerState(w, d, z, valid, doc_start, doc_len, nwk, nk, ndk)
+
+
+# --- streaming trainer: PS state + loader cursor (DESIGN.md section 9) ---
+#
+# The out-of-core trainer's complete state is split across two places:
+# the per-shard ``z`` files live *in the stream directory* (the paper's
+# "the data set including topic assignments is checkpointed", section
+# 3.5), while this checkpoint holds the rest -- the PS count tables and
+# the loader cursor -- plus enough config echo to refuse a mismatched
+# resume.  Taken at a shard boundary (after that shard's z write-back),
+# the pair is bitwise-resumable: restore + continue == never stopped.
+
+class StreamCheckpoint(NamedTuple):
+    nwk_phys: np.ndarray   # physical (cyclic) [pad_rows, K] word-topic counts
+    nk: np.ndarray         # [K] topic totals
+    cursor: Any            # data.stream.Cursor: next (epoch, pos) to process
+    seed: int              # trainer base seed (all PRNG streams derive here)
+    meta: Dict[str, int]   # config echo, validated on resume
+
+
+def save_stream(path: str, nwk_phys, nk, cursor, seed: int,
+                meta: Dict[str, int]) -> None:
+    """Atomically persist the stream trainer's PS state + cursor."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, nwk_phys=np.asarray(nwk_phys), nk=np.asarray(nk),
+                 epoch=cursor.epoch, pos=cursor.pos, seed=seed,
+                 **{f"meta_{k}": v for k, v in meta.items()})
+    os.replace(tmp, path)
+
+
+def restore_stream(path: str) -> StreamCheckpoint:
+    from repro.data.stream import Cursor
+    with np.load(path) as data:
+        meta = {k[len("meta_"):]: int(data[k])
+                for k in data.files if k.startswith("meta_")}
+        return StreamCheckpoint(
+            nwk_phys=data["nwk_phys"], nk=data["nk"],
+            cursor=Cursor(int(data["epoch"]), int(data["pos"])),
+            seed=int(data["seed"]), meta=meta)

@@ -7,12 +7,18 @@ sharding/specs.py and batch inputs sharded over the dp axes.
 ``fit_lda`` is the LDA-side counterpart: the host loop that drives the
 asynchronous pipelined executor (train/async_exec.py) sweep by sweep --
 the single entry point the LDA launcher and benchmarks build on.
+``fit_lda_stream`` extends it to the out-of-core setting: a multi-epoch
+trainer over a sharded on-disk corpus (data/stream.py) with resumable
+mid-epoch checkpoints (train/checkpoint.py ``save_stream``).
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -183,6 +189,201 @@ def fit_lda(state, key: jax.Array, cfg, exec_cfg, sweeps: int,
             log_fn(f"[lda] sweep {i+1:4d}  perplexity {p:9.2f}  "
                    f"({el:.1f}s, {num_tokens * (i + 1) / el:,.0f} tok/s)")
     return state, history, info
+
+
+# ---------------------------------------------------------------------------
+# Out-of-core streaming trainer (DESIGN.md section 9).
+# ---------------------------------------------------------------------------
+#
+# Every random draw derives from one base seed through ``fold_in`` chains
+# keyed by *schedule position*, never by host iteration state: the init
+# stream for shard ``s`` and the sweep stream for (epoch, pos) are pure
+# functions of (seed, position).  That is what makes resume bitwise: a
+# restored run regenerates exactly the keys the uninterrupted run would
+# have used, with no RNG state to persist.
+
+def stream_init_key(seed: int, shard_id: int) -> jax.Array:
+    """Key for shard ``shard_id``'s initial topic assignment draw."""
+    base = jax.random.fold_in(jax.random.PRNGKey(seed), 0)
+    return jax.random.fold_in(base, shard_id)
+
+
+def stream_sweep_key(seed: int, epoch: int, pos: int) -> jax.Array:
+    """Key for the sweep at schedule position (epoch, pos)."""
+    base = jax.random.fold_in(jax.random.PRNGKey(seed), 1)
+    return jax.random.fold_in(jax.random.fold_in(base, epoch), pos)
+
+
+def init_stream(reader, cfg, seed: int = 0, client=None):
+    """Pass 0 of stream training: draw every shard's initial assignments
+    (persisted as the shard's ``z`` file) and histogram the global count
+    tables.  One streaming pass; host memory is O(V x K) + one shard --
+    the same recovery shape as ``data.stream.rebuild_counts_from_stream``.
+
+    Returns ``(nwk, nk)`` PS handles holding the initial counts.
+    """
+    from repro import ps
+
+    meta = reader.meta
+    k = cfg.K
+    nwk = np.zeros((meta.vocab_size, k), np.int32)
+    nk = np.zeros(k, np.int64)
+    for sid in range(meta.num_shards):
+        shard = reader.shard(sid, load_z=False)
+        z = np.array(jax.random.randint(
+            stream_init_key(seed, sid), (meta.tokens_per_shard,), 0, k,
+            dtype=jnp.int32))                   # np.array: writable copy
+        z[shard.n_tokens:] = 0
+        reader.write_z(sid, z)
+        wv = np.asarray(shard.w[:shard.n_tokens])
+        zv = z[:shard.n_tokens]
+        np.add.at(nwk, (wv, zv), 1)
+        nk += np.bincount(zv, minlength=k)
+    client = client or ps.client_for(cfg)
+    return (client.matrix_from_dense(jnp.asarray(nwk)),
+            client.wrap_vector(jnp.asarray(nk, dtype=jnp.int32)))
+
+
+def fit_lda_stream(reader, cfg, exec_cfg, epochs: int, *, seed: int = 0,
+                   checkpoint_path: Optional[str] = None,
+                   checkpoint_every: int = 0, resume: bool = False,
+                   max_shards: Optional[int] = None, eval_every: int = 0,
+                   prefetch: bool = True, log_fn=print):
+    """Multi-epoch out-of-core LDA training over a sharded stream.
+
+    The model (the PS count tables) is the only global state; token data
+    streams through shard by shard via the double-buffered
+    ``StreamingLoader`` (per-epoch shard-order shuffling with a fixed
+    PRNG).  Each shard visit rebuilds its worker-local ``n_dk`` from the
+    persisted assignments, runs one executor sweep against the *global*
+    ``n_wk``/``n_k`` handles, and writes the updated ``z`` back to the
+    stream directory -- the paper's section-3.5 discipline (assignments
+    are data; counts are derived).
+
+    ``checkpoint_path`` + ``checkpoint_every`` (in shards) persist the PS
+    state and loader cursor at shard boundaries; ``resume=True`` restores
+    from there and -- because all randomness is derived from (seed,
+    schedule position) -- continues **bitwise-identically** to a run that
+    never stopped (asserted in tests/test_checkpoint.py).  On resume the
+    checkpoint's seed overrides the argument.  ``max_shards`` stops after
+    that many shard visits (checkpointing first), which is how tests and
+    operators simulate preemption mid-epoch.
+
+    Returns ``(nwk, nk, history, info)``: the final PS handles, per-shard
+    history rows, and the executor's realised-schedule description.
+    """
+    from repro import ps
+    from repro.core import lightlda as lda
+    from repro.core import perplexity as ppl
+    from repro.data import stream as stream_mod
+    from repro.train import async_exec
+    from repro.train import checkpoint as ckpt
+
+    if isinstance(reader, str):
+        reader = stream_mod.ShardedCorpusReader(reader)
+    meta = reader.meta
+    if exec_cfg.model_blocks == 0 and meta.tokens_per_shard % cfg.block_tokens:
+        raise ValueError(
+            f"tokens_per_shard={meta.tokens_per_shard} must be a multiple "
+            f"of block_tokens={cfg.block_tokens} for the snapshot executor")
+
+    ckpt_meta = {"vocab_size": cfg.V, "num_topics": cfg.K,
+                 "ps_shards": cfg.num_shards,
+                 "tokens_per_shard": meta.tokens_per_shard,
+                 "stream_shards": meta.num_shards}
+    client = ps.client_for(cfg)
+    if resume:
+        if not (checkpoint_path and os.path.exists(checkpoint_path)):
+            raise FileNotFoundError(
+                f"resume requested but no checkpoint at {checkpoint_path}")
+        saved = ckpt.restore_stream(checkpoint_path)
+        mismatch = {k: (saved.meta.get(k), v) for k, v in ckpt_meta.items()
+                    if saved.meta.get(k) != v}
+        if mismatch:
+            raise ValueError(f"checkpoint/config mismatch: {mismatch}")
+        seed = saved.seed
+        nwk = client.wrap_matrix(jnp.asarray(saved.nwk_phys), cfg.V)
+        nk = client.wrap_vector(jnp.asarray(saved.nk))
+        cursor = saved.cursor
+        log_fn(f"[stream] resumed at epoch {cursor.epoch} pos {cursor.pos} "
+               f"(seed {seed}) from {checkpoint_path}")
+    else:
+        nwk, nk = init_stream(reader, cfg, seed, client=client)
+        cursor = stream_mod.Cursor(0, 0)
+
+    step, build_index, info = async_exec.make_stream_executor(
+        cfg, exec_cfg, nwk.layout)
+    info = dict(info, stream_shards=meta.num_shards,
+                tokens_per_shard=meta.tokens_per_shard,
+                num_tokens=meta.num_tokens)
+    loader = stream_mod.StreamingLoader(reader, seed=seed,
+                                        prefetch=prefetch)
+    valid_np = np.arange(meta.tokens_per_shard)
+    history = []
+    shards_done = 0
+    t0 = time.time()
+    tokens_seen = 0
+
+    def _checkpoint(cur_next):
+        ckpt.save_stream(checkpoint_path, np.asarray(nwk.value),
+                         np.asarray(nk.value), cur_next, seed, ckpt_meta)
+
+    for cur, sid, shard in loader.iterate(cursor, epochs):
+        if shard.z is None:
+            raise FileNotFoundError(
+                f"shard {sid} has no z file; stream was never initialised")
+        w = jnp.asarray(shard.w)
+        d = jnp.asarray(shard.d)
+        z = jnp.asarray(shard.z)
+        valid = jnp.asarray(valid_np < shard.n_tokens)
+        ndk = jnp.zeros((meta.doc_cap, cfg.K), jnp.int32).at[d, z].add(
+            valid.astype(jnp.int32))
+        state = lda.SamplerState(w, d, z, valid,
+                                 jnp.asarray(shard.doc_start),
+                                 jnp.asarray(shard.doc_len), nwk, nk, ndk)
+        key = stream_sweep_key(seed, cur.epoch, cur.pos)
+        if build_index is not None:
+            idx, bval = build_index(shard.w, np.asarray(valid))
+            state = step(state, key, idx, bval)
+        else:
+            state = step(state, key)
+        reader.write_z(sid, np.asarray(state.z))
+        nwk, nk = state.nwk, state.nk
+        shards_done += 1
+        tokens_seen += shard.n_tokens
+        cur_next = cur.next(meta.num_shards)
+
+        if eval_every and shards_done % eval_every == 0:
+            p = float(ppl.training_perplexity(
+                state.w, state.d, state.valid, state.ndk,
+                state.nwk.to_dense(), state.nk.value, cfg.alpha, cfg.beta))
+            el = time.time() - t0
+            history.append({"epoch": cur.epoch, "pos": cur.pos,
+                            "shard": sid, "perplexity": p,
+                            "elapsed_s": el,
+                            "tokens_per_s": tokens_seen / el})
+            log_fn(f"[stream] epoch {cur.epoch} shard {cur.pos:3d} "
+                   f"(#{sid})  perplexity {p:9.2f}  "
+                   f"({tokens_seen / el:,.0f} tok/s)")
+        if (checkpoint_path and checkpoint_every
+                and shards_done % checkpoint_every == 0):
+            _checkpoint(cur_next)
+        if max_shards is not None and shards_done >= max_shards:
+            if checkpoint_path:
+                _checkpoint(cur_next)
+            log_fn(f"[stream] stopping after {shards_done} shards "
+                   f"(max_shards), cursor -> epoch {cur_next.epoch} "
+                   f"pos {cur_next.pos}")
+            return nwk, nk, history, info
+
+    if checkpoint_path:
+        _checkpoint(stream_mod.Cursor(epochs, 0))
+    if shards_done:
+        el = time.time() - t0
+        log_fn(f"[stream] done: {shards_done} shard visits, "
+               f"{tokens_seen} tokens in {el:.1f}s "
+               f"({tokens_seen / el:,.0f} tok/s)")
+    return nwk, nk, history, info
 
 
 def fit(state: TrainState, batches, cfg: ModelConfig, tc: TrainConfig,

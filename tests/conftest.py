@@ -1,0 +1,119 @@
+"""Shared test fixtures (ISSUE 4 satellite): one deterministic corpus/state
+builder instead of per-file copies, a ready-made stream directory, and the
+``multidevice`` marker that replaces hand-rolled device-count skips.
+
+The LDA state factory memoises by arguments: sampler states are
+functional/immutable, so tests can safely share one instance, and the
+repeated ``generate_lda_corpus`` + ``init_state`` cost (the dominant
+fixed cost of the executor suites) is paid once per unique shape.
+"""
+import numpy as np
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "multidevice(n): requires >= n JAX devices; runs under the "
+        "forced-4-device CI matrix entry "
+        "(XLA_FLAGS=--xla_force_host_platform_device_count=4) and is "
+        "skipped on plain single-device hosts")
+
+
+def pytest_collection_modifyitems(config, items):
+    import jax
+
+    have = jax.device_count()
+    for item in items:
+        mark = item.get_closest_marker("multidevice")
+        if mark is None:
+            continue
+        need = mark.args[0] if mark.args else 2
+        if have < need:
+            item.add_marker(pytest.mark.skip(
+                reason=f"needs >= {need} devices, have {have} (run under "
+                       "XLA_FLAGS=--xla_force_host_platform_device_"
+                       "count=4 to exercise)"))
+
+
+def make_lda_state(seed=0, num_docs=120, vocab=300, k=8, num_shards=2,
+                   block_tokens=512, use_kernels=False, mean_doc_len=40,
+                   true_topics=None):
+    """Build ``(corpus, cfg, state)`` for a tiny deterministic LDA problem.
+
+    Plain function (not a fixture) so hypothesis ``@given`` bodies can
+    call it too; the ``lda_state`` fixture below adds cross-test
+    memoisation on top.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import lightlda as lda
+    from repro.data import corpus as corpus_mod
+
+    corp = corpus_mod.generate_lda_corpus(
+        seed=seed, num_docs=num_docs, mean_doc_len=mean_doc_len,
+        vocab_size=vocab,
+        num_topics=true_topics if true_topics else max(2, k - 2))
+    cfg = lda.LDAConfig(num_topics=k, vocab_size=vocab,
+                        block_tokens=block_tokens, num_shards=num_shards,
+                        use_kernels=use_kernels)
+    state = lda.init_state(jax.random.PRNGKey(seed), jnp.asarray(corp.w),
+                           jnp.asarray(corp.d), corp.num_docs, cfg)
+    return corp, cfg, state
+
+
+@pytest.fixture(scope="session")
+def lda_state():
+    """Memoising factory: ``lda_state(seed=..., vocab=...)`` -> (corpus,
+    cfg, state).  States are immutable pytrees, so sharing across tests
+    is safe."""
+    cache = {}
+
+    def factory(**kw):
+        key = tuple(sorted(kw.items()))
+        if key not in cache:
+            cache[key] = make_lda_state(**kw)
+        return cache[key]
+
+    return factory
+
+
+@pytest.fixture(scope="session")
+def tiny_corpus():
+    """The shared tiny deterministic corpus (~4.7k tokens, V=300)."""
+    from repro.data import corpus as corpus_mod
+
+    return corpus_mod.generate_lda_corpus(
+        seed=0, num_docs=120, mean_doc_len=40, vocab_size=300,
+        num_topics=6)
+
+
+@pytest.fixture
+def stream_dir(tmp_path, tiny_corpus):
+    """A written stream directory over ``tiny_corpus`` (5 shards of 1024
+    tokens) plus its reader: ``(path, reader, corpus)``."""
+    from repro.data import stream as stream_mod
+
+    path = str(tmp_path / "stream")
+    stream_mod.write_sharded(path, tiny_corpus, tokens_per_shard=1024)
+    return path, stream_mod.ShardedCorpusReader(path), tiny_corpus
+
+
+@pytest.fixture(scope="session")
+def coo_batches():
+    """Factory for random COO delta batches (rows, cols, +/-1 vals) --
+    shared by the push_sparse exactly-once suites."""
+    import jax.numpy as jnp
+
+    def factory(v, k, n_batches, per_batch, seed):
+        rng = np.random.default_rng(seed)
+        out = []
+        for _ in range(n_batches):
+            rows = rng.integers(0, v, size=per_batch).astype(np.int32)
+            cols = rng.integers(0, k, size=per_batch).astype(np.int32)
+            vals = rng.integers(-1, 2, size=per_batch).astype(np.int32)
+            out.append((jnp.asarray(rows), jnp.asarray(cols),
+                        jnp.asarray(vals)))
+        return out
+
+    return factory

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import make_lda_state
 from repro.core import lightlda as lda
 from repro.data import corpus as corpus_mod
 from repro.train import async_exec
@@ -29,18 +30,6 @@ try:
     HAVE_HYPOTHESIS = True
 except ImportError:
     HAVE_HYPOTHESIS = False
-
-
-def _make_state(seed=0, num_docs=120, vocab=300, k=8, num_shards=2,
-                block_tokens=512):
-    corp = corpus_mod.generate_lda_corpus(
-        seed=seed, num_docs=num_docs, mean_doc_len=40, vocab_size=vocab,
-        num_topics=max(2, k - 2))
-    cfg = lda.LDAConfig(num_topics=k, vocab_size=vocab,
-                        block_tokens=block_tokens, num_shards=num_shards)
-    state = lda.init_state(jax.random.PRNGKey(seed), jnp.asarray(corp.w),
-                           jnp.asarray(corp.d), corp.num_docs, cfg)
-    return corp, cfg, state
 
 
 def _block_index(state, cfg, n_blocks):
@@ -83,8 +72,8 @@ class TestStalenessZeroBitwise:
     """The acceptance anchor: s=0 executor == synchronous path, bitwise."""
 
     @pytest.mark.parametrize("hot_words", [None, 0, 37])
-    def test_matches_sweep_blocked_ref(self, hot_words):
-        corp, cfg, state = _make_state()
+    def test_matches_sweep_blocked_ref(self, lda_state, hot_words):
+        corp, cfg, state = lda_state()
         idx, bval, rpb = _block_index(state, cfg, n_blocks=6)
         key = jax.random.PRNGKey(7)
         ref = jax.jit(lambda s_, k: lda.sweep_blocked_ref(
@@ -97,9 +86,9 @@ class TestStalenessZeroBitwise:
         assert bool((ref.nk.value == got.nk.value).all())
         assert bool((ref.ndk == got.ndk).all())
 
-    def test_public_sweep_blocked_routes_through_executor(self):
+    def test_public_sweep_blocked_routes_through_executor(self, lda_state):
         """lightlda.sweep_blocked is the executor now; defaults unchanged."""
-        corp, cfg, state = _make_state(seed=3)
+        corp, cfg, state = lda_state(seed=3)
         idx, bval, rpb = _block_index(state, cfg, n_blocks=4)
         key = jax.random.PRNGKey(11)
         ref = lda.sweep_blocked_ref(state, key, cfg, idx, bval, rpb)
@@ -107,10 +96,10 @@ class TestStalenessZeroBitwise:
         assert bool((ref.z == got.z).all())
         assert bool((ref.nwk.value == got.nwk.value).all())
 
-    def test_hybrid_split_never_changes_values(self):
+    def test_hybrid_split_never_changes_values(self, lda_state):
         """Dense-hot + sparse-cold is a traffic split, not a semantic one:
         identical results at any boundary (integer adds are exact)."""
-        corp, cfg, state = _make_state(seed=5)
+        corp, cfg, state = lda_state(seed=5)
         idx, bval, rpb = _block_index(state, cfg, n_blocks=6)
         key = jax.random.PRNGKey(13)
         outs = [async_exec.pipelined_sweep(state, key, cfg, idx, bval, rpb,
@@ -126,8 +115,8 @@ class TestConservation:
     @pytest.mark.parametrize("staleness,hot_words", [
         (0, None), (1, None), (2, 50), (5, 0), (3, 300),
     ])
-    def test_blocked_executor(self, staleness, hot_words):
-        corp, cfg, state = _make_state()
+    def test_blocked_executor(self, lda_state, staleness, hot_words):
+        corp, cfg, state = lda_state()
         idx, bval, rpb = _block_index(state, cfg, n_blocks=6)
         key = jax.random.PRNGKey(1)
         for i in range(2):
@@ -140,8 +129,8 @@ class TestConservation:
     @pytest.mark.parametrize("staleness,hot_words", [
         (1, None), (3, 64), (7, 0),
     ])
-    def test_snapshot_executor(self, staleness, hot_words):
-        corp, cfg, state = _make_state(seed=2)
+    def test_snapshot_executor(self, lda_state, staleness, hot_words):
+        corp, cfg, state = lda_state(seed=2)
         key = jax.random.PRNGKey(2)
         for i in range(2):
             key, sub = jax.random.split(key)
@@ -150,13 +139,13 @@ class TestConservation:
                 state, sub)
             _assert_conserved(state, cfg, corp.num_tokens)
 
-    def test_staleness_converges_like_sync(self):
+    def test_staleness_converges_like_sync(self, lda_state):
         """The MH correction tolerates the stale proposals: perplexity
         after a stale-executor run lands near the synchronous run's."""
         from repro.core import perplexity as ppl
 
-        corp, cfg, state = _make_state(seed=4, num_docs=200, vocab=400,
-                                       k=10, num_shards=4)
+        corp, cfg, state = lda_state(seed=4, num_docs=200, vocab=400,
+                                     k=10, num_shards=4)
         idx, bval, rpb = _block_index(state, cfg, n_blocks=4)
 
         def run(staleness):
@@ -176,11 +165,11 @@ class TestConservation:
 
 
 class TestKernelPathEquality:
-    def test_kernel_executor_matches_oracle_executor(self):
+    def test_kernel_executor_matches_oracle_executor(self, lda_state):
         """The Pallas path (MH kernel + hot delta_push kernel + COO cold
         tail) through the pipelined executor is bit-identical to the jnp
         oracle path, staleness and hybrid split included."""
-        corp, _, _ = _make_state(seed=6)
+        corp, _, _ = lda_state(seed=6)
         outs = {}
         for uk in (False, True):
             cfg = lda.LDAConfig(num_topics=8, vocab_size=300,
@@ -199,8 +188,8 @@ class TestKernelPathEquality:
 
 
 class TestMakeExecutor:
-    def test_blocked_info_and_group_cap(self):
-        corp, cfg, state = _make_state(num_shards=4)
+    def test_blocked_info_and_group_cap(self, lda_state):
+        corp, cfg, state = lda_state(num_shards=4)
         step, info = async_exec.make_executor(
             state, cfg, async_exec.ExecConfig(staleness=1, model_blocks=4))
         assert info["mode"] == "blocked"
@@ -208,16 +197,16 @@ class TestMakeExecutor:
         st = step(state, jax.random.PRNGKey(0))
         _assert_conserved(st, cfg, corp.num_tokens)
 
-    def test_snapshot_mode(self):
-        corp, cfg, state = _make_state()
+    def test_snapshot_mode(self, lda_state):
+        corp, cfg, state = lda_state()
         step, info = async_exec.make_executor(
             state, cfg, async_exec.ExecConfig(staleness=2))
         assert info["mode"] == "snapshot"
         st = step(state, jax.random.PRNGKey(0))
         _assert_conserved(st, cfg, corp.num_tokens)
 
-    def test_fit_lda_host_loop(self):
-        corp, cfg, state = _make_state()
+    def test_fit_lda_host_loop(self, lda_state):
+        corp, cfg, state = lda_state()
         state, history, info = train_loop.fit_lda(
             state, jax.random.PRNGKey(5), cfg,
             async_exec.ExecConfig(staleness=1, hot_words=64,
@@ -228,10 +217,7 @@ class TestMakeExecutor:
         _assert_conserved(state, cfg, corp.num_tokens)
 
 
-@pytest.mark.skipif(jax.device_count() < 2,
-                    reason="needs >= 2 devices (run tier-1 under "
-                           "XLA_FLAGS=--xla_force_host_platform_device_"
-                           "count=4 to exercise)")
+@pytest.mark.multidevice(2)
 class TestDistributedExecutor:
     """In-process SPMD executor: exercised by the forced-4-device CI
     matrix entry; skipped on plain single-device hosts."""
@@ -288,7 +274,7 @@ if HAVE_HYPOTHESIS:
         """Random corpora x random schedules: whatever interleaving of
         pull/push events the (staleness, hot-word, geometry) draw induces,
         token mass is conserved and counts match the z histogram."""
-        corp, cfg, state = _make_state(
+        corp, cfg, state = make_lda_state(
             seed=seed, num_docs=num_docs, vocab=vocab, k=k,
             num_shards=num_shards, block_tokens=256)
         layout = state.nwk.layout
@@ -308,8 +294,9 @@ if HAVE_HYPOTHESIS:
     def test_staleness_zero_bitwise_hypothesis(seed, staleness):
         """s=0 must stay bitwise-identical for any corpus draw; s>0 must
         at least preserve the conservation law on the same draw."""
-        corp, cfg, state = _make_state(seed=seed, num_docs=50, vocab=120,
-                                       k=6, num_shards=3, block_tokens=256)
+        corp, cfg, state = make_lda_state(seed=seed, num_docs=50,
+                                          vocab=120, k=6, num_shards=3,
+                                          block_tokens=256)
         idx, bval, rpb = _block_index(state, cfg, n_blocks=4)
         key = jax.random.PRNGKey(seed)
         ref = lda.sweep_blocked_ref(state, key, cfg, idx, bval, rpb)

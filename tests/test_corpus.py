@@ -1,16 +1,39 @@
 """Corpus pipeline: Zipf statistics (paper fig. 4), frequency ordering
-(section 3.2), shard balance."""
+(section 3.2), shard balance -- plus edge-case and hypothesis property
+tests for ``reindex`` / ``shard_tokens`` / ``train_heldout_split``
+(ISSUE 4 satellite: these caught the empty-shard offsets bug where
+``doc_start`` had a phantom entry while ``doc_len`` was empty, and empty
+shards skipped block padding entirely)."""
 import numpy as np
 import pytest
 
 from repro.data import corpus as corpus_mod
 from repro.data.lm_data import LMDataConfig, MarkovZipfSource, token_frequencies
 
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
 
 @pytest.fixture(scope="module")
 def corp():
     return corpus_mod.generate_lda_corpus(
         seed=0, num_docs=500, mean_doc_len=80, vocab_size=2000, num_topics=10)
+
+
+def _assert_corpus_consistent(c):
+    """Structural invariants every Corpus must satisfy."""
+    assert c.doc_start.shape == c.doc_len.shape
+    assert int(c.doc_len.sum()) == c.num_tokens
+    if c.num_docs:
+        assert c.doc_start[0] == 0
+        assert (c.doc_start[1:] == c.doc_start[:-1] + c.doc_len[:-1]).all()
+    # frequency-ordered vocabulary (paper section 3.2)
+    assert (c.word_freq[:-1] >= c.word_freq[1:]).all()
+    assert np.array_equal(np.bincount(c.w, minlength=c.vocab_size),
+                          c.word_freq)
 
 
 class TestZipf:
@@ -57,6 +80,143 @@ class TestSharding:
         train, held = corpus_mod.train_heldout_split(corp, 0.2)
         assert train.vocab_size == held.vocab_size == corp.vocab_size
         assert train.num_tokens + held.num_tokens == corp.num_tokens
+
+
+class TestShardEdgeCases:
+    """The cases that exposed the padding/offsets bug: shards with no
+    documents, and blocks bigger than a shard's token count."""
+
+    def _tiny(self):
+        w = np.array([0, 1, 0, 2, 1, 0, 3, 0], np.int64)
+        d = np.array([0, 0, 0, 1, 1, 2, 2, 2], np.int64)
+        return corpus_mod.reindex(w, d, vocab_size=5)
+
+    def test_more_shards_than_docs(self):
+        c = self._tiny()
+        shards = corpus_mod.shard_tokens(c, num_shards=6, block_tokens=4)
+        assert len(shards) == 6
+        total = 0
+        for w, d, valid, ds, dl in shards:
+            # the fix: doc_start/doc_len lengths agree even when empty,
+            # and empty shards still pad to a full (all-invalid) block
+            assert ds.shape == dl.shape
+            assert len(w) > 0 and len(w) % 4 == 0
+            assert len(w) == len(d) == len(valid)
+            n = int(valid.sum())
+            assert int(dl.sum()) == n
+            assert not valid[n:].any()
+            total += n
+        assert total == c.num_tokens
+        assert sum(1 for s in shards if int(s[2].sum()) == 0) == 3
+
+    def test_block_tokens_larger_than_shard(self):
+        c = self._tiny()
+        shards = corpus_mod.shard_tokens(c, num_shards=2, block_tokens=64)
+        for w, d, valid, ds, dl in shards:
+            assert len(w) == 64          # padded up to one full block
+            assert int(valid.sum()) == int(dl.sum())
+
+    def test_reindex_empty(self):
+        c = corpus_mod.reindex(np.zeros(0, np.int64), np.zeros(0, np.int64),
+                               vocab_size=4)
+        assert c.num_tokens == 0 and c.num_docs == 0
+        assert c.doc_start.shape == c.doc_len.shape == (0,)
+        _assert_corpus_consistent(c)
+
+    def test_heldout_split_extreme_fractions(self):
+        c = self._tiny()
+        train, held = corpus_mod.train_heldout_split(c, heldout_frac=0.0)
+        assert held.num_tokens == 0
+        assert held.doc_start.shape == held.doc_len.shape == (0,)
+        assert train.num_tokens == c.num_tokens
+
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def _token_lists(draw):
+        n = draw(st.integers(1, 120))
+        vocab = draw(st.integers(1, 30))
+        ndocs = draw(st.integers(1, 12))
+        w = draw(st.lists(st.integers(0, vocab - 1), min_size=n,
+                          max_size=n))
+        d = draw(st.lists(st.integers(0, ndocs - 1), min_size=n,
+                          max_size=n))
+        return (np.asarray(w, np.int64), np.asarray(d, np.int64), vocab)
+
+    @given(_token_lists())
+    @settings(max_examples=40, deadline=None)
+    def test_reindex_roundtrip(tokens):
+        """reindex conserves the token multiset per document and is
+        idempotent (already frequency-ordered + compact input is a fixed
+        point)."""
+        w, d, vocab = tokens
+        c = corpus_mod.reindex(w, d, vocab)
+        _assert_corpus_consistent(c)
+        assert c.num_tokens == len(w)
+        assert c.num_docs == len(np.unique(d))
+        # per-document token *counts* survive (ids are renamed by rank)
+        want = sorted(np.bincount(d)[np.bincount(d) > 0].tolist())
+        assert sorted(c.doc_len.tolist()) == want
+        # idempotence
+        c2 = corpus_mod.reindex(c.w, c.d, vocab)
+        assert np.array_equal(c2.w, c.w)
+        assert np.array_equal(c2.d, c.d)
+        assert np.array_equal(c2.doc_start, c.doc_start)
+        assert np.array_equal(c2.word_freq, c.word_freq)
+
+    @given(_token_lists(), st.integers(1, 7), st.sampled_from([2, 4, 16]))
+    @settings(max_examples=40, deadline=None)
+    def test_shard_tokens_conservation(tokens, num_shards, block_tokens):
+        """Token mass is conserved across any shard count, every shard is
+        block-padded, and each document lands on exactly one shard."""
+        w, d, vocab = tokens
+        c = corpus_mod.reindex(w, d, vocab)
+        shards = corpus_mod.shard_tokens(c, num_shards, block_tokens)
+        assert len(shards) == num_shards
+        total, docs = 0, 0
+        freq = np.zeros(vocab, np.int64)
+        for sw, sd, valid, ds, dl in shards:
+            assert ds.shape == dl.shape
+            assert len(sw) % block_tokens == 0 and len(sw) > 0
+            n = int(valid.sum())
+            assert int(dl.sum()) == n
+            total += n
+            docs += len(dl)
+            freq += np.bincount(sw[valid], minlength=vocab)
+        assert total == c.num_tokens
+        assert docs == c.num_docs
+        assert np.array_equal(freq, c.word_freq)
+
+    @given(_token_lists(), st.floats(0.0, 1.0), st.integers(0, 5))
+    @settings(max_examples=40, deadline=None)
+    def test_train_heldout_disjoint(tokens, frac, seed):
+        """The split partitions tokens: counts sum to the parent's, word
+        ids keep the parent ordering, offsets stay consistent."""
+        w, d, vocab = tokens
+        c = corpus_mod.reindex(w, d, vocab)
+        train, held = corpus_mod.train_heldout_split(c, frac, seed=seed)
+        assert train.num_tokens + held.num_tokens == c.num_tokens
+        assert train.num_docs + held.num_docs == c.num_docs
+        for part in (train, held):
+            assert part.doc_start.shape == part.doc_len.shape
+            assert int(part.doc_len.sum()) == part.num_tokens
+        # both halves keep the parent's word ids: frequency histograms
+        # add back up exactly (disjointness + completeness of the split)
+        fsum = (np.bincount(train.w, minlength=vocab)
+                + np.bincount(held.w, minlength=vocab))
+        assert np.array_equal(fsum, c.word_freq)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_reindex_roundtrip():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_shard_tokens_conservation():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_train_heldout_disjoint():
+        pass
 
 
 class TestLMData:

@@ -121,29 +121,22 @@ class TestDistributedMatrix:
 
 class TestPushSparse:
     """Commutativity / exactly-once of the sparse coordinate push
-    (paper section 2.5: addition makes any order and batching legal)."""
+    (paper section 2.5: addition makes any order and batching legal).
 
-    def _batches(self, v, k, n_batches, per_batch, seed):
-        rng = np.random.default_rng(seed)
-        out = []
-        for _ in range(n_batches):
-            rows = rng.integers(0, v, size=per_batch).astype(np.int32)
-            cols = rng.integers(0, k, size=per_batch).astype(np.int32)
-            vals = rng.integers(-1, 2, size=per_batch).astype(np.int32)
-            out.append((jnp.asarray(rows), jnp.asarray(cols),
-                        jnp.asarray(vals)))
-        return out
+    Delta batches come from the shared ``coo_batches`` factory
+    (tests/conftest.py)."""
 
     @pytest.mark.parametrize("shards", [1, 2, 4])
-    def test_permuted_batches_equal_merged_dense_push(self, shards):
+    def test_permuted_batches_equal_merged_dense_push(self, coo_batches,
+                                                      shards):
         """Applying a permuted sequence of sparse delta batches yields the
         same matrix as one merged dense push -- each delta applies exactly
         once regardless of arrival order or batching."""
         v, k = 23, 7
         base = jax.random.randint(jax.random.PRNGKey(shards), (v, k), 0, 50)
         m0 = DistributedMatrix.from_dense(base, shards)
-        batches = self._batches(v, k, n_batches=5, per_batch=40,
-                                seed=shards)
+        batches = coo_batches(v, k, n_batches=5, per_batch=40,
+                              seed=shards)
 
         # one merged dense push of everything
         merged = jnp.zeros((v, k), jnp.int32)
@@ -159,11 +152,11 @@ class TestPushSparse:
                                           np.asarray(want))
 
     @pytest.mark.parametrize("shards", [1, 2, 4])
-    def test_kernel_route_matches_scatter_route(self, shards):
+    def test_kernel_route_matches_scatter_route(self, coo_batches, shards):
         v, k = 40, 9
         m0 = DistributedMatrix.from_dense(
             jax.random.randint(jax.random.PRNGKey(7), (v, k), 0, 9), shards)
-        (rows, cols, vals), = self._batches(v, k, 1, 64, seed=3)
+        (rows, cols, vals), = coo_batches(v, k, 1, 64, seed=3)
         a = m0.push_sparse(rows, cols, vals).to_dense()
         b = m0.push_sparse(rows, cols, vals, use_kernel=True).to_dense()
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -23,9 +23,8 @@ import os
 import time
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import lightlda as lda
+from repro import api
 from repro.data import corpus as corpus_mod
 from repro.train import async_exec
 
@@ -33,17 +32,21 @@ OUT = "experiments/bench/BENCH_async.json"
 
 
 def _setup(num_docs, vocab, k, shards, seed=0):
-    corp = corpus_mod.generate_lda_corpus(
-        seed=seed, num_docs=num_docs, mean_doc_len=60, vocab_size=vocab,
-        num_topics=max(4, k // 2))
-    cfg = lda.LDAConfig(num_topics=k, vocab_size=vocab, num_shards=shards)
-    state = lda.init_state(jax.random.PRNGKey(seed), jnp.asarray(corp.w),
-                           jnp.asarray(corp.d), corp.num_docs, cfg)
-    return corp, cfg, state
+    """Corpus + initial sampler state, built ONCE through the api session
+    and reused for every grid point (state construction is identical
+    across exec configs, so rebuilding it per point is pure overhead)."""
+    corp = corpus_mod.synthetic_corpus(num_docs, vocab, model_topics=k,
+                                       mean_doc_len=60, seed=seed)
+    job = api.LDAJob(corpus=corp, num_topics=k, num_shards=shards,
+                     sweeps=1, eval_every=0, seed=seed)
+    sess = api.Session(job, log_fn=lambda *a, **kw: None)
+    state, _, _ = sess.make_step()
+    return corp, sess.cfg, state
 
 
 def _tokens_per_s(state, cfg, exec_cfg, num_tokens, iters, repeats=2):
-    """Best-of-``repeats`` throughput of ``iters`` jitted sweeps."""
+    """Best-of-``repeats`` throughput of ``iters`` jitted sweeps of the
+    executor under ``exec_cfg`` (the layer the api session drives)."""
     step, info = async_exec.make_executor(state, cfg, exec_cfg)
     st = step(state, jax.random.PRNGKey(1))
     jax.block_until_ready(st.z)                     # compile + warm

@@ -36,9 +36,8 @@ def ps_bytes_from_hlo(workers: int, model: int, vocab: int, k: int,
         from repro.launch import lda as L
         from repro.analysis import hlo_stats as H
 
-        corp = corpus_mod.generate_lda_corpus(seed=0, num_docs=300,
-            mean_doc_len={max(tokens // 300, 8)}, vocab_size={vocab},
-            num_topics=8)
+        corp = corpus_mod.synthetic_corpus(300, {vocab}, true_topics=8,
+            mean_doc_len={max(tokens // 300, 8)}, seed=0)
         cfg = lda.LDAConfig(num_topics={k}, vocab_size={vocab},
                             block_tokens=1024, num_shards={model})
         data = {workers} // {model}

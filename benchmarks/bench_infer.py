@@ -19,28 +19,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import lightlda as lda
+from repro import api
 from repro.data import corpus as corpus_mod
 from repro.infer.engine import EngineConfig, QueryEngine
 from repro.infer.foldin import FoldInConfig, fold_in_batch, pack_docs
-from repro.infer.snapshot import SnapshotPublisher
 
 OUT = "experiments/bench/BENCH_infer.json"
 
 
 def _trained_snapshot(num_docs, vocab, k, sweeps, seed=0):
-    corp = corpus_mod.generate_lda_corpus(
-        seed=seed, num_docs=num_docs, mean_doc_len=60, vocab_size=vocab,
-        num_topics=max(4, k // 2))
-    cfg = lda.LDAConfig(num_topics=k, vocab_size=vocab, block_tokens=4096)
-    state = lda.init_state(jax.random.PRNGKey(seed), jnp.asarray(corp.w),
-                           jnp.asarray(corp.d), corp.num_docs, cfg)
-    state = lda.train(state, jax.random.PRNGKey(seed + 1), cfg, sweeps)
-    pub = SnapshotPublisher(cfg)
+    corp = corpus_mod.synthetic_corpus(num_docs, vocab, model_topics=k,
+                                       mean_doc_len=60, seed=seed)
+    job = api.LDAJob(corpus=corp, num_topics=k, block_tokens=4096,
+                     sweeps=sweeps, eval_every=0, seed=seed)
+    model = api.APSLDA(job, log_fn=lambda *a, **kw: None).fit()
     t0 = time.time()
-    snap = pub.publish_state(state)
+    pub = model.publisher()            # the once-per-version alias build
     publish_s = time.time() - t0
-    return cfg, pub, snap, publish_s
+    return model.cfg, pub, pub.acquire(), publish_s
 
 
 def _foldin_docs_per_s(snap, cfg, fcfg, docs, batch, length, iters=3):

@@ -19,9 +19,9 @@ def request_spread(freq: np.ndarray, assignment: np.ndarray) -> float:
 
 
 def main(fast: bool = False):
-    corp = corpus_mod.generate_lda_corpus(
-        seed=0, num_docs=600 if fast else 1500, mean_doc_len=80,
-        vocab_size=3000, num_topics=16)
+    corp = corpus_mod.synthetic_corpus(600 if fast else 1500, 3000,
+                                       true_topics=16, mean_doc_len=80,
+                                       seed=0)
     freq = corp.word_freq.astype(float)     # frequency-ordered (rank 0 hot)
     v = len(freq)
     lay = CyclicLayout(v, MACHINES)

@@ -125,26 +125,20 @@ def _run_child(path: str, budget: int, epochs: int) -> dict:
 def _train_smoke() -> dict:
     """Tiny end-to-end stream-training throughput (uses jax; in-process)."""
     import jax  # noqa: F401  (deferred: the child must never see this)
-    from repro.core import lightlda as lda
+    from repro import api
     from repro.data import corpus as corpus_mod
-    from repro.train import async_exec
-    from repro.train import loop as train_loop
 
     work = tempfile.mkdtemp(prefix="bench_stream_train_")
     try:
-        corp = corpus_mod.generate_lda_corpus(
-            seed=0, num_docs=800, mean_doc_len=60, vocab_size=2000,
-            num_topics=10)
+        corp = corpus_mod.synthetic_corpus(800, 2000, true_topics=10,
+                                           mean_doc_len=60, seed=0)
         stream_mod.write_sharded(os.path.join(work, "s"), corp,
                                  tokens_per_shard=8192)
-        cfg = lda.LDAConfig(num_topics=20, vocab_size=2000,
-                            block_tokens=2048, num_shards=4)
-        reader = stream_mod.ShardedCorpusReader(os.path.join(work, "s"))
+        job = api.LDAJob(stream_dir=os.path.join(work, "s"),
+                         num_topics=20, block_tokens=2048, num_shards=4,
+                         staleness=1, epochs=2, seed=0, eval_every=0)
         t0 = time.time()
-        train_loop.fit_lda_stream(reader, cfg,
-                                  async_exec.ExecConfig(staleness=1),
-                                  epochs=2, seed=0,
-                                  log_fn=lambda *a: None)
+        api.Session(job, log_fn=lambda *a, **kw: None).run()
         dt = time.time() - t0
         return {"tokens": 2 * corp.num_tokens, "seconds": dt,
                 "tokens_per_s": 2 * corp.num_tokens / dt}

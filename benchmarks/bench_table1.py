@@ -19,7 +19,6 @@ import numpy as np
 
 from repro.core import lda_em as em
 from repro.core import lda_online as ov
-from repro.core import lightlda as lda
 from repro.core import perplexity as ppl
 from repro.data import corpus as corpus_mod
 
@@ -35,11 +34,12 @@ def _ppl_counts(w, d, valid, ndk, nwk, nk, alpha, beta):
 
 
 def run_lightlda(corp, k, iters=ITERS):
-    cfg = lda.LDAConfig(num_topics=k, vocab_size=corp.vocab_size,
-                        block_tokens=8192)
-    st = lda.init_state(jax.random.PRNGKey(0), jnp.asarray(corp.w),
-                        jnp.asarray(corp.d), corp.num_docs, cfg)
-    sweep = jax.jit(lambda s, key: lda.sweep(s, key, cfg))
+    from repro import api
+
+    job = api.LDAJob(corpus=corp, num_topics=k, block_tokens=8192,
+                     sweeps=iters, eval_every=0, seed=0)
+    st, sweep, _ = api.Session(job, log_fn=lambda *a, **kw: None).make_step()
+    cfg = job.lda_config(corp.vocab_size)
     sweep(st, jax.random.PRNGKey(1))  # compile outside the timer
     key = jax.random.PRNGKey(2)
     t0 = time.time()
@@ -103,9 +103,8 @@ def run_online(corp, k, iters=ITERS):
 
 
 def main(fast: bool = False):
-    big = corpus_mod.generate_lda_corpus(
-        seed=0, num_docs=BASE_DOCS, mean_doc_len=80, vocab_size=VOCAB,
-        num_topics=TRUE_K)
+    big = corpus_mod.synthetic_corpus(BASE_DOCS, VOCAB, true_topics=TRUE_K,
+                                      mean_doc_len=80, seed=0)
     rows = []
     sizes = [0.25, 0.5, 0.75, 1.0]       # the paper's 2.5/5/7.5/10% ladder
     ks = [20] if fast else [20, 40, 60, 80]

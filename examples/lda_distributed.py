@@ -4,7 +4,8 @@ Workers (all mesh shards) sample their document partitions; servers (the
 model axis) hold cyclic rows of n_wk.  The count tables enter the sweep
 as ``repro.ps`` handles on an ``SpmdBackend`` (built by
 ``PSClient.create(axis_name=..., model_axis=...)`` inside
-``launch/lda.make_spmd_sweep``): pulls are all-gathers over the server
+``repro.api.session.make_spmd_sweep`` -- the launcher is a thin
+argv -> ``LDAJob`` translator): pulls are all-gathers over the server
 axis, pushes one psum per merge group.  Runs on 8 fake host devices
 here; on a pod the same code uses make_production_mesh().
 

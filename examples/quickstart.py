@@ -1,70 +1,64 @@
-"""Quickstart: train a topic model through the parameter-server client
-API (the paper's workload end-to-end) and print the discovered topics.
+"""Quickstart: the paper's workload end-to-end through ``repro.api`` --
+one declarative job from corpus to served model, in ~5 lines of user
+code: corpus -> fit -> transform -> publish -> score.
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro import ps
-from repro.core import lightlda as lda
-from repro.core import perplexity as ppl
+from repro import api
 from repro.data import corpus as corpus_mod
-from repro.train import async_exec
-from repro.train import loop as train_loop
 
 
 def main():
     # 1. A Zipfian corpus with frequency-ordered vocabulary (paper fig. 4 /
-    #    section 3.2) -- the stand-in for ClueWeb12 at laptop scale.
-    corp = corpus_mod.generate_lda_corpus(
-        seed=0, num_docs=800, mean_doc_len=80, vocab_size=2000,
-        num_topics=12)
-    print(f"corpus: {corp.num_tokens} tokens, {corp.num_docs} docs, "
-          f"V={corp.vocab_size}")
+    #    section 3.2) -- the stand-in for ClueWeb12 at laptop scale.  The
+    #    held-out docs never enter training; they are folded in below.
+    corp = corpus_mod.synthetic_corpus(800, 2000, true_topics=12,
+                                       mean_doc_len=80, log_fn=print)
+    train_corp, held = corpus_mod.train_heldout_split(corp, 0.1, seed=1)
 
-    # 2. The Glint-style client is the gateway to the count tables: it
-    #    owns the backend (in-process here; SpmdBackend on a mesh) and
-    #    hands out matrix/vector handles with async pull futures and
-    #    routed pushes.
-    cfg = lda.LDAConfig(num_topics=20, vocab_size=corp.vocab_size,
-                        block_tokens=8192, num_shards=4, mh_steps=2)
-    client = ps.client_for(cfg)
-    state = lda.init_state(jax.random.PRNGKey(0), jnp.asarray(corp.w),
-                           jnp.asarray(corp.d), corp.num_docs, cfg,
-                           client=client)
-    print(f"n_wk handle: {state.nwk.num_rows}x{state.nwk.cols} over "
-          f"{state.nwk.num_shards} cyclic shards, backend "
-          f"{type(client.backend).__name__}")
+    # 2. The whole run is one declarative job: in-memory source,
+    #    in-process backend, bounded-staleness executor, hybrid push route
+    #    (paper section 3.3: 100 hottest words dense, cold tail as
+    #    (row, col, +/-1) coordinate deltas).
+    job = api.LDAJob(corpus=train_corp, num_topics=20, num_shards=4,
+                     block_tokens=8192, mh_steps=2,
+                     route=api.HybridRoute(hot_words=100),
+                     sweeps=60, eval_every=15, seed=0)
 
-    #    The two Glint primitives, directly on the handle:
-    rows = state.nwk.pull(jnp.arange(4)).result()   # async pull -> await
-    print(f"pull(rows 0..3) -> {rows.shape}, {int(rows.sum())} tokens")
+    # 3. Fit.  The estimator drives the asynchronous executor through the
+    #    PS client and returns a frozen TopicModel.
+    model = api.APSLDA(job).fit()
+    print(f"\nfitted: {model} "
+          f"(final perplexity {model.history[-1]['perplexity']:.1f})")
 
-    # 3. Train through the executor: pushes travel the HybridRoute --
-    #    the 100 hottest words dense, the cold tail as (row, col, +/-1)
-    #    coordinate deltas (paper section 3.3).
-    exec_cfg = async_exec.ExecConfig(route=ps.HybridRoute(hot_words=100))
-    state, history, info = train_loop.fit_lda(
-        state, jax.random.PRNGKey(1), cfg, exec_cfg, sweeps=60,
-        eval_every=15)
+    # 4. Transform: fold unseen documents in against the frozen model
+    #    (batched MH inference; alias tables built once per snapshot).
+    docs = [held.w[s:s + n] for s, n in
+            zip(held.doc_start[:16], held.doc_len[:16])]
+    theta = model.transform(docs)
+    print(f"transform: theta {theta.shape}, rows sum to "
+          f"{theta.sum(axis=1).round(3).min()}..{theta.sum(axis=1).round(3).max()}")
 
-    # 4. Inspect the topics: top words by *lift* (phi_wk / p(w)) -- raw
-    #    probability would just list the Zipf head for every topic.
-    from repro.core import coherence
-    phi = np.asarray(ppl.phi_from_counts(
-        state.nwk.to_dense().astype(jnp.float32),
-        state.nk.value.astype(jnp.float32), cfg.beta))   # [V, K]
-    lift = phi / (phi.mean(1, keepdims=True) + 1e-12)
+    # 5. Publish: hand the model to the serving stack.  The publisher is
+    #    the live train->serve boundary (monotonic snapshot versions).
+    pub = model.publisher()
+    print(f"published snapshot v{pub.version}")
+
+    # 6. Score: topic-smoothed query likelihood (the paper's IR use
+    #    case).  Queries are the most *distinctive* words of the heaviest
+    #    topics.
+    top = model.top_words(num_words=8)
     print("\ntop words per topic by lift (word ids are frequency ranks):")
-    for k in range(min(8, cfg.K)):
-        top = np.argsort(-lift[:, k])[:8]
-        print(f"  topic {k:2d}: {top.tolist()}")
-    npmi = coherence.mean_coherence(phi, np.asarray(corp.w),
-                                    np.asarray(corp.d), cfg.V,
-                                    corp.num_docs)
-    print(f"\nmean topic coherence (NPMI): {npmi:.4f}")
+    for k in range(min(8, model.num_topics)):
+        print(f"  topic {k:2d}: {top[k].tolist()}")
+    queries = [top[k][:3].astype(np.int32) for k in range(4)]
+    scores = model.score(queries, docs)
+    for qi, q in enumerate(queries):
+        best = np.argsort(-scores[qi])[:3]
+        print(f"  query {q.tolist()}: best docs "
+              + ", ".join(f"{d} ({scores[qi, d]:.1f})" for d in best))
 
 
 if __name__ == "__main__":

@@ -1,13 +1,14 @@
 """Out-of-core streaming training, end to end -- including a simulated
-preemption and a bitwise resume.
+preemption and a bitwise resume, all through ``repro.api``.
 
 The paper's Web-scale story is that the *corpus* never fits anywhere:
 data is partitioned and streams past the parameter servers while only
 the model (the count tables) is global.  This example builds a sharded
-on-disk stream, trains a few epochs through the PS client with
-mid-epoch checkpoints, "crashes", and resumes -- then proves the
-interruption was invisible by rebuilding the counts from the persisted
-assignments (the paper's section-3.5 recovery).
+on-disk stream, trains a few epochs with mid-epoch checkpoints
+(``CheckpointPolicy`` -> ``CheckpointCallback`` under the hood),
+"crashes", and resumes -- then proves the interruption was invisible by
+rebuilding the counts from the persisted assignments (the paper's
+section-3.5 recovery).
 
   PYTHONPATH=src python examples/stream_train.py
 """
@@ -17,11 +18,9 @@ import tempfile
 
 import numpy as np
 
-from repro.core import lightlda as lda
+from repro import api
 from repro.data import corpus as corpus_mod
 from repro.data import stream as stream_mod
-from repro.train import async_exec
-from repro.train import loop as train_loop
 
 
 def main():
@@ -32,42 +31,42 @@ def main():
     # 1. Offline ingestion pass: shard the corpus onto disk.  Memory is
     #    bounded by one shard regardless of corpus size -- at Web scale
     #    this writer runs on CPU feeder hosts over the real collection.
-    corp = corpus_mod.generate_lda_corpus(
-        seed=0, num_docs=600, mean_doc_len=60, vocab_size=1500,
-        num_topics=10)
+    corp = corpus_mod.synthetic_corpus(600, 1500, true_topics=10,
+                                       mean_doc_len=60)
     meta = stream_mod.write_sharded(stream_dir, corp,
                                     tokens_per_shard=8192)
     print(f"stream: {meta.num_tokens} tokens in {meta.num_shards} shards "
           f"of {meta.tokens_per_shard} (doc cap {meta.doc_cap})")
 
-    # 2. Train: every epoch visits the shards in a fresh PRNG-shuffled
-    #    order; the loader double-buffers (next shard loads from disk
-    #    while the current one samples).  Checkpoints persist the PS
-    #    state + loader cursor at shard boundaries.
-    cfg = lda.LDAConfig(num_topics=20, vocab_size=meta.vocab_size,
-                        block_tokens=2048, num_shards=4)
-    exec_cfg = async_exec.ExecConfig(staleness=1)
-    reader = stream_mod.ShardedCorpusReader(stream_dir)
+    # 2. One declarative job covers the whole scenario: streamed source,
+    #    bounded-staleness executor, checkpoint every 2 shard visits.
+    #    ``max_shards=3`` simulates a mid-epoch preemption.
+    base = dict(stream_dir=stream_dir, num_topics=20, block_tokens=2048,
+                num_shards=4, staleness=1, epochs=3, seed=0, eval_every=2)
 
     print("\n--- run, interrupted mid-epoch after 3 shard visits ---")
-    train_loop.fit_lda_stream(
-        reader, cfg, exec_cfg, epochs=3, seed=0, checkpoint_path=ckpt,
-        checkpoint_every=2, max_shards=3, eval_every=2)
+    api.APSLDA(api.LDAJob(
+        checkpoint=api.CheckpointPolicy(path=ckpt, every=2),
+        max_shards=3, **base)).fit()
 
     print("\n--- resumed from the checkpoint (bitwise continuation) ---")
-    nwk, nk, history, info = train_loop.fit_lda_stream(
-        reader, cfg, exec_cfg, epochs=3, resume=True,
-        checkpoint_path=ckpt, eval_every=4)
+    job = api.LDAJob(
+        checkpoint=api.CheckpointPolicy(path=ckpt, resume=True),
+        **{**base, "eval_every": 4})
+    model = api.APSLDA(job).fit()
 
     # 3. The conservation oracle: counts rebuilt from the persisted z
-    #    files must equal the PS state exactly (exactly-once pushes).
-    nwk_ref, nk_ref = stream_mod.rebuild_counts_from_stream(reader, cfg.K)
-    assert np.array_equal(np.asarray(nwk.to_dense()), nwk_ref)
-    assert np.array_equal(np.asarray(nk.value), nk_ref)
+    #    files must equal the fitted model exactly (exactly-once pushes).
+    reader = stream_mod.ShardedCorpusReader(stream_dir)
+    nwk_ref, nk_ref = stream_mod.rebuild_counts_from_stream(
+        reader, model.num_topics)
+    assert np.array_equal(model.nwk, nwk_ref)
+    assert np.array_equal(model.nk, nk_ref)
     print(f"\nconservation check OK: PS counts == histogram of the "
           f"{int(nk_ref.sum())} persisted assignments")
-    if history:
-        print(f"final shard perplexity {history[-1]['perplexity']:.2f}")
+    if model.history:
+        print(f"final shard perplexity "
+              f"{model.history[-1]['perplexity']:.2f}")
     shutil.rmtree(work)
 
 

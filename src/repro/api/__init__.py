@@ -1,0 +1,37 @@
+"""``repro.api`` -- the unified estimator/session API (DESIGN.md sec. 10).
+
+One declarative ``LDAJob`` reaches every training scenario the system
+supports (in-memory or streamed corpus, in-process or SPMD backend,
+dense/COO/hybrid push routes, resume, eval, publish-to-serving); the
+``APSLDA`` estimator runs it and hands back a ``TopicModel``.  This
+package is the only sanctioned orchestration surface: launchers,
+examples and benchmarks build jobs instead of hand-wiring executors
+(CI-gated, tests/test_api_gate.py).
+
+    from repro import api
+
+    corp  = synthetic_corpus(...)                      # data/corpus.py
+    job   = api.LDAJob(corpus=corp, num_topics=100,
+                       staleness=2, route=api.HybridRoute(hot_words=2000))
+    model = api.APSLDA(job).fit()
+    theta = model.transform(unseen_docs)               # fold-in
+    pub   = model.publisher()                          # -> TopicService
+"""
+from repro.api.callbacks import (Callback, CheckpointCallback, EvalCallback,
+                                 LogCallback, SweepView)
+from repro.api.estimator import APSLDA
+from repro.api.job import (CheckpointPolicy, JobValidationError, LDAJob,
+                           IN_PROCESS, SPMD)
+from repro.api.model import TopicModel
+from repro.api.session import Session, SessionResult
+
+# push-route policies re-exported for one-stop job construction
+from repro.ps import CooRoute, DenseRoute, HybridRoute, PushRoute
+
+__all__ = [
+    "APSLDA", "LDAJob", "TopicModel", "Session", "SessionResult",
+    "CheckpointPolicy", "JobValidationError", "IN_PROCESS", "SPMD",
+    "Callback", "CheckpointCallback", "EvalCallback", "LogCallback",
+    "SweepView",
+    "CooRoute", "DenseRoute", "HybridRoute", "PushRoute",
+]

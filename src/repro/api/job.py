@@ -1,0 +1,267 @@
+"""Declarative job spec for the unified estimator API (DESIGN.md section 10).
+
+An ``LDAJob`` is the single description of a training run -- data source,
+model hyperparameters, execution backend, executor schedule, checkpoint
+policy, seed -- validated *up front* with actionable errors, before any
+device work happens.  ``repro.api.APSLDA(job).fit()`` (or the lower-level
+``Session``) turns the spec into a trained ``TopicModel``; the LDA
+launcher (``repro.launch.lda``) is nothing but an argv -> ``LDAJob``
+translator.
+
+The spec is frozen: the same job value always describes the same run
+(modulo wall-clock), which is what makes the equivalence suites in
+``tests/test_api.py`` meaningful.
+
+Design rule inherited from the whole stack: every knob here maps onto an
+existing, tested mechanism (``LDAConfig``, ``ExecConfig``, ``PushRoute``,
+``CheckpointPolicy`` -> ``train.checkpoint``), so a job reaches every
+scenario the hand-wired launchers could -- in-memory or streamed sources,
+in-process or SPMD backends, dense/COO/hybrid push routes -- without new
+semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Optional, Sequence
+
+from repro import ps
+from repro.core import lightlda as lda
+from repro.train.async_exec import ExecConfig
+
+IN_PROCESS = "in_process"
+SPMD = "spmd"
+_BACKENDS = (IN_PROCESS, SPMD)
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointPolicy:
+    """When and where training state persists.
+
+    ``path`` is the checkpoint file; empty disables checkpointing.
+    ``every`` is in *visits* -- sweeps for an in-memory source, shard
+    visits for a streamed one; 0 means only at the end of ``fit``.
+    ``resume=True`` restores from ``path`` and continues
+    bitwise-identically (streamed sources only -- the stream keeps the
+    full resumable state on disk, paper section 3.5).
+    """
+
+    path: str = ""
+    every: int = 0
+    resume: bool = False
+
+    def problems(self) -> list:
+        out = []
+        if self.every < 0:
+            out.append("checkpoint.every must be >= 0 (0: only at the end "
+                       "of fit)")
+        if (self.every or self.resume) and not self.path:
+            out.append("checkpoint.path is required when checkpoint.every "
+                       "or checkpoint.resume is set")
+        return out
+
+
+class JobValidationError(ValueError):
+    """An ``LDAJob`` that cannot run, with every problem listed."""
+
+    def __init__(self, problems: Sequence[str]):
+        self.problems = list(problems)
+        lines = "\n".join(f"  - {p}" for p in self.problems)
+        super().__init__(f"invalid LDAJob ({len(self.problems)} "
+                         f"problem{'s' if len(self.problems) != 1 else ''}):"
+                         f"\n{lines}")
+
+
+@dataclasses.dataclass(frozen=True)
+class LDAJob:
+    """One declarative LDA training job, corpus to served model.
+
+    Data source (exactly one):
+      ``corpus``      an in-memory ``data.corpus.Corpus``;
+      ``stream_dir``  a sharded on-disk stream (``data.stream`` layout);
+      ``docs``        an iterable of token-id arrays -- materialised into
+                      a frequency-ordered in-memory corpus (note: word ids
+                      are *re-ranked by frequency*, the section-3.2
+                      contract every downstream component assumes).
+
+    Backend: ``"in_process"`` (single device) or ``"spmd"`` (shard_map
+    over a ``(data, model)`` mesh with ``mesh_model`` parameter-server
+    shards -- run under forced host devices or on a real pod).
+
+    Schedule: ``sweeps`` full Gibbs sweeps for in-memory sources;
+    ``epochs`` passes over the shard stream for streamed ones.
+    ``staleness``/``model_blocks``/``route`` are the asynchronous
+    executor's knobs (``train.async_exec.ExecConfig``); ``hot_words`` is
+    the legacy scalar mapped through ``ps.route_for``.
+    """
+
+    # --- data source (exactly one) ---
+    corpus: Any = None
+    stream_dir: Optional[str] = None
+    docs: Optional[Sequence] = None
+
+    # --- model ---
+    num_topics: int = 50
+    vocab_size: Optional[int] = None      # None: inferred from the source
+    alpha: float = 0.1
+    beta: float = 0.01
+    mh_steps: int = 2
+    block_tokens: int = 8192
+    num_shards: int = 1                   # PS shards (in-process backend)
+    use_kernels: bool = False
+    kernel_interpret: Optional[bool] = None
+
+    # --- backend ---
+    backend: str = IN_PROCESS
+    mesh_model: int = 2                   # SPMD: server-axis size
+
+    # --- schedule ---
+    sweeps: int = 50                      # in-memory source
+    epochs: int = 3                       # streamed source
+    staleness: int = 0
+    model_blocks: int = 0
+    route: Optional[ps.PushRoute] = None
+    hot_words: Optional[int] = None
+    max_shards: Optional[int] = None      # streamed: stop after N visits
+    prefetch: bool = True                 # streamed: double-buffered loader
+
+    # --- policies ---
+    checkpoint: CheckpointPolicy = CheckpointPolicy()
+    eval_every: int = 10                  # 0: never evaluate
+    seed: int = 0
+
+    # ------------------------------------------------------------------
+    # Source classification
+    # ------------------------------------------------------------------
+    @property
+    def source_kind(self) -> str:
+        """``"memory"`` (corpus / docs) or ``"stream"`` (stream_dir)."""
+        return "stream" if self.stream_dir is not None else "memory"
+
+    def materialize_corpus(self):
+        """The in-memory ``Corpus`` for a memory-source job (builds one
+        from ``docs`` if needed; cached so a one-shot iterator still
+        supports repeated ``fit`` calls)."""
+        if self.corpus is not None:
+            return self.corpus
+        cached = getattr(self, "_docs_corpus", None)
+        if cached is None:
+            from repro.data import corpus as corpus_mod
+            cached = corpus_mod.corpus_from_docs(self.docs,
+                                                 vocab_size=self.vocab_size)
+            object.__setattr__(self, "_docs_corpus", cached)
+        return cached
+
+    # ------------------------------------------------------------------
+    # Validation (up front, every problem reported, each with a fix)
+    # ------------------------------------------------------------------
+    def problems(self) -> list:
+        """Every validation problem, as actionable messages (empty: OK)."""
+        out = []
+        sources = [s for s, v in [("corpus", self.corpus),
+                                  ("stream_dir", self.stream_dir),
+                                  ("docs", self.docs)] if v is not None]
+        if len(sources) != 1:
+            got = ", ".join(sources) if sources else "none"
+            out.append(f"exactly one data source required (got: {got}); "
+                       "pass corpus=, stream_dir= or docs=")
+        if self.stream_dir is not None and not os.path.isdir(self.stream_dir):
+            out.append(f"stream_dir {self.stream_dir!r} does not exist; "
+                       "write it first (data.stream.write_sharded / "
+                       "ShardedCorpusWriter)")
+
+        if self.num_topics < 1:
+            out.append(f"num_topics must be >= 1 (got {self.num_topics})")
+        if self.vocab_size is not None and self.vocab_size < 1:
+            out.append(f"vocab_size must be >= 1 (got {self.vocab_size}); "
+                       "or omit it to infer from the data source")
+        if self.alpha <= 0 or self.beta <= 0:
+            out.append(f"Dirichlet priors must be positive (alpha="
+                       f"{self.alpha}, beta={self.beta})")
+        if self.mh_steps < 1:
+            out.append(f"mh_steps must be >= 1 (got {self.mh_steps})")
+        if self.block_tokens < 1:
+            out.append(f"block_tokens must be >= 1 (got {self.block_tokens})")
+        if self.num_shards < 1:
+            out.append(f"num_shards must be >= 1 (got {self.num_shards})")
+
+        if self.backend not in _BACKENDS:
+            out.append(f"backend must be one of {_BACKENDS} (got "
+                       f"{self.backend!r})")
+        if self.backend == SPMD:
+            if self.mesh_model < 1:
+                out.append(f"mesh_model must be >= 1 (got {self.mesh_model})")
+            if self.model_blocks:
+                out.append("the SPMD backend uses the full-snapshot "
+                           "executor; drop model_blocks= or use "
+                           "backend='in_process'")
+            if self.num_shards not in (1, self.mesh_model):
+                out.append(f"under backend='spmd' the PS shard count is the "
+                           f"mesh's model axis ({self.mesh_model}); drop "
+                           f"num_shards= (got {self.num_shards})")
+            if self.checkpoint.path:
+                out.append("checkpointing the SPMD planes is not supported "
+                           "yet; drop checkpoint= (persist the final model "
+                           "via TopicModel.save) or use "
+                           "backend='in_process'")
+
+        if self.sweeps < 1:
+            out.append(f"sweeps must be >= 1 (got {self.sweeps})")
+        if self.epochs < 1:
+            out.append(f"epochs must be >= 1 (got {self.epochs})")
+        if self.staleness < 0:
+            out.append(f"staleness must be >= 0 (got {self.staleness}); 0 "
+                       "is the synchronous schedule")
+        if self.model_blocks < 0:
+            out.append(f"model_blocks must be >= 0 (got "
+                       f"{self.model_blocks}); 0 selects the full-snapshot "
+                       "executor")
+        if self.route is not None and self.hot_words is not None:
+            out.append("pass either route= (ps.DenseRoute / ps.CooRoute / "
+                       "ps.HybridRoute) or the legacy hot_words=, not both")
+        if self.max_shards is not None:
+            if self.source_kind != "stream":
+                out.append("max_shards only applies to streamed sources; "
+                           "use sweeps= for in-memory training")
+            elif self.max_shards < 1:
+                out.append(f"max_shards must be >= 1 (got {self.max_shards})")
+        if self.checkpoint.resume and self.source_kind != "stream":
+            out.append("resume requires a streamed source (the stream "
+                       "holds the resumable z state, paper section 3.5); "
+                       "for in-memory runs restore via "
+                       "train.checkpoint.restore_lda")
+        if self.eval_every < 0:
+            out.append(f"eval_every must be >= 0 (got {self.eval_every}; "
+                       "0 disables evaluation)")
+        out.extend(self.checkpoint.problems())
+        return out
+
+    def validate(self) -> "LDAJob":
+        """Raise ``JobValidationError`` listing every problem; returns
+        ``self`` so construction and validation chain."""
+        probs = self.problems()
+        if probs:
+            raise JobValidationError(probs)
+        return self
+
+    # ------------------------------------------------------------------
+    # Resolution into the underlying configs
+    # ------------------------------------------------------------------
+    def lda_config(self, vocab_size: int) -> lda.LDAConfig:
+        """The ``LDAConfig`` for this job at a resolved vocabulary size."""
+        num_shards = (self.mesh_model if self.backend == SPMD
+                      else self.num_shards)
+        return lda.LDAConfig(num_topics=self.num_topics,
+                             vocab_size=vocab_size,
+                             alpha=self.alpha, beta=self.beta,
+                             mh_steps=self.mh_steps,
+                             block_tokens=self.block_tokens,
+                             num_shards=num_shards,
+                             use_kernels=self.use_kernels,
+                             kernel_interpret=self.kernel_interpret)
+
+    def exec_config(self) -> ExecConfig:
+        return ExecConfig(staleness=self.staleness,
+                          hot_words=self.hot_words,
+                          model_blocks=self.model_blocks,
+                          route=self.route)

@@ -1,0 +1,165 @@
+"""Fitted-model result object: frozen counts with serving entry points.
+
+``TopicModel`` is what ``APSLDA.fit`` returns: the final dense count
+tables plus everything needed to *use* them --
+
+  * ``transform(docs)``   fold in unseen documents (batched MH inference
+                          against the frozen model) and return their θ;
+  * ``score(queries, docs)``  topic-smoothed query-likelihood ranking
+                          (the paper's IR use case);
+  * ``save`` / ``load``   persist / restore the model (counts + config);
+  * ``publisher()``       a ``SnapshotPublisher`` with this model already
+                          published -- the handoff into the live serving
+                          stack (``serve.topic_service.TopicService``).
+
+Everything here is read-only: the model wraps an immutable snapshot, the
+expensive alias-table build happens once (lazily) and is shared by every
+entry point.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional, Sequence
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import lightlda as lda
+from repro.infer.engine import EngineConfig, QueryEngine
+from repro.infer.snapshot import Snapshot, SnapshotPublisher, build_snapshot
+
+
+class TopicModel:
+    """An immutable fitted LDA model (dense counts + derived serving state).
+
+    ``history`` carries the eval rows of the fit that produced it and
+    ``info`` the executor's realised schedule -- both observational
+    metadata, not part of the model.
+    """
+
+    def __init__(self, nwk_dense, nk, cfg: lda.LDAConfig, *,
+                 history: Optional[list] = None, info: Optional[dict] = None,
+                 ecfg: Optional[EngineConfig] = None):
+        self._nwk = jnp.asarray(nwk_dense)
+        self._nk = jnp.asarray(nk)
+        if self._nwk.shape != (cfg.V, cfg.K):
+            raise ValueError(f"nwk shape {self._nwk.shape} does not match "
+                             f"cfg (V={cfg.V}, K={cfg.K})")
+        self.cfg = cfg
+        self.history = list(history or [])
+        self.info = dict(info or {})
+        self.ecfg = ecfg or EngineConfig()
+        self._snapshot: Optional[Snapshot] = None
+        self._engine: Optional[QueryEngine] = None
+
+    # -- raw views ---------------------------------------------------------
+    @property
+    def num_topics(self) -> int:
+        return self.cfg.K
+
+    @property
+    def vocab_size(self) -> int:
+        return self.cfg.V
+
+    @property
+    def nwk(self) -> np.ndarray:
+        """Dense [V, K] word-topic counts."""
+        return np.asarray(self._nwk)
+
+    @property
+    def nk(self) -> np.ndarray:
+        """[K] topic totals."""
+        return np.asarray(self._nk)
+
+    @property
+    def phi(self) -> np.ndarray:
+        """Smoothed topic-word matrix φ_wk = (n_wk+β)/(n_k+Vβ), [V, K]."""
+        return np.asarray(self.snapshot.phi)
+
+    @property
+    def snapshot(self) -> Snapshot:
+        """The frozen serving snapshot (alias tables built once, lazily)."""
+        if self._snapshot is None:
+            self._snapshot = build_snapshot(self._nwk, self._nk, self.cfg,
+                                            version=1)
+        return self._snapshot
+
+    def engine(self) -> QueryEngine:
+        """A batched query engine bound to this model's snapshot."""
+        if self._engine is None:
+            self._engine = QueryEngine(self.snapshot, self.ecfg)
+        return self._engine
+
+    # -- inference ---------------------------------------------------------
+    def transform(self, docs: Sequence[np.ndarray],
+                  seeds: Optional[Sequence[int]] = None) -> np.ndarray:
+        """Fold in unseen documents; returns θ as [len(docs), K].
+
+        ``seeds`` pin each document's fold-in randomness (default: the
+        document's position), so the same (model, doc, seed) always gives
+        a bit-identical θ regardless of batching.
+        """
+        if seeds is None:
+            seeds = list(range(len(docs)))
+        results = self.engine().infer(docs, seeds)
+        return np.stack([r.theta for r in results])
+
+    def score(self, queries: Sequence[np.ndarray],
+              docs: Sequence[np.ndarray],
+              seeds: Optional[Sequence[int]] = None) -> np.ndarray:
+        """Rank ``docs`` for ``queries``: [num_queries, num_docs] log
+        p(q|d) under the topic-smoothed document language model."""
+        if seeds is None:
+            seeds = list(range(len(docs)))
+        eng = self.engine()
+        results = eng.infer(docs, seeds)
+        return eng.score(results, docs, queries)
+
+    def top_words(self, num_words: int = 8) -> np.ndarray:
+        """Top word ids per topic by *lift* (φ_wk / mean_k φ_wk), [K, n].
+
+        Raw probability would list the Zipf head for every topic; lift
+        divides the word marginal out (what the examples print).
+        """
+        phi = self.phi
+        lift = phi / (phi.mean(axis=1, keepdims=True) + 1e-12)
+        return np.argsort(-lift, axis=0)[:num_words].T
+
+    # -- serving handoff ---------------------------------------------------
+    def publisher(self) -> SnapshotPublisher:
+        """A ``SnapshotPublisher`` with this model published as version 1
+        -- hand it to ``serve.topic_service.TopicService`` (or any
+        ``QueryEngine``) to serve this model live and keep publishing
+        newer versions on top."""
+        pub = SnapshotPublisher(self.cfg)
+        pub.publish(self._nwk, self._nk)
+        return pub
+
+    # -- persistence --------------------------------------------------------
+    def save(self, path: str) -> None:
+        """Persist counts + config (npz).  The alias tables are derived
+        state and are rebuilt on load."""
+        import os
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        payload = {"nwk": np.asarray(self._nwk), "nk": np.asarray(self._nk),
+                   "cfg": np.frombuffer(
+                       json.dumps(dataclasses.asdict(self.cfg)).encode(),
+                       dtype=np.uint8)}
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            np.savez(f, **payload)
+        os.replace(tmp, path)
+
+    @classmethod
+    def load(cls, path: str, ecfg: Optional[EngineConfig] = None
+             ) -> "TopicModel":
+        with np.load(path) as data:
+            cfg_dict = json.loads(bytes(data["cfg"]).decode())
+            cfg = lda.LDAConfig(**cfg_dict)
+            return cls(data["nwk"], data["nk"], cfg, ecfg=ecfg)
+
+    def __repr__(self):
+        return (f"TopicModel(V={self.cfg.V}, K={self.cfg.K}, "
+                f"tokens={int(np.asarray(self._nk).sum())})")

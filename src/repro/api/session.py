@@ -1,0 +1,1002 @@
+"""Unified training session: one loop, four data/backend planes.
+
+This module merges the previously divergent host loops (``fit_lda``,
+``fit_lda_stream``, the launcher's ``run_distributed``) behind one
+``Session`` driving a single visit loop:
+
+    plane.setup()
+    for visit in plane.schedule():
+        plane.step(visit)                 # the only state transition
+        callbacks.on_sweep_end(view)      # observation, never perturbation
+    callbacks.on_fit_end(final_view)
+
+A *plane* binds a data source (in-memory corpus or on-disk shard stream)
+to an execution backend (in-process or SPMD mesh).  The in-memory corpus
+is treated as a one-shard stream that happens to stay resident: every
+plane exposes the same visit protocol, so checkpointing, evaluation and
+logging are plane-agnostic callbacks instead of copy-pasted loop bodies.
+
+Equivalence contract (tests/test_api.py): each plane is bitwise-identical
+to the pre-redesign path it replaces --
+
+  * memory x in-process  == the old ``train.loop.fit_lda`` chain
+    (``key, sub = split(key)`` per sweep through ``make_executor``);
+  * stream x in-process  == the old ``fit_lda_stream`` (all randomness
+    from ``(seed, schedule position)`` via ``stream_sweep_key``);
+  * memory x SPMD        == the old launcher ``run_distributed`` loop;
+  * stream x SPMD        is new (stream shards feed SPMD workers in
+    groups); its anchor is the exactly-once conservation law.
+
+RNG discipline is therefore *per plane*, deliberately: unifying the loop
+does not get to re-derive anybody's random stream.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, NamedTuple, Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import ps
+from repro.api.callbacks import (Callback, CheckpointCallback, EvalCallback,
+                                 SweepView)
+from repro.api.job import SPMD, JobValidationError, LDAJob
+from repro.core import lightlda as lda
+from repro.core import perplexity as ppl
+from repro.data import stream as stream_mod
+from repro.sharding.compat import shard_map
+from repro.train import async_exec
+from repro.train import checkpoint as ckpt
+
+
+class SessionResult(NamedTuple):
+    """What a finished run hands back.
+
+    ``nwk``/``nk`` are the final PS handles (always present); ``state``
+    is the full ``SamplerState`` for in-memory in-process runs; ``reader``
+    the stream reader for streamed runs (its z files hold the
+    assignments).  ``history`` is the eval callback's rows, ``info`` the
+    executor's realised-schedule description.
+    """
+
+    nwk: "ps.MatrixHandle"
+    nk: "ps.VectorHandle"
+    history: list
+    info: dict
+    state: Optional["lda.SamplerState"]
+    reader: Optional["stream_mod.ShardedCorpusReader"]
+
+
+# ---------------------------------------------------------------------------
+# Stream RNG discipline (moved here from train/loop.py; re-exported there).
+#
+# Every random draw derives from one base seed through ``fold_in`` chains
+# keyed by *schedule position*, never by host iteration state -- that is
+# what makes resume bitwise (DESIGN.md section 9).
+# ---------------------------------------------------------------------------
+
+def stream_init_key(seed: int, shard_id: int) -> jax.Array:
+    """Key for shard ``shard_id``'s initial topic assignment draw."""
+    base = jax.random.fold_in(jax.random.PRNGKey(seed), 0)
+    return jax.random.fold_in(base, shard_id)
+
+
+def stream_sweep_key(seed: int, epoch: int, pos: int) -> jax.Array:
+    """Key for the sweep at schedule position (epoch, pos)."""
+    base = jax.random.fold_in(jax.random.PRNGKey(seed), 1)
+    return jax.random.fold_in(jax.random.fold_in(base, epoch), pos)
+
+
+def init_stream(reader, cfg, seed: int = 0, client=None):
+    """Pass 0 of stream training: draw every shard's initial assignments
+    (persisted as the shard's ``z`` file) and histogram the global count
+    tables.  One streaming pass; host memory is O(V x K) + one shard --
+    the same recovery shape as ``data.stream.rebuild_counts_from_stream``.
+
+    Returns ``(nwk, nk)`` PS handles holding the initial counts.
+    """
+    meta = reader.meta
+    k = cfg.K
+    nwk = np.zeros((meta.vocab_size, k), np.int32)
+    nk = np.zeros(k, np.int64)
+    for sid in range(meta.num_shards):
+        shard = reader.shard(sid, load_z=False)
+        z = np.array(jax.random.randint(
+            stream_init_key(seed, sid), (meta.tokens_per_shard,), 0, k,
+            dtype=jnp.int32))                   # np.array: writable copy
+        z[shard.n_tokens:] = 0
+        reader.write_z(sid, z)
+        wv = np.asarray(shard.w[:shard.n_tokens])
+        zv = z[:shard.n_tokens]
+        np.add.at(nwk, (wv, zv), 1)
+        nk += np.bincount(zv, minlength=k)
+    client = client or ps.client_for(cfg)
+    return (client.matrix_from_dense(jnp.asarray(nwk)),
+            client.wrap_vector(jnp.asarray(nk, dtype=jnp.int32)))
+
+
+# ---------------------------------------------------------------------------
+# SPMD wiring (moved here from launch/lda.py; the launcher re-exports).
+# ---------------------------------------------------------------------------
+
+def make_spmd_sweep(mesh, cfg: "lda.LDAConfig", staleness: int = 0,
+                    hot_words=None, route: Optional["ps.PushRoute"] = None):
+    """shard_map'd sweep: tokens split over (data, model); n_wk rows cyclic
+    over model (the servers); deltas psum'd over all workers.  The count
+    tables enter through an SPMD-backed ``PSClient`` -- the sweep gets its
+    collectives (all-gather pull, one psum push per group) from the
+    handle's backend, not from axis kwargs.  The executor schedule knobs
+    thread through: with ``staleness`` s, each worker merges (and psums)
+    deltas once per group of s+1 token blocks -- fewer, larger
+    collectives -- and ``route`` (or the legacy ``hot_words``) selects the
+    push policy (dense / coordinate / hybrid)."""
+    from jax.sharding import PartitionSpec as P
+
+    client = ps.client_for(cfg, axis_name=("data", "model"),
+                           model_axis="model")
+
+    def local(w, d, z, valid, doc_start, doc_len, ndk, nwk_local, nk, keys):
+        state = lda.SamplerState(
+            w[0], d[0], z[0], valid[0], doc_start[0], doc_len[0],
+            client.wrap_matrix(nwk_local, cfg.V),
+            client.wrap_vector(nk), ndk[0])
+        out = lda.sweep(state, keys[0], cfg,
+                        staleness=staleness, hot_words=hot_words,
+                        route=route)
+        return (out.z[None], out.ndk[None], out.nwk.value, out.nk.value)
+
+    wspec = P(("data", "model"), None)
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(wspec, wspec, wspec, wspec, wspec, wspec,
+                  P(("data", "model"), None, None), P("model", None),
+                  P(), wspec),
+        out_specs=(wspec, P(("data", "model"), None, None),
+                   P("model", None), P()),
+        check_vma=False)
+
+
+def init_distributed_state(corp, cfg: "lda.LDAConfig", workers: int,
+                           key: jax.Array):
+    """Shard the corpus over ``workers`` and build the global count tables
+    (the same rebuild the checkpoint recovery uses, paper section 3.5).
+
+    Returns ``(w, d, valid, doc_start, doc_len, z, ndk, nwk, nk)`` with a
+    leading worker dim on the per-worker arrays; ``nwk`` is cyclic over
+    ``cfg.num_shards``.  Shared by the SPMD planes and the SPMD tests.
+    """
+    from repro.data import corpus as corpus_mod
+
+    shards = corpus_mod.shard_tokens(corp, workers, cfg.block_tokens)
+    npad = max(s[0].shape[0] for s in shards)
+    dmax = max(s[3].shape[0] for s in shards)
+
+    def stack(i, pad_to, fill=0):
+        return np.stack([
+            np.pad(s[i], (0, pad_to - len(s[i])), constant_values=fill)
+            for s in shards])
+
+    w = jnp.asarray(stack(0, npad))
+    d = jnp.asarray(stack(1, npad))
+    valid = jnp.asarray(stack(2, npad))
+    doc_start = jnp.asarray(stack(3, dmax))
+    doc_len = jnp.asarray(stack(4, dmax))
+
+    z = jax.random.randint(key, w.shape, 0, cfg.K, dtype=jnp.int32)
+    # counts from the global view (same rebuild the checkpoint recovery uses)
+    one = valid.reshape(-1).astype(jnp.int32)
+    nwk_dense = jnp.zeros((cfg.V, cfg.K), jnp.int32).at[
+        w.reshape(-1), z.reshape(-1)].add(one)
+    nk = jnp.zeros((cfg.K,), jnp.int32).at[z.reshape(-1)].add(one)
+    ndk = jnp.zeros((workers, dmax, cfg.K), jnp.int32)
+    idx = jnp.arange(workers)[:, None].repeat(npad, 1)
+    ndk = ndk.at[idx.reshape(-1), d.reshape(-1), z.reshape(-1)].add(one)
+    nwk = ps.client_for(cfg).matrix_from_dense(nwk_dense)
+    return w, d, valid, doc_start, doc_len, z, ndk, nwk, nk
+
+
+# ---------------------------------------------------------------------------
+# The generic visit loop: the only trainer body left in the codebase.
+# ---------------------------------------------------------------------------
+
+def _run_loop(plane, callbacks: Sequence[Callback]) -> SessionResult:
+    plane.setup()
+    info = dict(plane.info)
+    for cb in callbacks:
+        cb.on_fit_start(info)
+    view = None
+    stopped = False
+    for visit in plane.schedule():
+        plane.step(visit)
+        view = plane.view(visit)
+        for cb in callbacks:
+            cb.on_sweep_end(view)
+        if plane.should_stop():
+            stopped = True
+            break
+    final = plane.final_view(view)
+    for cb in callbacks:
+        cb.on_fit_end(final)
+    plane.finish(stopped)
+    return plane.result()
+
+
+# ---------------------------------------------------------------------------
+# Plane 1: in-memory corpus, in-process backend (the old fit_lda).
+# ---------------------------------------------------------------------------
+
+class _MemoryPlane:
+    """Resident ``SamplerState`` driven through ``make_executor``.
+
+    RNG: the old ``fit_lda`` chain -- ``key, sub = split(key)`` before
+    every sweep -- so results are bitwise-identical to the pre-redesign
+    host loop.
+    """
+
+    kind = "memory"
+
+    def __init__(self, cfg, exec_cfg, state, key, sweeps, log_fn=print):
+        self.cfg = cfg
+        self.exec_cfg = exec_cfg
+        self.state = state
+        self.key = key
+        self.sweeps = int(sweeps)
+        self.log_fn = log_fn
+        self.info: dict = {}
+        self.t0 = time.time()
+        self._ready = False
+
+    def setup(self):
+        if self._ready:
+            return
+        self._ready = True
+        cfg, state = self.cfg, self.state
+        self.step_fn, info = async_exec.make_executor(state, cfg,
+                                                      self.exec_cfg)
+        self.info = dict(info)
+        if info["mode"] == "blocked":
+            rpb = info["rows_per_block"]
+            self.log_fn(
+                f"[lda] blocked executor: {info['n_blocks']} model blocks "
+                f"x {rpb} rows, group {info['group']} (staleness "
+                f"{info['staleness']}), route {info['route']}, "
+                f"worker block mem "
+                f"{info['group'] * rpb * cfg.K * 4 / 2**20:.1f} MiB (vs "
+                f"{state.nwk.layout.pad_rows * cfg.K * 4 / 2**20:.1f} MiB "
+                f"snapshot)")
+        else:
+            self.log_fn(
+                f"[lda] snapshot executor: {info['n_blocks']} token "
+                f"blocks, group {info['group']} (staleness "
+                f"{info['staleness']}), route {info['route']}")
+        self.num_tokens = int(jnp.sum(state.valid))
+        self.t0 = time.time()
+
+    def schedule(self):
+        return range(self.sweeps)
+
+    def step(self, i: int):
+        self.key, sub = jax.random.split(self.key)
+        self.state = self.step_fn(self.state, sub)
+
+    def view(self, i: int) -> SweepView:
+        st = self.state
+        return SweepView(self, step=i + 1, epoch=0, pos=i, shard_id=None,
+                         is_last=(i == self.sweeps - 1), state=st,
+                         nwk=st.nwk, nk=st.nk,
+                         tokens_seen=self.num_tokens * (i + 1))
+
+    # -- observation hooks ------------------------------------------------
+    def sync(self, view):
+        jax.block_until_ready(view.state.z)
+
+    def perplexity(self, view) -> float:
+        st, cfg = view.state, self.cfg
+        return float(ppl.training_perplexity(
+            st.w, st.d, st.valid, st.ndk, st.nwk.to_dense(), st.nk.value,
+            cfg.alpha, cfg.beta))
+
+    def history_row(self, view, p: float) -> dict:
+        el = view.elapsed_s
+        return {"sweep": view.step, "perplexity": p, "elapsed_s": el,
+                "tokens_per_s": self.num_tokens * view.step / el}
+
+    def log_line(self, view, p: float) -> str:
+        el = view.elapsed_s
+        return (f"[lda] sweep {view.step:4d}  perplexity {p:9.2f}  "
+                f"({el:.1f}s, {self.num_tokens * view.step / el:,.0f} "
+                f"tok/s)")
+
+    def checkpoint(self, view, path: str):
+        ckpt.save_lda(path, view.state if view.state is not None
+                      else self.state)
+
+    # -- loop plumbing ----------------------------------------------------
+    def should_stop(self) -> bool:
+        return False
+
+    def final_view(self, last: Optional[SweepView]) -> Optional[SweepView]:
+        if last is not None:
+            return last
+        st = self.state
+        return SweepView(self, step=0, epoch=0, pos=0, shard_id=None,
+                         is_last=True, state=st, nwk=st.nwk, nk=st.nk,
+                         tokens_seen=0)
+
+    def finish(self, stopped: bool):
+        pass
+
+    def result(self) -> SessionResult:
+        st = self.state
+        return SessionResult(st.nwk, st.nk, [], self.info, st, None)
+
+
+# ---------------------------------------------------------------------------
+# Plane 2: on-disk shard stream, in-process backend (the old
+# fit_lda_stream).
+# ---------------------------------------------------------------------------
+
+class _StreamPlane:
+    """Multi-epoch out-of-core training over a sharded stream.
+
+    The model (the PS count tables) is the only global state; token data
+    streams through shard by shard via the double-buffered
+    ``StreamingLoader``.  Each shard visit rebuilds its worker-local
+    ``n_dk`` from the persisted assignments, runs one executor sweep
+    against the *global* handles, and writes the updated ``z`` back --
+    the paper's section-3.5 discipline (assignments are data; counts are
+    derived).  All randomness derives from (seed, schedule position), so
+    resume is bitwise.
+    """
+
+    kind = "stream"
+
+    def __init__(self, reader, cfg, exec_cfg, epochs, *, seed=0,
+                 checkpoint_path=None, resume=False, max_shards=None,
+                 prefetch=True, log_fn=print):
+        if isinstance(reader, str):
+            reader = stream_mod.ShardedCorpusReader(reader)
+        self.reader = reader
+        self.cfg = cfg
+        self.exec_cfg = exec_cfg
+        self.epochs = int(epochs)
+        self.seed = int(seed)
+        self.checkpoint_path = checkpoint_path
+        self.resume = resume
+        self.max_shards = max_shards
+        self.prefetch = prefetch
+        self.log_fn = log_fn
+        self.info: dict = {}
+        self.t0 = time.time()
+        self._ready = False
+
+    def setup(self):
+        if self._ready:
+            return
+        self._ready = True
+        import os
+
+        cfg, reader = self.cfg, self.reader
+        meta = reader.meta
+        if (self.exec_cfg.model_blocks == 0
+                and meta.tokens_per_shard % cfg.block_tokens):
+            raise ValueError(
+                f"tokens_per_shard={meta.tokens_per_shard} must be a "
+                f"multiple of block_tokens={cfg.block_tokens} for the "
+                f"snapshot executor")
+        self.ckpt_meta = {"vocab_size": cfg.V, "num_topics": cfg.K,
+                          "ps_shards": cfg.num_shards,
+                          "tokens_per_shard": meta.tokens_per_shard,
+                          "stream_shards": meta.num_shards}
+        client = ps.client_for(cfg)
+        if self.resume:
+            path = self.checkpoint_path
+            if not (path and os.path.exists(path)):
+                raise FileNotFoundError(
+                    f"resume requested but no checkpoint at {path}")
+            saved = ckpt.restore_stream(path)
+            mismatch = {k: (saved.meta.get(k), v)
+                        for k, v in self.ckpt_meta.items()
+                        if saved.meta.get(k) != v}
+            if mismatch:
+                raise ValueError(f"checkpoint/config mismatch: {mismatch}")
+            self.seed = saved.seed
+            self.nwk = client.wrap_matrix(jnp.asarray(saved.nwk_phys),
+                                          cfg.V)
+            self.nk = client.wrap_vector(jnp.asarray(saved.nk))
+            cursor = saved.cursor
+            self.log_fn(f"[stream] resumed at epoch {cursor.epoch} pos "
+                        f"{cursor.pos} (seed {self.seed}) from {path}")
+        else:
+            self.nwk, self.nk = init_stream(reader, cfg, self.seed,
+                                            client=client)
+            cursor = stream_mod.Cursor(0, 0)
+        self.cursor0 = cursor
+        self.final_cursor = cursor
+
+        self.step_fn, self.build_index, info = \
+            async_exec.make_stream_executor(cfg, self.exec_cfg,
+                                            self.nwk.layout)
+        self.info = dict(info, stream_shards=meta.num_shards,
+                         tokens_per_shard=meta.tokens_per_shard,
+                         num_tokens=meta.num_tokens)
+        self.loader = stream_mod.StreamingLoader(reader, seed=self.seed,
+                                                 prefetch=self.prefetch)
+        self.total_visits = len(self.loader.schedule(cursor, self.epochs))
+        if self.max_shards is not None:
+            self.total_visits = min(self.total_visits, self.max_shards)
+        self.valid_np = np.arange(meta.tokens_per_shard)
+        self.shards_done = 0
+        self.tokens_seen = 0
+        self.state: Optional[lda.SamplerState] = None
+        self.t0 = time.time()
+
+    def schedule(self):
+        return self.loader.iterate(self.cursor0, self.epochs)
+
+    def step(self, visit):
+        cur, sid, shard = visit
+        cfg, meta = self.cfg, self.reader.meta
+        if shard.z is None:
+            raise FileNotFoundError(
+                f"shard {sid} has no z file; stream was never initialised")
+        w = jnp.asarray(shard.w)
+        d = jnp.asarray(shard.d)
+        z = jnp.asarray(shard.z)
+        valid = jnp.asarray(self.valid_np < shard.n_tokens)
+        ndk = jnp.zeros((meta.doc_cap, cfg.K), jnp.int32).at[d, z].add(
+            valid.astype(jnp.int32))
+        state = lda.SamplerState(w, d, z, valid,
+                                 jnp.asarray(shard.doc_start),
+                                 jnp.asarray(shard.doc_len),
+                                 self.nwk, self.nk, ndk)
+        key = stream_sweep_key(self.seed, cur.epoch, cur.pos)
+        if self.build_index is not None:
+            idx, bval = self.build_index(shard.w, np.asarray(valid))
+            state = self.step_fn(state, key, idx, bval)
+        else:
+            state = self.step_fn(state, key)
+        self.reader.write_z(sid, np.asarray(state.z))
+        self.state = state
+        self.nwk, self.nk = state.nwk, state.nk
+        self.shards_done += 1
+        self.tokens_seen += shard.n_tokens
+        self.final_cursor = cur.next(meta.num_shards)
+
+    def view(self, visit) -> SweepView:
+        cur, sid, shard = visit
+        return SweepView(self, step=self.shards_done, epoch=cur.epoch,
+                         pos=cur.pos, shard_id=sid,
+                         is_last=(self.shards_done >= self.total_visits),
+                         state=self.state, nwk=self.nwk, nk=self.nk,
+                         tokens_seen=self.tokens_seen,
+                         cursor_next=self.final_cursor)
+
+    # -- observation hooks ------------------------------------------------
+    def sync(self, view):
+        if view.state is not None:
+            jax.block_until_ready(view.state.z)
+
+    def perplexity(self, view) -> float:
+        st, cfg = view.state, self.cfg
+        return float(ppl.training_perplexity(
+            st.w, st.d, st.valid, st.ndk, st.nwk.to_dense(), st.nk.value,
+            cfg.alpha, cfg.beta))
+
+    def history_row(self, view, p: float) -> dict:
+        el = view.elapsed_s
+        return {"epoch": view.epoch, "pos": view.pos,
+                "shard": view.shard_id, "perplexity": p, "elapsed_s": el,
+                "tokens_per_s": self.tokens_seen / el}
+
+    def log_line(self, view, p: float) -> str:
+        el = view.elapsed_s
+        return (f"[stream] epoch {view.epoch} shard {view.pos:3d} "
+                f"(#{view.shard_id})  perplexity {p:9.2f}  "
+                f"({self.tokens_seen / el:,.0f} tok/s)")
+
+    def checkpoint(self, view, path: str):
+        ckpt.save_stream(path, np.asarray(self.nwk.value),
+                         np.asarray(self.nk.value), view.cursor_next,
+                         self.seed, self.ckpt_meta)
+
+    # -- loop plumbing ----------------------------------------------------
+    def should_stop(self) -> bool:
+        return (self.max_shards is not None
+                and self.shards_done >= self.max_shards)
+
+    def final_view(self, last: Optional[SweepView]) -> Optional[SweepView]:
+        if last is not None:
+            return last
+        return SweepView(self, step=0, epoch=self.cursor0.epoch,
+                         pos=self.cursor0.pos, shard_id=None, is_last=True,
+                         state=None, nwk=self.nwk, nk=self.nk,
+                         tokens_seen=0, cursor_next=self.final_cursor)
+
+    def finish(self, stopped: bool):
+        if stopped:
+            self.log_fn(f"[stream] stopping after {self.shards_done} "
+                        f"shards (max_shards), cursor -> epoch "
+                        f"{self.final_cursor.epoch} pos "
+                        f"{self.final_cursor.pos}")
+        elif self.shards_done:
+            el = time.time() - self.t0
+            self.log_fn(f"[stream] done: {self.shards_done} shard visits, "
+                        f"{self.tokens_seen} tokens in {el:.1f}s "
+                        f"({self.tokens_seen / el:,.0f} tok/s)")
+
+    def result(self) -> SessionResult:
+        return SessionResult(self.nwk, self.nk, [], self.info, None,
+                             self.reader)
+
+
+# ---------------------------------------------------------------------------
+# SPMD planes share the mesh resolution (and its failure modes).
+# ---------------------------------------------------------------------------
+
+def _resolve_mesh(cfg: "lda.LDAConfig", mesh_model: int):
+    """Build the (data, model) mesh for ``mesh_model`` servers and pin the
+    PS shard count to the model axis (paper section 2.2).  Returns
+    ``(mesh, data, model, workers, cfg)``; raises with the actionable
+    device-count message shared by both SPMD planes."""
+    n_dev = jax.device_count()
+    model = int(mesh_model)
+    if model < 1 or n_dev % model:
+        raise ValueError(
+            f"device count {n_dev} is not divisible by "
+            f"mesh_model={model}; adjust mesh_model or force host "
+            f"devices (XLA_FLAGS=--xla_force_host_platform_device_"
+            f"count=N)")
+    data = n_dev // model
+    mesh = jax.make_mesh((data, model), ("data", "model"))
+    cfg = lda.LDAConfig(**{**cfg.__dict__, "num_shards": model})
+    return mesh, data, model, data * model, cfg
+
+
+# ---------------------------------------------------------------------------
+# Plane 3: in-memory corpus, SPMD backend (the old run_distributed loop).
+# ---------------------------------------------------------------------------
+
+class _SpmdPlane:
+    """shard_map'd training over a ``(data, model)`` mesh.
+
+    Workers (all mesh shards) sample their document partitions; servers
+    (the model axis) hold cyclic rows of ``n_wk``.  RNG matches the old
+    launcher loop bitwise: ``key = PRNGKey(seed)`` seeds the shared z
+    init, then ``key, sub = split(key)`` + ``split(sub, workers)`` per
+    sweep.
+    """
+
+    kind = "spmd"
+
+    def __init__(self, corp, cfg, exec_cfg, sweeps, *, seed=0,
+                 mesh_model=2, log_fn=print):
+        self.corp = corp
+        self.cfg = cfg
+        self.exec_cfg = exec_cfg
+        self.sweeps = int(sweeps)
+        self.seed = int(seed)
+        self.mesh_model = int(mesh_model)
+        self.log_fn = log_fn
+        self.info: dict = {}
+        self.t0 = time.time()
+        self._ready = False
+
+    def setup(self):
+        if self._ready:
+            return
+        self._ready = True
+        mesh, data, model, workers, cfg = _resolve_mesh(self.cfg,
+                                                        self.mesh_model)
+        self.workers = workers
+        self.cfg = cfg
+        self.log_fn(f"[lda] mesh data={data} x model={model} "
+                    f"({workers} workers, {model} servers)")
+        key = jax.random.PRNGKey(self.seed)
+        (self.w, self.d, self.valid, self.doc_start, self.doc_len, self.z,
+         self.ndk, nwk, nk) = init_distributed_state(self.corp, cfg,
+                                                     workers, key)
+        self.key = key
+        route = self.exec_cfg.resolve_route(cfg.V)
+        self.sweep_fn = jax.jit(make_spmd_sweep(
+            mesh, cfg, staleness=self.exec_cfg.staleness, route=route))
+        self.nwk_val, self.nk_val = nwk.value, nk
+        self.dmax = self.doc_start.shape[1]
+        self.num_tokens = int(jnp.sum(self.valid))
+        self.info = {"mode": "spmd", "mesh_data": data, "mesh_model": model,
+                     "workers": workers,
+                     "staleness": self.exec_cfg.staleness,
+                     "route": repr(route)}
+        self.t0 = time.time()
+
+    def schedule(self):
+        return range(self.sweeps)
+
+    def step(self, i: int):
+        self.key, sub = jax.random.split(self.key)
+        keys = jax.random.split(sub, self.workers)
+        self.z, self.ndk, self.nwk_val, self.nk_val = self.sweep_fn(
+            self.w, self.d, self.z, self.valid, self.doc_start,
+            self.doc_len, self.ndk, self.nwk_val, self.nk_val, keys)
+
+    def _handles(self):
+        client = ps.client_for(self.cfg)
+        return (client.wrap_matrix(self.nwk_val, self.cfg.V),
+                client.wrap_vector(self.nk_val))
+
+    def view(self, i: int) -> SweepView:
+        nwk, nk = self._handles()
+        return SweepView(self, step=i + 1, epoch=0, pos=i, shard_id=None,
+                         is_last=(i == self.sweeps - 1), state=None,
+                         nwk=nwk, nk=nk,
+                         tokens_seen=self.num_tokens * (i + 1))
+
+    # -- observation hooks ------------------------------------------------
+    def sync(self, view):
+        jax.block_until_ready(self.z)
+
+    def perplexity(self, view) -> float:
+        cfg = self.cfg
+        full = view.nwk.to_dense()
+        theta_like_ndk = self.ndk.reshape(self.workers * self.dmax, cfg.K)
+        return float(ppl.training_perplexity(
+            self.w.reshape(-1),
+            (self.d + jnp.arange(self.workers)[:, None] * self.dmax
+             ).reshape(-1), self.valid.reshape(-1), theta_like_ndk, full,
+            self.nk_val, cfg.alpha, cfg.beta))
+
+    def history_row(self, view, p: float) -> dict:
+        return {"sweep": view.step, "perplexity": p,
+                "elapsed_s": view.elapsed_s}
+
+    def log_line(self, view, p: float) -> str:
+        return (f"[lda] sweep {view.step:4d}  perplexity {p:9.2f}  "
+                f"({view.elapsed_s:.1f}s)")
+
+    def checkpoint(self, view, path: str):
+        raise ValueError("checkpointing the SPMD plane is not supported; "
+                         "train in-process to checkpoint, or persist the "
+                         "final model via TopicModel.save")
+
+    # -- loop plumbing ----------------------------------------------------
+    def should_stop(self) -> bool:
+        return False
+
+    def final_view(self, last):
+        return last
+
+    def finish(self, stopped: bool):
+        pass
+
+    def result(self) -> SessionResult:
+        nwk, nk = self._handles()
+        return SessionResult(nwk, nk, [], self.info, None, None)
+
+
+# ---------------------------------------------------------------------------
+# Plane 4: shard stream x SPMD backend (new: stream shards feed SPMD
+# workers in groups -- the scenario TestStreamSpmd wired by hand).
+# ---------------------------------------------------------------------------
+
+class _StreamSpmdPlane:
+    """Each visit feeds ``workers`` consecutive scheduled stream shards to
+    the SPMD sweep as its worker partitions (the uniform padded shard
+    geometry is exactly what shard_map wants), then writes every shard's
+    updated ``z`` back.  Correctness anchor: the exactly-once conservation
+    law -- after any number of epochs the global PS counts equal the
+    histogram of the persisted assignments (tests/test_api.py).
+    """
+
+    kind = "stream_spmd"
+
+    def __init__(self, reader, cfg, exec_cfg, epochs, *, seed=0,
+                 mesh_model=2, max_shards=None, log_fn=print):
+        if isinstance(reader, str):
+            reader = stream_mod.ShardedCorpusReader(reader)
+        self.reader = reader
+        self.cfg = cfg
+        self.exec_cfg = exec_cfg
+        self.epochs = int(epochs)
+        self.seed = int(seed)
+        self.mesh_model = int(mesh_model)
+        self.max_shards = max_shards
+        self.log_fn = log_fn
+        self.info: dict = {}
+        self.t0 = time.time()
+        self._ready = False
+
+    def setup(self):
+        if self._ready:
+            return
+        self._ready = True
+        mesh, data, model, workers, cfg = _resolve_mesh(self.cfg,
+                                                        self.mesh_model)
+        self.workers = workers
+        meta = self.reader.meta
+        if meta.num_shards % workers:
+            raise ValueError(
+                f"stream has {meta.num_shards} shards but the SPMD "
+                f"backend consumes groups of {workers} (= mesh "
+                f"data x model) per sweep; re-shard the stream so the "
+                f"shard count is a multiple of {workers}, or adjust "
+                f"mesh_model/--devices")
+        if meta.tokens_per_shard % cfg.block_tokens:
+            raise ValueError(
+                f"tokens_per_shard={meta.tokens_per_shard} must be a "
+                f"multiple of block_tokens={cfg.block_tokens} for "
+                f"the snapshot executor")
+        self.cfg = cfg
+        self.log_fn(f"[lda] mesh data={data} x model={model} "
+                    f"({workers} workers, {model} servers); stream of "
+                    f"{meta.num_shards} shards in groups of {workers}")
+        nwk, nk = init_stream(self.reader, cfg, self.seed)
+        self.nwk_val, self.nk_val = nwk.value, nk.value
+        route = self.exec_cfg.resolve_route(cfg.V)
+        self.sweep_fn = jax.jit(make_spmd_sweep(
+            mesh, cfg, staleness=self.exec_cfg.staleness, route=route))
+        self.loader = stream_mod.StreamingLoader(self.reader,
+                                                 seed=self.seed,
+                                                 prefetch=False,
+                                                 load_z=True)
+        self._sched = self.loader.schedule(stream_mod.Cursor(0, 0),
+                                           self.epochs)
+        self.total_visits = len(self._sched)
+        if self.max_shards is not None:
+            self.total_visits = min(self.total_visits, self.max_shards)
+        self.valid_np = np.arange(meta.tokens_per_shard)
+        self.shards_done = 0
+        self.tokens_seen = 0
+        self._last_group = None
+        self.info = {"mode": "stream_spmd", "mesh_data": data,
+                     "mesh_model": model, "workers": workers,
+                     "stream_shards": meta.num_shards,
+                     "tokens_per_shard": meta.tokens_per_shard,
+                     "num_tokens": meta.num_tokens,
+                     "staleness": self.exec_cfg.staleness,
+                     "route": repr(route)}
+        self.t0 = time.time()
+
+    def schedule(self):
+        for g in range(0, len(self._sched), self.workers):
+            yield self._sched[g:g + self.workers]
+
+    def step(self, group):
+        cfg, meta, reader = self.cfg, self.reader.meta, self.reader
+        shards = [reader.shard(sid, mmap=False) for _, sid in group]
+        for (_, sid), sh in zip(group, shards):
+            if sh.z is None:
+                raise FileNotFoundError(
+                    f"shard {sid} has no z file; stream was never "
+                    f"initialised")
+        w = jnp.asarray(np.stack([np.asarray(s.w) for s in shards]))
+        d = jnp.asarray(np.stack([np.asarray(s.d) for s in shards]))
+        z = jnp.asarray(np.stack([np.asarray(s.z) for s in shards]))
+        ds = jnp.asarray(np.stack([np.asarray(s.doc_start)
+                                   for s in shards]))
+        dl = jnp.asarray(np.stack([np.asarray(s.doc_len) for s in shards]))
+        valid = jnp.asarray(np.stack([self.valid_np < s.n_tokens
+                                      for s in shards]))
+        one = valid.astype(jnp.int32)
+        widx = jnp.arange(self.workers)[:, None].repeat(w.shape[1], 1)
+        ndk = jnp.zeros((self.workers, meta.doc_cap, cfg.K), jnp.int32).at[
+            widx.reshape(-1), d.reshape(-1), z.reshape(-1)].add(
+            one.reshape(-1))
+        cur0 = group[0][0]
+        key = stream_sweep_key(self.seed, cur0.epoch, cur0.pos)
+        keys = jax.random.split(key, self.workers)
+        z2, ndk2, self.nwk_val, self.nk_val = self.sweep_fn(
+            w, d, z, valid, ds, dl, ndk, self.nwk_val, self.nk_val, keys)
+        z2_np = np.asarray(z2)
+        for j, (_, sid) in enumerate(group):
+            reader.write_z(sid, z2_np[j])
+        self._last_group = (w, d, valid, ndk2, z2)
+        self.shards_done += len(group)
+        self.tokens_seen += int(sum(s.n_tokens for s in shards))
+
+    def _handles(self):
+        client = ps.client_for(self.cfg)
+        return (client.wrap_matrix(self.nwk_val, self.cfg.V),
+                client.wrap_vector(self.nk_val))
+
+    def view(self, group) -> SweepView:
+        # step counts *shard visits* (not groups), so eval/checkpoint
+        # cadences mean the same thing as on the in-process stream plane;
+        # callbacks fire on crossing a multiple, since steps advance by
+        # ``workers`` per sweep.
+        cur0 = group[0][0]
+        nwk, nk = self._handles()
+        return SweepView(self, step=self.shards_done,
+                         epoch=cur0.epoch, pos=cur0.pos, shard_id=None,
+                         is_last=(self.shards_done >= self.total_visits),
+                         state=None, nwk=nwk, nk=nk,
+                         tokens_seen=self.tokens_seen)
+
+    # -- observation hooks ------------------------------------------------
+    def sync(self, view):
+        jax.block_until_ready(self.nk_val)
+
+    def perplexity(self, view) -> float:
+        cfg = self.cfg
+        w, d, valid, ndk, _ = self._last_group
+        dmax = ndk.shape[1]
+        full = view.nwk.to_dense()
+        return float(ppl.training_perplexity(
+            w.reshape(-1),
+            (d + jnp.arange(self.workers)[:, None] * dmax).reshape(-1),
+            valid.reshape(-1), ndk.reshape(self.workers * dmax, cfg.K),
+            full, self.nk_val, cfg.alpha, cfg.beta))
+
+    def history_row(self, view, p: float) -> dict:
+        el = view.elapsed_s
+        return {"epoch": view.epoch, "pos": view.pos, "perplexity": p,
+                "elapsed_s": el, "tokens_per_s": self.tokens_seen / el}
+
+    def log_line(self, view, p: float) -> str:
+        el = view.elapsed_s
+        return (f"[stream] epoch {view.epoch} group at pos {view.pos:3d}  "
+                f"perplexity {p:9.2f}  "
+                f"({self.tokens_seen / el:,.0f} tok/s)")
+
+    def checkpoint(self, view, path: str):
+        raise ValueError("checkpointing the streamed SPMD plane is not "
+                         "supported yet; train in-process to checkpoint")
+
+    # -- loop plumbing ----------------------------------------------------
+    def should_stop(self) -> bool:
+        return (self.max_shards is not None
+                and self.shards_done >= self.max_shards)
+
+    def final_view(self, last):
+        return last
+
+    def finish(self, stopped: bool):
+        if self.shards_done:
+            el = time.time() - self.t0
+            self.log_fn(f"[stream] done: {self.shards_done} shard visits "
+                        f"({self.workers} per sweep), {self.tokens_seen} "
+                        f"tokens in {el:.1f}s "
+                        f"({self.tokens_seen / el:,.0f} tok/s)")
+
+    def result(self) -> SessionResult:
+        nwk, nk = self._handles()
+        return SessionResult(nwk, nk, [], self.info, None, self.reader)
+
+
+# ---------------------------------------------------------------------------
+# Shim entry points (what the deprecated train.loop wrappers call).
+# ---------------------------------------------------------------------------
+
+def memory_fit(state, key, cfg, exec_cfg, sweeps, *, eval_every=10,
+               log_fn=print, callbacks: Sequence[Callback] = ()):
+    """The old ``fit_lda`` contract on the unified loop: returns
+    ``(state, history, info)``."""
+    plane = _MemoryPlane(cfg, exec_cfg, state, key, sweeps, log_fn)
+    ev = EvalCallback(every=eval_every, include_last=True, log_fn=log_fn)
+    _run_loop(plane, [ev, *callbacks])
+    return plane.state, ev.history, plane.info
+
+
+def stream_fit(reader, cfg, exec_cfg, epochs, *, seed=0,
+               checkpoint_path=None, checkpoint_every=0, resume=False,
+               max_shards=None, eval_every=0, prefetch=True, log_fn=print,
+               callbacks: Sequence[Callback] = ()):
+    """The old ``fit_lda_stream`` contract on the unified loop: returns
+    ``(nwk, nk, history, info)``."""
+    plane = _StreamPlane(reader, cfg, exec_cfg, epochs, seed=seed,
+                         checkpoint_path=checkpoint_path, resume=resume,
+                         max_shards=max_shards, prefetch=prefetch,
+                         log_fn=log_fn)
+    ev = EvalCallback(every=eval_every, include_last=False, log_fn=log_fn)
+    cbs: List[Callback] = [ev, *callbacks]
+    if checkpoint_path:
+        cbs.append(CheckpointCallback(checkpoint_path,
+                                      every=checkpoint_every))
+    _run_loop(plane, cbs)
+    return plane.nwk, plane.nk, ev.history, plane.info
+
+
+# ---------------------------------------------------------------------------
+# Session: LDAJob -> plane -> result.
+# ---------------------------------------------------------------------------
+
+class Session:
+    """Resolve a validated ``LDAJob`` into a data/backend plane and run it.
+
+    ``run(callbacks)`` executes the full schedule and returns a
+    ``SessionResult``; the session wires the job's eval cadence and
+    checkpoint policy in as callbacks (before the caller's, matching the
+    pre-redesign eval-then-checkpoint ordering).  ``make_step()`` exposes
+    the compiled executor of an in-memory in-process job for
+    benchmark-grade timing loops.
+    """
+
+    def __init__(self, job: LDAJob, log_fn=print):
+        self.job = job.validate()
+        self.log_fn = log_fn
+        self._plane = None
+        self.cfg: Optional[lda.LDAConfig] = None
+
+    # -- resolution --------------------------------------------------------
+    def _ensure_plane(self):
+        if self._plane is not None:
+            return self._plane
+        job = self.job
+        exec_cfg = job.exec_config()
+        if job.source_kind == "memory":
+            corp = job.materialize_corpus()
+            vocab = (corp.vocab_size if job.vocab_size is None
+                     else job.vocab_size)
+            if vocab < corp.vocab_size:
+                raise JobValidationError(
+                    [f"vocab_size={vocab} is smaller than the corpus "
+                     f"vocabulary ({corp.vocab_size}); drop vocab_size= "
+                     f"to infer it from the corpus"])
+            cfg = job.lda_config(vocab)
+            if job.backend == SPMD:
+                self._plane = _SpmdPlane(corp, cfg, exec_cfg, job.sweeps,
+                                         seed=job.seed,
+                                         mesh_model=job.mesh_model,
+                                         log_fn=self.log_fn)
+            else:
+                key = jax.random.PRNGKey(job.seed)
+                state = lda.init_state(key, jnp.asarray(corp.w),
+                                       jnp.asarray(corp.d), corp.num_docs,
+                                       cfg)
+                key, sub = jax.random.split(key)
+                self._plane = _MemoryPlane(cfg, exec_cfg, state, sub,
+                                           job.sweeps, log_fn=self.log_fn)
+        else:
+            reader = stream_mod.ShardedCorpusReader(job.stream_dir)
+            vocab = reader.meta.vocab_size
+            if job.vocab_size is not None and job.vocab_size != vocab:
+                self.log_fn(f"[api] stream vocab {vocab} overrides "
+                            f"vocab_size={job.vocab_size}")
+            cfg = job.lda_config(vocab)
+            if job.backend == SPMD:
+                self._plane = _StreamSpmdPlane(
+                    reader, cfg, exec_cfg, job.epochs, seed=job.seed,
+                    mesh_model=job.mesh_model, max_shards=job.max_shards,
+                    log_fn=self.log_fn)
+            else:
+                self._plane = _StreamPlane(
+                    reader, cfg, exec_cfg, job.epochs, seed=job.seed,
+                    checkpoint_path=job.checkpoint.path or None,
+                    resume=job.checkpoint.resume,
+                    max_shards=job.max_shards, prefetch=job.prefetch,
+                    log_fn=self.log_fn)
+        self.cfg = self._plane.cfg
+        return self._plane
+
+    # -- execution ---------------------------------------------------------
+    def run(self, callbacks: Sequence[Callback] = ()) -> SessionResult:
+        plane = self._ensure_plane()
+        cbs: List[Callback] = []
+        ev = None
+        if self.job.eval_every:
+            ev = EvalCallback(every=self.job.eval_every,
+                              include_last=plane.kind in ("memory", "spmd"),
+                              log_fn=self.log_fn)
+            cbs.append(ev)
+        cbs.extend(callbacks)
+        if self.job.checkpoint.path:
+            cbs.append(CheckpointCallback(self.job.checkpoint.path,
+                                          every=self.job.checkpoint.every))
+        res = _run_loop(plane, cbs)
+        # cfg may have been refined during setup (SPMD shard count)
+        self.cfg = plane.cfg
+        return res._replace(history=ev.history if ev is not None else [])
+
+    def make_step(self):
+        """Benchmark access for in-memory in-process jobs: returns
+        ``(state, step_fn, info)`` with ``step_fn(state, key) -> state``
+        the compiled executor, so timing loops drive it directly."""
+        plane = self._ensure_plane()
+        if plane.kind != "memory":
+            raise ValueError(
+                "make_step() exposes the in-memory in-process executor "
+                "only; drive other planes through run()")
+        plane.setup()
+        return plane.state, plane.step_fn, plane.info

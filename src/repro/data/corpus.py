@@ -106,6 +106,65 @@ def generate_lda_corpus(seed: int, num_docs: int, mean_doc_len: int,
     return reindex(np.concatenate(ws), np.concatenate(ds), vocab_size)
 
 
+def synthetic_corpus(num_docs: int, vocab_size: int, *,
+                     true_topics: Optional[int] = None,
+                     model_topics: Optional[int] = None,
+                     mean_doc_len: int = 60, seed: int = 0,
+                     log_fn=None) -> Corpus:
+    """The canonical synthetic-corpus recipe for examples/ and benchmarks/.
+
+    Every demo and benchmark used to hand-roll its own
+    ``generate_lda_corpus`` call with near-identical arguments; this is
+    the single front door.  ``true_topics`` is the generative topic
+    count; when omitted it defaults to half the *model's* topic count
+    (``max(4, model_topics // 2)`` -- the convention the benchmarks
+    converged on) or 16 if neither is given.  ``log_fn`` optionally
+    prints the one-line corpus summary every caller used to format
+    itself.
+    """
+    if true_topics is None:
+        true_topics = max(4, model_topics // 2) if model_topics else 16
+    corp = generate_lda_corpus(seed=seed, num_docs=num_docs,
+                               mean_doc_len=mean_doc_len,
+                               vocab_size=vocab_size,
+                               num_topics=true_topics)
+    if log_fn is not None:
+        log_fn(f"corpus: {corp.num_tokens} tokens, {corp.num_docs} docs, "
+               f"V={corp.vocab_size}")
+    return corp
+
+
+def corpus_from_docs(docs, vocab_size: Optional[int] = None) -> Corpus:
+    """Build a ``Corpus`` from an iterable of token-id documents.
+
+    The entry point behind ``LDAJob(docs=...)``.  NOTE: word ids are
+    re-ranked by corpus frequency (``reindex`` -- the section-3.2
+    contract every downstream component assumes); keep your own id->rank
+    map if you need to translate back.  Empty documents are dropped.
+    """
+    ws: List[np.ndarray] = []
+    ds: List[np.ndarray] = []
+    for i, doc in enumerate(docs):
+        a = np.asarray(doc, dtype=np.int64).ravel()
+        if a.size == 0:
+            continue
+        ws.append(a)
+        ds.append(np.full(a.size, i, np.int64))
+    if not ws:
+        raise ValueError("docs yielded no tokens; pass at least one "
+                         "non-empty document")
+    w = np.concatenate(ws)
+    d = np.concatenate(ds)
+    if w.min() < 0:
+        raise ValueError("negative token ids in docs")
+    if vocab_size is None:
+        vocab_size = int(w.max()) + 1
+    elif int(w.max()) >= vocab_size:
+        raise ValueError(f"token id {int(w.max())} out of range for "
+                         f"vocab_size={vocab_size}")
+    return reindex(w, d, vocab_size)
+
+
 def train_heldout_split(corpus: Corpus, heldout_frac: float = 0.1,
                         seed: int = 1) -> Tuple[Corpus, Corpus]:
     """Split documents into train/held-out sets."""

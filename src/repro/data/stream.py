@@ -434,8 +434,11 @@ class StreamingLoader:
         rng = np.random.default_rng([self.seed, int(epoch)])
         return rng.permutation(self.reader.num_shards)
 
-    def _schedule(self, start: Cursor, end_epoch: int
-                  ) -> List[Tuple[Cursor, int]]:
+    def schedule(self, start: Cursor = Cursor(), end_epoch: int = 1
+                 ) -> List[Tuple[Cursor, int]]:
+        """The full visit list ``[(cursor, shard_id), ...]`` from
+        ``start`` to the end of epoch ``end_epoch - 1`` -- the exact
+        sequence ``iterate`` walks (pure function of (seed, start))."""
         out = []
         cur = start
         while cur.epoch < end_epoch:
@@ -444,6 +447,8 @@ class StreamingLoader:
                 out.append((Cursor(cur.epoch, pos), int(order[pos])))
             cur = Cursor(cur.epoch + 1, 0)
         return out
+
+    _schedule = schedule
 
     def _load(self, sid: int) -> StreamShard:
         # materialised (mmap=False): the double buffer owns real RAM, and

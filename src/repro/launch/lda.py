@@ -1,4 +1,8 @@
-"""LDA launcher -- the paper's workload end-to-end.
+"""LDA launcher -- a thin argv -> ``LDAJob`` translator over ``repro.api``.
+
+Every scenario is one declarative job (DESIGN.md section 10): the
+launcher only parses flags, optionally ingests a synthetic corpus, builds
+the job and runs it through ``api.Session``.
 
 Single-process:
   PYTHONPATH=src python -m repro.launch.lda --docs 2000 --vocab 5000 -k 100
@@ -7,6 +11,10 @@ Distributed (SPMD over N host devices; on a pod this is the production
 mesh): workers = all mesh shards (tokens split over data x model), servers =
 the model axis (cyclic rows of n_wk, paper section 2.2):
   PYTHONPATH=src python -m repro.launch.lda --devices 8 --mesh-model 2 ...
+
+Out-of-core: ``--stream-dir`` streams a sharded on-disk corpus through
+the PS client (optionally combined with ``--devices``: groups of stream
+shards feed the SPMD workers).
 """
 import argparse
 import os
@@ -23,193 +31,108 @@ def _early_devices():
 _early_devices()
 
 import json
-import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro import ps
-from repro.core import lightlda as lda
-from repro.core import perplexity as ppl
+from repro import api
+# SPMD wiring lives in the api session now; re-exported here because the
+# SPMD test/benchmark suites import it from the launcher.
+from repro.api.session import (init_distributed_state,  # noqa: F401
+                               make_spmd_sweep)
 from repro.data import corpus as corpus_mod
 from repro.data import stream as stream_mod
-from repro.sharding.compat import shard_map
-from repro.train import async_exec, checkpoint
-from repro.train import loop as train_loop
 
 
-def run_single(corp, cfg: "lda.LDAConfig", sweeps: int, seed: int,
+def _corpus_from_args(args):
+    return corpus_mod.synthetic_corpus(
+        args.docs, args.vocab, true_topics=args.true_topics,
+        mean_doc_len=args.mean_doc_len, seed=args.seed)
+
+
+def job_from_args(args) -> "api.LDAJob":
+    """Translate the parsed argv into the declarative job (the launcher's
+    whole remaining role)."""
+    common = dict(num_topics=args.topics, mh_steps=args.mh_steps,
+                  block_tokens=args.block_tokens,
+                  use_kernels=args.kernels,
+                  staleness=args.staleness, hot_words=args.hot_words,
+                  model_blocks=args.model_blocks, seed=args.seed,
+                  eval_every=args.eval_every, sweeps=args.sweeps,
+                  epochs=args.epochs)
+    if args.devices:
+        if args.model_blocks:
+            print("[lda] note: --model-blocks is in-process only (the SPMD "
+                  "backend uses the full-snapshot executor); ignoring")
+        common.update(backend=api.SPMD, mesh_model=args.mesh_model,
+                      model_blocks=0)
+
+    if args.stream_dir:
+        if not os.path.exists(os.path.join(args.stream_dir,
+                                           stream_mod.MANIFEST)):
+            corp = _corpus_from_args(args)
+            meta = stream_mod.write_sharded(args.stream_dir, corp,
+                                            args.stream_shard_tokens)
+            print(f"[lda] sharded {meta.num_tokens} tokens into "
+                  f"{meta.num_shards} shards at {args.stream_dir}")
+        ckpt = api.CheckpointPolicy()
+        if not args.devices:
+            path = args.checkpoint or os.path.join(args.out,
+                                                   "stream_ckpt.npz")
+            ckpt = api.CheckpointPolicy(path=path,
+                                        every=args.checkpoint_every,
+                                        resume=args.resume)
+        elif args.checkpoint or args.resume:
+            print("[lda] note: checkpoint/resume is not supported on the "
+                  "streamed SPMD path; ignoring")
+        return api.LDAJob(stream_dir=args.stream_dir, checkpoint=ckpt,
+                          **common)
+
+    corp = _corpus_from_args(args)
+    print(f"[lda] corpus: {corp.num_tokens} tokens, {corp.num_docs} docs, "
+          f"V={corp.vocab_size}")
+    ckpt = api.CheckpointPolicy()
+    if args.checkpoint and not args.devices:
+        ckpt = api.CheckpointPolicy(path=args.checkpoint)
+    return api.LDAJob(corpus=corp, checkpoint=ckpt, **common)
+
+
+# ---------------------------------------------------------------------------
+# Programmatic wrappers (kept for the SPMD test suites and back-compat;
+# each is a one-job session now).
+# ---------------------------------------------------------------------------
+
+def run_single(corp, cfg: "object", sweeps: int, seed: int,
                eval_every: int, out, model_blocks: int = 0,
                staleness: int = 0, hot_words=None):
-    """Single-process training through the asynchronous executor.
-
-    model_blocks > 0 selects the blocked/pipelined sweep (paper sec. 3.4):
-    worker memory O(V/blocks x K) instead of O(V x K).  ``staleness`` bounds
-    how many block deltas may be in flight while a block samples (0 ==
-    synchronous); ``hot_words`` sets the hybrid dense/sparse push boundary.
-    """
-    key = jax.random.PRNGKey(seed)
-    state = lda.init_state(key, jnp.asarray(corp.w), jnp.asarray(corp.d),
-                           corp.num_docs, cfg)
-    exec_cfg = async_exec.ExecConfig(staleness=staleness,
-                                     hot_words=hot_words,
-                                     model_blocks=model_blocks)
-    key, sub = jax.random.split(key)
-    state, history, info = train_loop.fit_lda(state, sub, cfg, exec_cfg,
-                                              sweeps, eval_every=eval_every)
-    return state, history
-
-
-def run_stream(args, cfg: "lda.LDAConfig"):
-    """Out-of-core training from a sharded on-disk stream (data/stream.py).
-
-    If ``--stream-dir`` has no manifest yet, a synthetic corpus is
-    generated and sharded into it first (the stand-in for an offline
-    ingestion pass); an existing stream is reused as-is -- its manifest,
-    not the CLI corpus flags, then defines the data.  ``--resume``
-    restores the PS state + loader cursor from ``--checkpoint`` and
-    continues bitwise-identically.
-    """
-    path = args.stream_dir
-    if not os.path.exists(os.path.join(path, stream_mod.MANIFEST)):
-        corp = corpus_mod.generate_lda_corpus(
-            seed=args.seed, num_docs=args.docs,
-            mean_doc_len=args.mean_doc_len, vocab_size=args.vocab,
-            num_topics=args.true_topics)
-        meta = stream_mod.write_sharded(path, corp,
-                                        args.stream_shard_tokens)
-        print(f"[lda] sharded {meta.num_tokens} tokens into "
-              f"{meta.num_shards} shards at {path}")
-    reader = stream_mod.ShardedCorpusReader(path)
-    if reader.meta.vocab_size != cfg.vocab_size:
-        print(f"[lda] stream vocab {reader.meta.vocab_size} overrides "
-              f"--vocab {cfg.vocab_size}")
-        cfg = lda.LDAConfig(**{**cfg.__dict__,
-                               "vocab_size": reader.meta.vocab_size})
-    exec_cfg = async_exec.ExecConfig(staleness=args.staleness,
-                                     hot_words=args.hot_words,
-                                     model_blocks=args.model_blocks)
-    ckpt_path = args.checkpoint or os.path.join(args.out, "stream_ckpt.npz")
-    nwk, nk, history, info = train_loop.fit_lda_stream(
-        reader, cfg, exec_cfg, epochs=args.epochs, seed=args.seed,
-        checkpoint_path=ckpt_path, checkpoint_every=args.checkpoint_every,
-        resume=args.resume, eval_every=args.eval_every)
-    print(f"[lda] stream training done ({info['mode']} executor); "
-          f"checkpoint at {ckpt_path}")
-    return history
-
-
-def make_spmd_sweep(mesh, cfg: "lda.LDAConfig", staleness: int = 0,
-                    hot_words=None):
-    """shard_map'd sweep: tokens split over (data, model); n_wk rows cyclic
-    over model (the servers); deltas psum'd over all workers.  The count
-    tables enter through an SPMD-backed ``PSClient`` -- the sweep gets its
-    collectives (all-gather pull, one psum push per group) from the
-    handle's backend, not from axis kwargs.  The executor schedule knobs
-    thread through: with ``staleness`` s, each worker merges (and psums)
-    deltas once per group of s+1 token blocks -- fewer, larger
-    collectives -- and ``hot_words`` selects the push route (dense hot
-    prefix + sparse cold tail)."""
-    from jax.sharding import PartitionSpec as P
-
-    client = ps.client_for(cfg, axis_name=("data", "model"),
-                           model_axis="model")
-
-    def local(w, d, z, valid, doc_start, doc_len, ndk, nwk_local, nk, keys):
-        state = lda.SamplerState(
-            w[0], d[0], z[0], valid[0], doc_start[0], doc_len[0],
-            client.wrap_matrix(nwk_local, cfg.V),
-            client.wrap_vector(nk), ndk[0])
-        out = lda.sweep(state, keys[0], cfg,
-                        staleness=staleness, hot_words=hot_words)
-        return (out.z[None], out.ndk[None], out.nwk.value, out.nk.value)
-
-    wspec = P(("data", "model"), None)
-    return shard_map(
-        local, mesh=mesh,
-        in_specs=(wspec, wspec, wspec, wspec, wspec, wspec,
-                  P(("data", "model"), None, None), P("model", None),
-                  P(), wspec),
-        out_specs=(wspec, P(("data", "model"), None, None),
-                   P("model", None), P()),
-        check_vma=False)
-
-
-def init_distributed_state(corp, cfg: "lda.LDAConfig", workers: int,
-                           key: jax.Array):
-    """Shard the corpus over ``workers`` and build the global count tables
-    (the same rebuild the checkpoint recovery uses, paper section 3.5).
-
-    Returns ``(w, d, valid, doc_start, doc_len, z, ndk, nwk, nk)`` with a
-    leading worker dim on the per-worker arrays; ``nwk`` is cyclic over
-    ``cfg.num_shards``.  Shared by ``run_distributed`` and the SPMD tests.
-    """
-    shards = corpus_mod.shard_tokens(corp, workers, cfg.block_tokens)
-    npad = max(s[0].shape[0] for s in shards)
-    dmax = max(s[3].shape[0] for s in shards)
-
-    def stack(i, pad_to, fill=0):
-        return np.stack([
-            np.pad(s[i], (0, pad_to - len(s[i])), constant_values=fill)
-            for s in shards])
-
-    w = jnp.asarray(stack(0, npad))
-    d = jnp.asarray(stack(1, npad))
-    valid = jnp.asarray(stack(2, npad))
-    doc_start = jnp.asarray(stack(3, dmax))
-    doc_len = jnp.asarray(stack(4, dmax))
-
-    z = jax.random.randint(key, w.shape, 0, cfg.K, dtype=jnp.int32)
-    # counts from the global view (same rebuild the checkpoint recovery uses)
-    one = valid.reshape(-1).astype(jnp.int32)
-    nwk_dense = jnp.zeros((cfg.V, cfg.K), jnp.int32).at[
-        w.reshape(-1), z.reshape(-1)].add(one)
-    nk = jnp.zeros((cfg.K,), jnp.int32).at[z.reshape(-1)].add(one)
-    ndk = jnp.zeros((workers, dmax, cfg.K), jnp.int32)
-    idx = jnp.arange(workers)[:, None].repeat(npad, 1)
-    ndk = ndk.at[idx.reshape(-1), d.reshape(-1), z.reshape(-1)].add(one)
-    nwk = ps.client_for(cfg).matrix_from_dense(nwk_dense)
-    return w, d, valid, doc_start, doc_len, z, ndk, nwk, nk
+    """Single-process training through the unified session (the old
+    ``run_single`` contract: returns ``(state, history)``)."""
+    job = api.LDAJob(corpus=corp, num_topics=cfg.num_topics,
+                     vocab_size=cfg.vocab_size, alpha=cfg.alpha,
+                     beta=cfg.beta, mh_steps=cfg.mh_steps,
+                     block_tokens=cfg.block_tokens,
+                     num_shards=cfg.num_shards,
+                     use_kernels=cfg.use_kernels,
+                     kernel_interpret=cfg.kernel_interpret,
+                     model_blocks=model_blocks, staleness=staleness,
+                     hot_words=hot_words, sweeps=sweeps, seed=seed,
+                     eval_every=eval_every)
+    res = api.Session(job).run()
+    return res.state, res.history
 
 
 def run_distributed(corp, cfg, sweeps, seed, eval_every, mesh_model: int,
                     staleness: int = 0, hot_words=None):
-    n_dev = jax.device_count()
-    model = mesh_model
-    data = n_dev // model
-    mesh = jax.make_mesh((data, model), ("data", "model"))
-    workers = data * model
-    cfg = lda.LDAConfig(**{**cfg.__dict__, "num_shards": model})
-    print(f"[lda] mesh data={data} x model={model} "
-          f"({workers} workers, {model} servers)")
-
-    key = jax.random.PRNGKey(seed)
-    (w, d, valid, doc_start, doc_len, z, ndk, nwk,
-     nk) = init_distributed_state(corp, cfg, workers, key)
-    dmax = doc_start.shape[1]
-
-    sweep_fn = jax.jit(make_spmd_sweep(mesh, cfg, staleness=staleness,
-                                       hot_words=hot_words))
-    history = []
-    t0 = time.time()
-    nwk_val, nk_val = nwk.value, nk
-    for i in range(sweeps):
-        key, sub = jax.random.split(key)
-        keys = jax.random.split(sub, workers)
-        z, ndk, nwk_val, nk_val = sweep_fn(
-            w, d, z, valid, doc_start, doc_len, ndk, nwk_val, nk_val, keys)
-        if (i + 1) % eval_every == 0 or i == sweeps - 1:
-            full = ps.client_for(cfg).wrap_matrix(nwk_val, cfg.V).to_dense()
-            theta_like_ndk = ndk.reshape(workers * dmax, cfg.K)
-            p = float(ppl.training_perplexity(
-                w.reshape(-1), (d + jnp.arange(workers)[:, None] * dmax
-                                ).reshape(-1), valid.reshape(-1),
-                theta_like_ndk, full, nk_val, cfg.alpha, cfg.beta))
-            el = time.time() - t0
-            history.append({"sweep": i + 1, "perplexity": p, "elapsed_s": el})
-            print(f"[lda] sweep {i+1:4d}  perplexity {p:9.2f}  ({el:.1f}s)")
-    return history
+    """SPMD training through the unified session (the old
+    ``run_distributed`` contract: returns the history list; bitwise-
+    identical loop, see ``api.session._SpmdPlane``)."""
+    job = api.LDAJob(corpus=corp, num_topics=cfg.num_topics,
+                     vocab_size=cfg.vocab_size, alpha=cfg.alpha,
+                     beta=cfg.beta, mh_steps=cfg.mh_steps,
+                     block_tokens=cfg.block_tokens,
+                     use_kernels=cfg.use_kernels,
+                     kernel_interpret=cfg.kernel_interpret,
+                     backend=api.SPMD, mesh_model=mesh_model,
+                     staleness=staleness, hot_words=hot_words,
+                     sweeps=sweeps, seed=seed, eval_every=eval_every)
+    return api.Session(job).run().history
 
 
 def main():
@@ -261,49 +184,26 @@ def main():
                          "(bitwise-identical continuation)")
     args = ap.parse_args()
 
-    cfg = lda.LDAConfig(num_topics=args.topics, vocab_size=args.vocab,
-                        mh_steps=args.mh_steps,
-                        block_tokens=args.block_tokens,
-                        use_kernels=args.kernels)
-
     if args.stream_dir:
-        if args.devices:
-            ap.error("--stream-dir does not combine with --devices: the "
-                     "stream trainer is single-process (its shards feed "
-                     "SPMD workers in-process; see DESIGN.md section 9)")
         print(f"[lda] stream mode: training {args.epochs} epochs "
               f"(--sweeps is the in-memory trainer's knob and is ignored)")
-        history = run_stream(args, cfg)
-        os.makedirs(args.out, exist_ok=True)
-        with open(os.path.join(args.out, "history.json"), "w") as f:
-            json.dump(history, f, indent=2)
+    try:
+        job = job_from_args(args)
+        session = api.Session(job)
+        result = session.run()
+    except api.JobValidationError as e:
+        ap.error(str(e))
         return
 
-    corp = corpus_mod.generate_lda_corpus(
-        seed=args.seed, num_docs=args.docs, mean_doc_len=args.mean_doc_len,
-        vocab_size=args.vocab, num_topics=args.true_topics)
-    print(f"[lda] corpus: {corp.num_tokens} tokens, {corp.num_docs} docs, "
-          f"V={corp.vocab_size}")
-
-    if args.devices:
-        history = run_distributed(corp, cfg, args.sweeps, args.seed,
-                                  args.eval_every, args.mesh_model,
-                                  staleness=args.staleness,
-                                  hot_words=args.hot_words)
-        state = None
-    else:
-        state, history = run_single(corp, cfg, args.sweeps, args.seed,
-                                    args.eval_every, args.out,
-                                    model_blocks=args.model_blocks,
-                                    staleness=args.staleness,
-                                    hot_words=args.hot_words)
-        if args.checkpoint:
-            checkpoint.save_lda(args.checkpoint, state)
-            print(f"[lda] checkpointed assignments to {args.checkpoint}")
+    if args.stream_dir and not args.devices:
+        print(f"[lda] stream training done ({result.info['mode']} "
+              f"executor); checkpoint at {job.checkpoint.path}")
+    elif args.checkpoint and not args.devices and not args.stream_dir:
+        print(f"[lda] checkpointed assignments to {args.checkpoint}")
 
     os.makedirs(args.out, exist_ok=True)
     with open(os.path.join(args.out, "history.json"), "w") as f:
-        json.dump(history, f, indent=2)
+        json.dump(result.history, f, indent=2)
 
 
 if __name__ == "__main__":

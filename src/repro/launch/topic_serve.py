@@ -21,15 +21,14 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro import ps
 from repro.core import lightlda as lda
 from repro.data import corpus as corpus_mod
 from repro.infer.engine import EngineConfig
 from repro.infer.foldin import FoldInConfig
 from repro.serve.topic_service import TopicService
+from repro.train.async_exec import ExecConfig
 
 
 def _docs_from_corpus(corp, num: int):
@@ -54,9 +53,9 @@ def _topic_queries(snap, num_queries: int, terms: int = 3):
 
 def run(args) -> int:
     t_start = time.time()
-    corp = corpus_mod.generate_lda_corpus(
-        seed=args.seed, num_docs=args.docs, mean_doc_len=args.mean_doc_len,
-        vocab_size=args.vocab, num_topics=args.true_topics)
+    corp = corpus_mod.synthetic_corpus(
+        args.docs, args.vocab, true_topics=args.true_topics,
+        mean_doc_len=args.mean_doc_len, seed=args.seed)
     train_corp, held = corpus_mod.train_heldout_split(corp, 0.1,
                                                       seed=args.seed + 1)
     print(f"[topic_serve] corpus: {train_corp.num_tokens} train tokens / "
@@ -71,10 +70,15 @@ def run(args) -> int:
         foldin=FoldInConfig(num_sweeps=args.foldin_sweeps,
                             burnin=args.foldin_burnin,
                             use_kernels=args.kernels))
-    route = ps.route_for(args.hot_words, cfg.V)
-    svc = TopicService(cfg, ecfg, route=route)
+    # the launcher's exact training spec: staleness / blocks / push route
+    exec_cfg = ExecConfig(staleness=args.staleness,
+                          hot_words=args.hot_words,
+                          model_blocks=args.model_blocks)
+    svc = TopicService(cfg, ecfg, exec_cfg=exec_cfg)
     svc.init_from_corpus(train_corp, seed=args.seed)
-    print(f"[topic_serve] training via PSClient route {route!r}")
+    print(f"[topic_serve] training via PSClient route "
+          f"{exec_cfg.resolve_route(cfg.V)!r} (staleness "
+          f"{exec_cfg.staleness}, model_blocks {exec_cfg.model_blocks})")
 
     # --- train, publishing versioned snapshots along the way -----------
     t0 = time.time()
@@ -142,6 +146,12 @@ def main():
     ap.add_argument("--hot-words", type=int, default=None,
                     help="training push route: H hottest words dense, cold "
                          "tail as coordinate deltas (default: all dense)")
+    ap.add_argument("--staleness", type=int, default=0,
+                    help="bounded-staleness executor (same knob as "
+                         "repro.launch.lda: 0 = synchronous)")
+    ap.add_argument("--model-blocks", type=int, default=0,
+                    help="blocked/pipelined executor: pull the model in N "
+                         "blocks (same knob as repro.launch.lda)")
     ap.add_argument("--publish-every", type=int, default=10,
                     help="publish a snapshot every N training sweeps")
     ap.add_argument("--serve-docs", type=int, default=32,

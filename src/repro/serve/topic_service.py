@@ -3,10 +3,15 @@
 ``TopicService`` owns the three pieces of the serving path (DESIGN.md
 section 3) and wires them to a training state:
 
-  * the LightLDA training sweep (core/lightlda.py) keeps improving the
-    model counts;
+  * the unified training session (repro.api.session) keeps improving the
+    model counts -- the *same* executor spec (``ExecConfig``: staleness,
+    model blocks, push route) the LDA launcher uses, so serving-side
+    training matches the launcher exactly;
   * a ``SnapshotPublisher`` periodically freezes (n_wk, n_k) into an
-    immutable versioned snapshot (alias tables built once per version);
+    immutable versioned snapshot (alias tables built once per version) --
+    either the service's own, or one handed in from outside (e.g.
+    ``repro.api.TopicModel.publisher()``, the estimator-to-serving
+    handoff);
   * a ``QueryEngine`` folds in unseen documents against the latest
     snapshot and scores queries with topic-smoothed query likelihood.
 
@@ -17,33 +22,49 @@ snapshots to dedicated serving hosts; the object boundaries are the same.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import List, Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
+
+import jax.numpy as jnp
 
 from repro import ps
 from repro.core import lightlda as lda
 from repro.infer.engine import EngineConfig, QueryEngine, Result
 from repro.infer.snapshot import Snapshot, SnapshotPublisher
+from repro.train.async_exec import ExecConfig
 
 
 @dataclasses.dataclass
 class TopicService:
-    """``route`` selects the training push policy (``ps.DenseRoute`` /
-    ``ps.CooRoute`` / ``ps.HybridRoute``; None: dense)."""
+    """``exec_cfg`` is the full training spec (``staleness`` /
+    ``model_blocks`` / ``route`` -- ``train.async_exec.ExecConfig``),
+    identical to what the launcher passes; the legacy ``route`` kwarg is
+    deprecated and folded into it.  ``publisher`` adopts an external
+    ``SnapshotPublisher`` (e.g. ``TopicModel.publisher()``) instead of
+    starting empty."""
 
     cfg: lda.LDAConfig
     ecfg: EngineConfig = EngineConfig()
     state: Optional[lda.SamplerState] = None
+    exec_cfg: ExecConfig = ExecConfig()
     route: Optional[ps.PushRoute] = None
+    publisher: Optional[SnapshotPublisher] = None
 
     def __post_init__(self):
-        self.publisher = SnapshotPublisher(self.cfg)
+        if self.route is not None:
+            warnings.warn(
+                "TopicService(route=...) is deprecated: pass "
+                "exec_cfg=ExecConfig(route=...) (the launcher's spec)",
+                DeprecationWarning, stacklevel=2)
+            if self.exec_cfg.route is None:
+                self.exec_cfg = dataclasses.replace(self.exec_cfg,
+                                                    route=self.route)
+        if self.publisher is None:
+            self.publisher = SnapshotPublisher(self.cfg)
         self.engine = QueryEngine(self.publisher, self.ecfg)
-        self._sweep = jax.jit(
-            lambda s, k: lda.sweep(s, k, self.cfg, route=self.route))
 
     # -- training side ---------------------------------------------------
     def init_from_corpus(self, corp, seed: int = 0) -> None:
@@ -53,15 +74,26 @@ class TopicService:
 
     def train(self, num_sweeps: int, key: jax.Array,
               publish_every: int = 0) -> Snapshot:
-        """Run training sweeps; publish every ``publish_every`` sweeps (and
-        always once at the end).  Returns the final snapshot."""
+        """Run training sweeps through the unified session's executor;
+        publish every ``publish_every`` sweeps (and always once at the
+        end).  Returns the final snapshot."""
         assert self.state is not None, "init_from_corpus / set state first"
-        for i in range(num_sweeps):
-            key, sub = jax.random.split(key)
-            self.state = self._sweep(self.state, sub)
-            if publish_every and (i + 1) % publish_every == 0:
-                self.publisher.publish_state(self.state)
-        return self.publisher.publish_state(self.state)
+        from repro.api.callbacks import Callback
+        from repro.api.session import memory_fit
+
+        service = self
+
+        class _Publish(Callback):
+            def on_sweep_end(self, view):
+                if publish_every and view.step % publish_every == 0:
+                    service.publisher.publish_state(view.state)
+
+        state, _, _ = memory_fit(
+            self.state, key, self.cfg, self.exec_cfg, num_sweeps,
+            eval_every=0, log_fn=lambda *a, **k: None,
+            callbacks=[_Publish()])
+        self.state = state
+        return self.publisher.publish_state(state)
 
     # -- serving side ----------------------------------------------------
     def fold_in(self, docs: Sequence[np.ndarray],

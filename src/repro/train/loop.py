@@ -4,21 +4,17 @@
 loss -> grads -> clip -> AdamW, with parameters/moments sharded per
 sharding/specs.py and batch inputs sharded over the dp axes.
 
-``fit_lda`` is the LDA-side counterpart: the host loop that drives the
-asynchronous pipelined executor (train/async_exec.py) sweep by sweep --
-the single entry point the LDA launcher and benchmarks build on.
-``fit_lda_stream`` extends it to the out-of-core setting: a multi-epoch
-trainer over a sharded on-disk corpus (data/stream.py) with resumable
-mid-epoch checkpoints (train/checkpoint.py ``save_stream``).
+``fit_lda`` / ``fit_lda_stream`` are **deprecated shims** (kept for one
+release): the unified trainer now lives in ``repro.api.session`` --
+build an ``LDAJob`` and use ``repro.api.APSLDA(job).fit()`` (or the
+lower-level ``Session``).  The shims delegate to the same session planes
+and are bitwise-identical to their pre-redesign behaviour.
 """
 from __future__ import annotations
 
-import dataclasses
-import os
 import time
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
-
-import numpy as np
+import warnings
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -144,104 +140,34 @@ def jit_train_step(cfg: ModelConfig, tc: TrainConfig, ctx: MeshCtx,
 
 def fit_lda(state, key: jax.Array, cfg, exec_cfg, sweeps: int,
             eval_every: int = 10, log_fn=print):
-    """Host loop for LDA training through the asynchronous executor.
+    """DEPRECATED -- use ``repro.api`` (``APSLDA(job).fit()`` or
+    ``Session``); kept as a shim for one release.
 
-    Builds the jitted sweep step for ``exec_cfg`` (blocked/pipelined or
-    full-snapshot schedule, staleness bound, hybrid hot/cold push -- see
-    ``train.async_exec.ExecConfig``) and runs ``sweeps`` Gibbs sweeps,
-    evaluating training perplexity every ``eval_every``.
-
-    Returns ``(state, history, info)`` where ``history`` rows carry
-    perplexity, elapsed seconds and tokens/sec, and ``info`` is the
-    executor's realised-schedule description.
+    Delegates to the unified session's in-memory plane
+    (``repro.api.session.memory_fit``), which reproduces this loop's
+    pre-redesign behaviour bitwise (same ``key, sub = split(key)`` chain
+    through ``async_exec.make_executor``).  Returns ``(state, history,
+    info)`` exactly as before.
     """
-    from repro.core import perplexity as ppl
-    from repro.train import async_exec
+    warnings.warn(
+        "train.loop.fit_lda is deprecated: build a repro.api.LDAJob and "
+        "use APSLDA(job).fit() (or repro.api.Session)",
+        DeprecationWarning, stacklevel=2)
+    from repro.api import session as api_session
 
-    step, info = async_exec.make_executor(state, cfg, exec_cfg)
-    if info["mode"] == "blocked":
-        rpb = info["rows_per_block"]
-        log_fn(f"[lda] blocked executor: {info['n_blocks']} model blocks "
-               f"x {rpb} rows, group {info['group']} (staleness "
-               f"{info['staleness']}), route {info['route']}, "
-               f"worker block mem "
-               f"{info['group'] * rpb * cfg.K * 4 / 2**20:.1f} MiB (vs "
-               f"{state.nwk.layout.pad_rows * cfg.K * 4 / 2**20:.1f} MiB "
-               f"snapshot)")
-    else:
-        log_fn(f"[lda] snapshot executor: {info['n_blocks']} token blocks, "
-               f"group {info['group']} (staleness {info['staleness']}), "
-               f"route {info['route']}")
-    num_tokens = int(jnp.sum(state.valid))
-    history = []
-    t0 = time.time()
-    for i in range(sweeps):
-        key, sub = jax.random.split(key)
-        state = step(state, sub)
-        if (i + 1) % eval_every == 0 or i == sweeps - 1:
-            jax.block_until_ready(state.z)
-            el = time.time() - t0
-            p = float(ppl.training_perplexity(
-                state.w, state.d, state.valid, state.ndk,
-                state.nwk.to_dense(), state.nk.value, cfg.alpha, cfg.beta))
-            history.append({"sweep": i + 1, "perplexity": p, "elapsed_s": el,
-                            "tokens_per_s": num_tokens * (i + 1) / el})
-            log_fn(f"[lda] sweep {i+1:4d}  perplexity {p:9.2f}  "
-                   f"({el:.1f}s, {num_tokens * (i + 1) / el:,.0f} tok/s)")
-    return state, history, info
+    return api_session.memory_fit(state, key, cfg, exec_cfg, sweeps,
+                                  eval_every=eval_every, log_fn=log_fn)
 
 
 # ---------------------------------------------------------------------------
-# Out-of-core streaming trainer (DESIGN.md section 9).
+# Out-of-core streaming trainer -- moved to repro.api.session (DESIGN.md
+# sections 9 and 10).  The RNG helpers are re-exported here because the
+# checkpoint/stream test suites and external callers use these names; the
+# implementations are unchanged.
 # ---------------------------------------------------------------------------
-#
-# Every random draw derives from one base seed through ``fold_in`` chains
-# keyed by *schedule position*, never by host iteration state: the init
-# stream for shard ``s`` and the sweep stream for (epoch, pos) are pure
-# functions of (seed, position).  That is what makes resume bitwise: a
-# restored run regenerates exactly the keys the uninterrupted run would
-# have used, with no RNG state to persist.
 
-def stream_init_key(seed: int, shard_id: int) -> jax.Array:
-    """Key for shard ``shard_id``'s initial topic assignment draw."""
-    base = jax.random.fold_in(jax.random.PRNGKey(seed), 0)
-    return jax.random.fold_in(base, shard_id)
-
-
-def stream_sweep_key(seed: int, epoch: int, pos: int) -> jax.Array:
-    """Key for the sweep at schedule position (epoch, pos)."""
-    base = jax.random.fold_in(jax.random.PRNGKey(seed), 1)
-    return jax.random.fold_in(jax.random.fold_in(base, epoch), pos)
-
-
-def init_stream(reader, cfg, seed: int = 0, client=None):
-    """Pass 0 of stream training: draw every shard's initial assignments
-    (persisted as the shard's ``z`` file) and histogram the global count
-    tables.  One streaming pass; host memory is O(V x K) + one shard --
-    the same recovery shape as ``data.stream.rebuild_counts_from_stream``.
-
-    Returns ``(nwk, nk)`` PS handles holding the initial counts.
-    """
-    from repro import ps
-
-    meta = reader.meta
-    k = cfg.K
-    nwk = np.zeros((meta.vocab_size, k), np.int32)
-    nk = np.zeros(k, np.int64)
-    for sid in range(meta.num_shards):
-        shard = reader.shard(sid, load_z=False)
-        z = np.array(jax.random.randint(
-            stream_init_key(seed, sid), (meta.tokens_per_shard,), 0, k,
-            dtype=jnp.int32))                   # np.array: writable copy
-        z[shard.n_tokens:] = 0
-        reader.write_z(sid, z)
-        wv = np.asarray(shard.w[:shard.n_tokens])
-        zv = z[:shard.n_tokens]
-        np.add.at(nwk, (wv, zv), 1)
-        nk += np.bincount(zv, minlength=k)
-    client = client or ps.client_for(cfg)
-    return (client.matrix_from_dense(jnp.asarray(nwk)),
-            client.wrap_vector(jnp.asarray(nk, dtype=jnp.int32)))
+from repro.api.session import (init_stream, stream_init_key,  # noqa: E402
+                               stream_sweep_key)
 
 
 def fit_lda_stream(reader, cfg, exec_cfg, epochs: int, *, seed: int = 0,
@@ -249,141 +175,29 @@ def fit_lda_stream(reader, cfg, exec_cfg, epochs: int, *, seed: int = 0,
                    checkpoint_every: int = 0, resume: bool = False,
                    max_shards: Optional[int] = None, eval_every: int = 0,
                    prefetch: bool = True, log_fn=print):
-    """Multi-epoch out-of-core LDA training over a sharded stream.
+    """DEPRECATED -- use ``repro.api`` (``LDAJob(stream_dir=...)`` with a
+    ``CheckpointPolicy``); kept as a shim for one release.
 
-    The model (the PS count tables) is the only global state; token data
-    streams through shard by shard via the double-buffered
-    ``StreamingLoader`` (per-epoch shard-order shuffling with a fixed
-    PRNG).  Each shard visit rebuilds its worker-local ``n_dk`` from the
-    persisted assignments, runs one executor sweep against the *global*
-    ``n_wk``/``n_k`` handles, and writes the updated ``z`` back to the
-    stream directory -- the paper's section-3.5 discipline (assignments
-    are data; counts are derived).
-
-    ``checkpoint_path`` + ``checkpoint_every`` (in shards) persist the PS
-    state and loader cursor at shard boundaries; ``resume=True`` restores
-    from there and -- because all randomness is derived from (seed,
-    schedule position) -- continues **bitwise-identically** to a run that
-    never stopped (asserted in tests/test_checkpoint.py).  On resume the
-    checkpoint's seed overrides the argument.  ``max_shards`` stops after
-    that many shard visits (checkpointing first), which is how tests and
-    operators simulate preemption mid-epoch.
-
-    Returns ``(nwk, nk, history, info)``: the final PS handles, per-shard
-    history rows, and the executor's realised-schedule description.
+    Delegates to the unified session's stream plane
+    (``repro.api.session.stream_fit``), which reproduces this trainer's
+    pre-redesign behaviour bitwise: all randomness derives from (seed,
+    schedule position), checkpoints are taken at shard boundaries with
+    the same cursor discipline, and resume == never-stopped (asserted in
+    tests/test_checkpoint.py).  Returns ``(nwk, nk, history, info)``
+    exactly as before.
     """
-    from repro import ps
-    from repro.core import lightlda as lda
-    from repro.core import perplexity as ppl
-    from repro.data import stream as stream_mod
-    from repro.train import async_exec
-    from repro.train import checkpoint as ckpt
+    warnings.warn(
+        "train.loop.fit_lda_stream is deprecated: build a repro.api."
+        "LDAJob(stream_dir=...) and use APSLDA(job).fit() (or "
+        "repro.api.Session)",
+        DeprecationWarning, stacklevel=2)
+    from repro.api import session as api_session
 
-    if isinstance(reader, str):
-        reader = stream_mod.ShardedCorpusReader(reader)
-    meta = reader.meta
-    if exec_cfg.model_blocks == 0 and meta.tokens_per_shard % cfg.block_tokens:
-        raise ValueError(
-            f"tokens_per_shard={meta.tokens_per_shard} must be a multiple "
-            f"of block_tokens={cfg.block_tokens} for the snapshot executor")
-
-    ckpt_meta = {"vocab_size": cfg.V, "num_topics": cfg.K,
-                 "ps_shards": cfg.num_shards,
-                 "tokens_per_shard": meta.tokens_per_shard,
-                 "stream_shards": meta.num_shards}
-    client = ps.client_for(cfg)
-    if resume:
-        if not (checkpoint_path and os.path.exists(checkpoint_path)):
-            raise FileNotFoundError(
-                f"resume requested but no checkpoint at {checkpoint_path}")
-        saved = ckpt.restore_stream(checkpoint_path)
-        mismatch = {k: (saved.meta.get(k), v) for k, v in ckpt_meta.items()
-                    if saved.meta.get(k) != v}
-        if mismatch:
-            raise ValueError(f"checkpoint/config mismatch: {mismatch}")
-        seed = saved.seed
-        nwk = client.wrap_matrix(jnp.asarray(saved.nwk_phys), cfg.V)
-        nk = client.wrap_vector(jnp.asarray(saved.nk))
-        cursor = saved.cursor
-        log_fn(f"[stream] resumed at epoch {cursor.epoch} pos {cursor.pos} "
-               f"(seed {seed}) from {checkpoint_path}")
-    else:
-        nwk, nk = init_stream(reader, cfg, seed, client=client)
-        cursor = stream_mod.Cursor(0, 0)
-
-    step, build_index, info = async_exec.make_stream_executor(
-        cfg, exec_cfg, nwk.layout)
-    info = dict(info, stream_shards=meta.num_shards,
-                tokens_per_shard=meta.tokens_per_shard,
-                num_tokens=meta.num_tokens)
-    loader = stream_mod.StreamingLoader(reader, seed=seed,
-                                        prefetch=prefetch)
-    valid_np = np.arange(meta.tokens_per_shard)
-    history = []
-    shards_done = 0
-    t0 = time.time()
-    tokens_seen = 0
-
-    def _checkpoint(cur_next):
-        ckpt.save_stream(checkpoint_path, np.asarray(nwk.value),
-                         np.asarray(nk.value), cur_next, seed, ckpt_meta)
-
-    for cur, sid, shard in loader.iterate(cursor, epochs):
-        if shard.z is None:
-            raise FileNotFoundError(
-                f"shard {sid} has no z file; stream was never initialised")
-        w = jnp.asarray(shard.w)
-        d = jnp.asarray(shard.d)
-        z = jnp.asarray(shard.z)
-        valid = jnp.asarray(valid_np < shard.n_tokens)
-        ndk = jnp.zeros((meta.doc_cap, cfg.K), jnp.int32).at[d, z].add(
-            valid.astype(jnp.int32))
-        state = lda.SamplerState(w, d, z, valid,
-                                 jnp.asarray(shard.doc_start),
-                                 jnp.asarray(shard.doc_len), nwk, nk, ndk)
-        key = stream_sweep_key(seed, cur.epoch, cur.pos)
-        if build_index is not None:
-            idx, bval = build_index(shard.w, np.asarray(valid))
-            state = step(state, key, idx, bval)
-        else:
-            state = step(state, key)
-        reader.write_z(sid, np.asarray(state.z))
-        nwk, nk = state.nwk, state.nk
-        shards_done += 1
-        tokens_seen += shard.n_tokens
-        cur_next = cur.next(meta.num_shards)
-
-        if eval_every and shards_done % eval_every == 0:
-            p = float(ppl.training_perplexity(
-                state.w, state.d, state.valid, state.ndk,
-                state.nwk.to_dense(), state.nk.value, cfg.alpha, cfg.beta))
-            el = time.time() - t0
-            history.append({"epoch": cur.epoch, "pos": cur.pos,
-                            "shard": sid, "perplexity": p,
-                            "elapsed_s": el,
-                            "tokens_per_s": tokens_seen / el})
-            log_fn(f"[stream] epoch {cur.epoch} shard {cur.pos:3d} "
-                   f"(#{sid})  perplexity {p:9.2f}  "
-                   f"({tokens_seen / el:,.0f} tok/s)")
-        if (checkpoint_path and checkpoint_every
-                and shards_done % checkpoint_every == 0):
-            _checkpoint(cur_next)
-        if max_shards is not None and shards_done >= max_shards:
-            if checkpoint_path:
-                _checkpoint(cur_next)
-            log_fn(f"[stream] stopping after {shards_done} shards "
-                   f"(max_shards), cursor -> epoch {cur_next.epoch} "
-                   f"pos {cur_next.pos}")
-            return nwk, nk, history, info
-
-    if checkpoint_path:
-        _checkpoint(stream_mod.Cursor(epochs, 0))
-    if shards_done:
-        el = time.time() - t0
-        log_fn(f"[stream] done: {shards_done} shard visits, "
-               f"{tokens_seen} tokens in {el:.1f}s "
-               f"({tokens_seen / el:,.0f} tok/s)")
-    return nwk, nk, history, info
+    return api_session.stream_fit(
+        reader, cfg, exec_cfg, epochs, seed=seed,
+        checkpoint_path=checkpoint_path, checkpoint_every=checkpoint_every,
+        resume=resume, max_shards=max_shards, eval_every=eval_every,
+        prefetch=prefetch, log_fn=log_fn)
 
 
 def fit(state: TrainState, batches, cfg: ModelConfig, tc: TrainConfig,

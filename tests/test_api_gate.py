@@ -1,20 +1,27 @@
-"""Deprecation gate: the PS client API is the only parameter gateway.
+"""Deprecation gates: sanctioned layer boundaries, enforced.
 
-``repro/ps`` (DESIGN.md section 8) is the sanctioned way to obtain
-``DistributedMatrix`` / ``DistributedVector`` storage; direct construction
-anywhere else under ``src/repro`` is deprecated and fails this test (and
-the matching grep step in CI).  Allowed:
+1. The PS client API (``repro/ps``, DESIGN.md section 8) is the only
+   parameter gateway: direct ``DistributedMatrix`` / ``DistributedVector``
+   construction anywhere else under ``src/repro`` fails this test (and
+   the matching grep step in CI).  Allowed:
 
-  * ``src/repro/core/pserver.py`` -- the storage layer itself;
-  * ``src/repro/ps/``             -- the client layer wrapping it.
+     * ``src/repro/core/pserver.py`` -- the storage layer itself;
+     * ``src/repro/ps/``             -- the client layer wrapping it.
 
-Tests and benchmarks may still touch storage directly where they *test
-the storage layer*; application code may not.
+2. The estimator API (``repro/api``, DESIGN.md section 10) is the only
+   orchestration surface: ``examples/``, ``benchmarks/`` and
+   ``src/repro/launch/`` may not call the deprecated trainer entry points
+   (``fit_lda`` / ``fit_lda_stream``) or drive the raw executor
+   (``pipelined_sweep``) directly -- they build ``LDAJob``s instead.
+
+Tests may still touch the lower layers where they *test those layers*;
+application code may not.
 """
 import pathlib
 import re
 
-SRC = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro"
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+SRC = ROOT / "src" / "repro"
 
 ALLOWED = {
     SRC / "core" / "pserver.py",
@@ -44,3 +51,26 @@ def test_no_direct_storage_construction_outside_ps():
         "direct DistributedMatrix/DistributedVector construction outside "
         "repro/ps (use PSClient factories / MatrixHandle instead):\n"
         + "\n".join(offenders))
+
+
+# --- gate 2: repro.api is the only orchestration surface -------------------
+
+TRAINER_PATTERN = re.compile(
+    r"\b(?:fit_lda(?:_stream)?|pipelined_sweep)\s*\(")
+
+GATED_DIRS = (ROOT / "examples", ROOT / "benchmarks", SRC / "launch")
+
+
+def test_orchestration_only_via_api():
+    offenders = []
+    for base in GATED_DIRS:
+        for path in sorted(base.rglob("*.py")):
+            for lineno, line in enumerate(
+                    path.read_text().splitlines(), start=1):
+                if TRAINER_PATTERN.search(line):
+                    offenders.append(f"{path.relative_to(ROOT)}:{lineno}: "
+                                     f"{line.strip()}")
+    assert not offenders, (
+        "examples/, benchmarks/ and launch/ must orchestrate training "
+        "through repro.api (LDAJob + APSLDA/Session), not the deprecated "
+        "fit_lda*/pipelined_sweep entry points:\n" + "\n".join(offenders))

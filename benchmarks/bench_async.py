@@ -20,12 +20,12 @@ from __future__ import annotations
 
 import json
 import os
-import time
 
 import jax
 
 from repro import api
 from repro.data import corpus as corpus_mod
+from repro.obs import time_loop
 from repro.train import async_exec
 
 OUT = "experiments/bench/BENCH_async.json"
@@ -46,18 +46,16 @@ def _setup(num_docs, vocab, k, shards, seed=0):
 
 def _tokens_per_s(state, cfg, exec_cfg, num_tokens, iters, repeats=2):
     """Best-of-``repeats`` throughput of ``iters`` jitted sweeps of the
-    executor under ``exec_cfg`` (the layer the api session drives)."""
+    executor under ``exec_cfg`` (the layer the api session drives).
+
+    ``time_loop``'s global index matches the old hand-rolled key
+    schedule exactly (warmup key 1, repeat r iter i key 2 + r*iters + i).
+    """
     step, info = async_exec.make_executor(state, cfg, exec_cfg)
-    st = step(state, jax.random.PRNGKey(1))
-    jax.block_until_ready(st.z)                     # compile + warm
-    best = 0.0
-    for r in range(repeats):
-        t0 = time.time()
-        for i in range(iters):
-            st = step(st, jax.random.PRNGKey(2 + r * iters + i))
-        jax.block_until_ready(st.z)
-        best = max(best, num_tokens * iters / (time.time() - t0))
-    return best, info
+    _, tm = time_loop(
+        lambda st, g: step(st, jax.random.PRNGKey(1 + g)), state, iters,
+        repeats=repeats, sync=lambda st: st.z, label="async_sweep")
+    return tm.best_rate(num_tokens), info
 
 
 def main(fast: bool = False):

@@ -13,7 +13,6 @@ from __future__ import annotations
 
 import json
 import os
-import time
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +22,7 @@ from repro import api
 from repro.data import corpus as corpus_mod
 from repro.infer.engine import EngineConfig, QueryEngine
 from repro.infer.foldin import FoldInConfig, fold_in_batch, pack_docs
+from repro.obs import time_loop
 
 OUT = "experiments/bench/BENCH_infer.json"
 
@@ -33,10 +33,10 @@ def _trained_snapshot(num_docs, vocab, k, sweeps, seed=0):
     job = api.LDAJob(corpus=corp, num_topics=k, block_tokens=4096,
                      sweeps=sweeps, eval_every=0, seed=seed)
     model = api.APSLDA(job, log_fn=lambda *a, **kw: None).fit()
-    t0 = time.time()
-    pub = model.publisher()            # the once-per-version alias build
-    publish_s = time.time() - t0
-    return model.cfg, pub, pub.acquire(), publish_s
+    # the once-per-version alias build
+    pub, tm = time_loop(lambda c, i: model.publisher(), None, 1,
+                        warmup=False, label="snapshot_publish")
+    return model.cfg, pub, pub.acquire(), tm.best_s
 
 
 def _foldin_docs_per_s(snap, cfg, fcfg, docs, batch, length, iters=3):
@@ -56,11 +56,9 @@ def _foldin_docs_per_s(snap, cfg, fcfg, docs, batch, length, iters=3):
                                       valid[i:i + batch], keys, cfg, fcfg))
         return jax.block_until_ready(outs)
 
-    run_all()                              # compile
-    t0 = time.time()
-    for _ in range(iters):
-        run_all()
-    return len(docs) / ((time.time() - t0) / iters)
+    _, tm = time_loop(lambda c, i: run_all(), None, iters,
+                      label=f"foldin_b{batch}")
+    return tm.best_rate(len(docs))
 
 
 def main(fast: bool = False):
@@ -95,9 +93,9 @@ def main(fast: bool = False):
     eng.flush()
     for d in mixed:
         eng.submit(d)
-    t0 = time.time()
-    results = eng.flush()
-    flush_s = time.time() - t0
+    results, tm = time_loop(lambda c, i: eng.flush(), None, 1,
+                            warmup=False, label="engine_flush")
+    flush_s = tm.best_s
     print(f"infer,engine_flush,{len(results)}_reqs,"
           f"{flush_s/len(results)*1e3:.2f},ms_per_req")
 

@@ -5,20 +5,20 @@ under each ``PushRoute`` (paper section 3.3: the hot/cold boundary is a
 traffic-shape knob, never a semantic one) and measures pushes/sec and
 reassignments/sec.  Verifies first that every route lands on the bitwise-
 identical matrix -- the invariance the whole route design rests on -- then
-times the jitted push path per route.  Writes
-``experiments/bench/BENCH_ps.json``.
+times the jitted push path per route (``repro.obs.time_loop``, the shared
+benchmark methodology).  Writes ``experiments/bench/BENCH_ps.json``.
 """
 from __future__ import annotations
 
 import json
 import os
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import ps
+from repro.obs import time_loop
 
 OUT = "experiments/bench/BENCH_ps.json"
 
@@ -64,19 +64,14 @@ def main(fast: bool = False):
     for name, route in routes.items():
         h = base.with_route(route)
         step = jax.jit(lambda hh, rr: hh.push(rr))
-        h2 = step(h, re)
-        jax.block_until_ready(h2.value)          # compile + warm
-        t0 = time.time()
-        for _ in range(iters):
-            h2 = step(h2, re)
-        jax.block_until_ready(h2.value)
-        dt = time.time() - t0
+        _, tm = time_loop(lambda hh, i: step(hh, re), h, iters,
+                          sync=lambda hh: hh.value, label=f"ps_push_{name}")
         results[name] = {
-            "pushes_per_s": iters / dt,
-            "reassign_per_s": iters * batch / dt,
+            "pushes_per_s": tm.best_rate(),
+            "reassign_per_s": tm.best_rate(batch),
         }
-        print(f"ps,route_{name},{iters / dt:.1f},pushes_per_s,"
-              f"{iters * batch / dt:,.0f},reassign_per_s")
+        print(f"ps,route_{name},{tm.best_rate():.1f},pushes_per_s,"
+              f"{tm.best_rate(batch):,.0f},reassign_per_s")
 
     os.makedirs(os.path.dirname(OUT), exist_ok=True)
     with open(OUT, "w") as f:

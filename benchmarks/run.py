@@ -14,6 +14,9 @@
                MatrixHandle.push (emits BENCH_ps.json)
   stream       out-of-core loader: tokens/sec + peak RSS streaming a
                corpus >= 4x the loader budget (emits BENCH_stream.json)
+  obs          telemetry plane: disabled-mode overhead bar (<1%) + a
+               fully traced train/push/serve demo summarised by
+               obs_report (emits BENCH_obs.json)
 
 ``python -m benchmarks.run`` runs everything at reduced ("fast") sizes and
 prints CSV-ish lines; ``--full`` uses the paper-ladder sizes; ``--only X``
@@ -28,7 +31,7 @@ import traceback
 
 from benchmarks import (bench_async, bench_comm, bench_convergence,
                         bench_infer, bench_kernels, bench_loadbalance,
-                        bench_ps, bench_roofline, bench_stream,
+                        bench_obs, bench_ps, bench_roofline, bench_stream,
                         bench_table1)
 
 MODULES = {
@@ -42,6 +45,7 @@ MODULES = {
     "async": bench_async.main,
     "ps": bench_ps.main,
     "stream": bench_stream.main,
+    "obs": bench_obs.main,
 }
 
 

@@ -3,7 +3,14 @@ one declarative job from corpus to served model, in ~5 lines of user
 code: corpus -> fit -> transform -> publish -> score.
 
   PYTHONPATH=src python examples/quickstart.py
+
+Set ``REPRO_OBS_DIR=somedir`` to trace the run: the fit writes a
+Perfetto-loadable ``trace.json`` + ``metrics.jsonl`` there (summarise
+with ``python -m repro.launch.obs_report somedir``).  Tracing never
+changes results -- the model is bitwise identical either way.
 """
+import os
+
 import numpy as np
 
 from repro import api
@@ -11,6 +18,9 @@ from repro.data import corpus as corpus_mod
 
 
 def main():
+    obs_dir = os.environ.get("REPRO_OBS_DIR", "")
+    obs_cfg = (api.ObsConfig(enabled=True, out_dir=obs_dir) if obs_dir
+               else api.ObsConfig())
     # 1. A Zipfian corpus with frequency-ordered vocabulary (paper fig. 4 /
     #    section 3.2) -- the stand-in for ClueWeb12 at laptop scale.  The
     #    held-out docs never enter training; they are folded in below.
@@ -25,7 +35,7 @@ def main():
     job = api.LDAJob(corpus=train_corp, num_topics=20, num_shards=4,
                      block_tokens=8192, mh_steps=2,
                      route=api.HybridRoute(hot_words=100),
-                     sweeps=60, eval_every=15, seed=0)
+                     sweeps=60, eval_every=15, seed=0, obs=obs_cfg)
 
     # 3. Fit.  The estimator drives the asynchronous executor through the
     #    PS client and returns a frozen TopicModel.
@@ -59,6 +69,10 @@ def main():
         best = np.argsort(-scores[qi])[:3]
         print(f"  query {q.tolist()}: best docs "
               + ", ".join(f"{d} ({scores[qi, d]:.1f})" for d in best))
+
+    if obs_dir:
+        print(f"\ntraced: {obs_cfg.trace_path} (load in Perfetto); "
+              f"summary: python -m repro.launch.obs_report {obs_dir}")
 
 
 if __name__ == "__main__":

@@ -18,12 +18,16 @@ examples and benchmarks build jobs instead of hand-wiring executors
     pub   = model.publisher()                          # -> TopicService
 """
 from repro.api.callbacks import (Callback, CheckpointCallback, EvalCallback,
-                                 LogCallback, SweepView)
+                                 LogCallback, SweepView, TraceCallback)
 from repro.api.estimator import APSLDA
 from repro.api.job import (CheckpointPolicy, JobValidationError, LDAJob,
                            IN_PROCESS, SPMD)
 from repro.api.model import TopicModel
 from repro.api.session import Session, SessionResult
+
+# telemetry-plane config re-exported so jobs can opt in without a
+# second import (repro.obs is the full surface)
+from repro.obs import ObsConfig
 
 # push-route policies re-exported for one-stop job construction
 from repro.ps import CooRoute, DenseRoute, HybridRoute, PushRoute
@@ -32,6 +36,6 @@ __all__ = [
     "APSLDA", "LDAJob", "TopicModel", "Session", "SessionResult",
     "CheckpointPolicy", "JobValidationError", "IN_PROCESS", "SPMD",
     "Callback", "CheckpointCallback", "EvalCallback", "LogCallback",
-    "SweepView",
+    "SweepView", "TraceCallback", "ObsConfig",
     "CooRoute", "DenseRoute", "HybridRoute", "PushRoute",
 ]

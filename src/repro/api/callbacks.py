@@ -18,7 +18,10 @@ Built-ins:
   * ``CheckpointCallback``  persists the run every N visits and at the end
                             (subsumes the old ``--checkpoint-every``);
   * ``LogCallback``         structured JSONL event log (one object per
-                            line: fit_start / sweep / fit_end).
+                            line: fit_start / sweep / fit_end);
+  * ``TraceCallback``       attaches the ``repro.obs`` telemetry plane to
+                            one fit (trace spans per visit + saved
+                            Chrome-trace/metrics files).
 """
 from __future__ import annotations
 
@@ -27,6 +30,8 @@ import time
 from typing import IO, Optional, Union
 
 import numpy as np
+
+from repro import obs as _obs
 
 
 class SweepView:
@@ -224,6 +229,11 @@ class LogCallback(Callback):
     ``sink`` is a path (appended to) or an open file-like object.  Events:
     ``fit_start`` (the executor's realised schedule), ``sweep`` (one per
     visit: step/epoch/pos/shard/elapsed/tokens), ``fit_end``.
+
+    Every line carries both clocks -- ``t_wall`` (``time.time``, for
+    correlating with external systems) and ``t_mono``
+    (``time.monotonic``, for robust intervals) -- and is flushed as it is
+    written, so a killed run keeps a complete log up to its last event.
     """
 
     def __init__(self, sink: Union[str, IO], every: int = 1):
@@ -233,12 +243,15 @@ class LogCallback(Callback):
         self._steps = 0
 
     def _emit(self, obj: dict) -> None:
-        line = json.dumps(obj, sort_keys=True)
+        line = json.dumps(dict(obj, t_wall=time.time(),
+                               t_mono=time.monotonic()), sort_keys=True)
         if self._path is not None:
+            # open/append/close per event: durable even on SIGKILL
             with open(self._path, "a") as f:
                 f.write(line + "\n")
         else:
             self._file.write(line + "\n")
+            self._file.flush()
 
     def on_fit_start(self, info: dict) -> None:
         self._emit({"event": "fit_start",
@@ -257,3 +270,63 @@ class LogCallback(Callback):
 
     def on_fit_end(self, view: Optional[SweepView]) -> None:
         self._emit({"event": "fit_end", "steps": self._steps})
+
+
+class TraceCallback(Callback):
+    """Attach the ``repro.obs`` telemetry plane to one fit.
+
+    Two modes:
+
+      * ``TraceCallback(ObsConfig(enabled=True, out_dir=...))`` -- the
+        callback *owns* an obs session: installed at ``on_fit_start``,
+        saved (trace.json + metrics.jsonl under ``out_dir``) and closed
+        at ``on_fit_end``.  This is the hook for runs driven through the
+        shim entry points or hand-built planes, where no ``LDAJob.obs``
+        exists to do the wiring.
+      * ``TraceCallback()`` -- adopt whatever session is already
+        installed (e.g. by ``Session.run`` honouring ``LDAJob.obs``) and
+        only contribute the per-visit spans.
+
+    Either way the callback is an observer like every other: it reads
+    clocks and the view, and never touches the state or the PRNG chain,
+    so the trained model is bitwise identical with or without it.
+    Per visit it records a ``session.visit`` span (host wall time from
+    the previous visit boundary) and a ``tokens_seen`` counter series.
+    """
+
+    def __init__(self, obs_cfg: Optional["_obs.ObsConfig"] = None):
+        self.obs_cfg = obs_cfg
+        self._session: Optional["_obs.ObsSession"] = None
+        self._last_ns: Optional[int] = None
+
+    def on_fit_start(self, info: dict) -> None:
+        if (self.obs_cfg is not None and self.obs_cfg.enabled
+                and _obs.active() is None):
+            self._session = _obs.ObsSession(self.obs_cfg).install()
+        tr = _obs.tracer()
+        if tr is not None:
+            tr.instant("fit.start", cat="session",
+                       **{k: v for k, v in info.items()
+                          if isinstance(v, (int, float, str, bool,
+                                            type(None)))})
+        self._last_ns = time.perf_counter_ns()
+
+    def on_sweep_end(self, view: SweepView) -> None:
+        tr = _obs.tracer()
+        if tr is None:
+            return
+        now = time.perf_counter_ns()
+        if self._last_ns is not None:
+            tr.complete("session.visit", self._last_ns, now, cat="session",
+                        step=view.step, epoch=view.epoch,
+                        shard=view.shard_id)
+        tr.counter("tokens_seen", tokens=view.tokens_seen)
+        self._last_ns = now
+
+    def on_fit_end(self, view: Optional[SweepView]) -> None:
+        tr = _obs.tracer()
+        if tr is not None:
+            tr.instant("fit.end", cat="session")
+        if self._session is not None:
+            self._session.close(save=True)
+            self._session = None

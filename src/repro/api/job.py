@@ -27,6 +27,7 @@ from typing import Any, Optional, Sequence
 
 from repro import ps
 from repro.core import lightlda as lda
+from repro.obs import ObsConfig
 from repro.train.async_exec import ExecConfig
 
 IN_PROCESS = "in_process"
@@ -129,6 +130,11 @@ class LDAJob:
     checkpoint: CheckpointPolicy = CheckpointPolicy()
     eval_every: int = 10                  # 0: never evaluate
     seed: int = 0
+    # telemetry plane (repro.obs): with enabled=True, Session.run installs
+    # an obs session for the fit and writes trace.json/metrics.jsonl
+    # under obs.out_dir.  Observation only -- the trained model is
+    # bitwise identical with tracing on or off (tests/test_obs.py).
+    obs: ObsConfig = ObsConfig()
 
     # ------------------------------------------------------------------
     # Source classification
@@ -233,6 +239,17 @@ class LDAJob:
         if self.eval_every < 0:
             out.append(f"eval_every must be >= 0 (got {self.eval_every}; "
                        "0 disables evaluation)")
+        if not isinstance(self.obs, ObsConfig):
+            out.append("obs must be a repro.obs.ObsConfig (got "
+                       f"{type(self.obs).__name__})")
+        elif self.obs.enabled:
+            if not (self.obs.trace or self.obs.metrics):
+                out.append("obs.enabled=True with both trace and metrics "
+                           "off records nothing; enable at least one or "
+                           "drop obs=")
+            if not self.obs.out_dir:
+                out.append("obs.out_dir is required when obs.enabled=True "
+                           "(trace/metrics files are written there)")
         out.extend(self.checkpoint.problems())
         return out
 
@@ -261,7 +278,11 @@ class LDAJob:
                              kernel_interpret=self.kernel_interpret)
 
     def exec_config(self) -> ExecConfig:
+        # obs rides along only when explicitly enabled; the disabled
+        # default maps to None (= inherit any installed session) so a
+        # TraceCallback-owned session still sees the executor's spans
         return ExecConfig(staleness=self.staleness,
                           hot_words=self.hot_words,
                           model_blocks=self.model_blocks,
-                          route=self.route)
+                          route=self.route,
+                          obs=self.obs if self.obs.enabled else None)

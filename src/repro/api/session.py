@@ -40,6 +40,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs as _obs
 from repro import ps
 from repro.api.callbacks import (Callback, CheckpointCallback, EvalCallback,
                                  SweepView)
@@ -203,17 +204,26 @@ def init_distributed_state(corp, cfg: "lda.LDAConfig", workers: int,
 # ---------------------------------------------------------------------------
 
 def _run_loop(plane, callbacks: Sequence[Callback]) -> SessionResult:
-    plane.setup()
+    # The obs spans here cover the host side of each visit -- dispatching
+    # the executor step (``session.step``) and running the observers
+    # (``session.callbacks``).  Spans read clocks only; with no obs
+    # session installed each is a no-op object (NULL_SPAN), so the loop
+    # body is unchanged for untraced runs.
+    with _obs.span("session.setup", cat="session", kind=plane.kind):
+        plane.setup()
     info = dict(plane.info)
     for cb in callbacks:
         cb.on_fit_start(info)
     view = None
     stopped = False
     for visit in plane.schedule():
-        plane.step(visit)
+        with _obs.span("session.step", cat="session"):
+            plane.step(visit)
         view = plane.view(visit)
-        for cb in callbacks:
-            cb.on_sweep_end(view)
+        with _obs.span("session.callbacks", cat="session",
+                       n=len(callbacks)):
+            for cb in callbacks:
+                cb.on_sweep_end(view)
         if plane.should_stop():
             stopped = True
             break
@@ -984,7 +994,10 @@ class Session:
         if self.job.checkpoint.path:
             cbs.append(CheckpointCallback(self.job.checkpoint.path,
                                           every=self.job.checkpoint.every))
-        res = _run_loop(plane, cbs)
+        # job.obs enabled: install the telemetry session for the fit and
+        # save trace/metrics under obs.out_dir on exit (no-op otherwise)
+        with _obs.session(self.job.obs if self.job.obs.enabled else None):
+            res = _run_loop(plane, cbs)
         # cfg may have been refined during setup (SPMD shard count)
         self.cfg = plane.cfg
         return res._replace(history=ev.history if ev is not None else [])

@@ -37,10 +37,15 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import time as _time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+# stdlib-only telemetry (repro.obs never imports jax/numpy at module
+# scope), so the numpy-only constraint above holds
+from repro import obs as _obs
 
 MANIFEST = "stream.json"
 WORD_FREQ = "word_freq.npy"
@@ -452,8 +457,11 @@ class StreamingLoader:
 
     def _load(self, sid: int) -> StreamShard:
         # materialised (mmap=False): the double buffer owns real RAM, and
-        # the consumer gets plain arrays it can hand straight to a device
-        return self.reader.shard(sid, mmap=False, load_z=self.load_z)
+        # the consumer gets plain arrays it can hand straight to a device.
+        # The span lands on the loader thread's own trace track, so disk
+        # reads visibly overlap the consumer's sweeps in the timeline.
+        with _obs.span("stream.load", cat="stream", shard=sid):
+            return self.reader.shard(sid, mmap=False, load_z=self.load_z)
 
     def iterate(self, start: Cursor = Cursor(), end_epoch: int = 1
                 ) -> Iterator[Tuple[Cursor, int, StreamShard]]:
@@ -469,7 +477,33 @@ class StreamingLoader:
         with ThreadPoolExecutor(max_workers=1) as ex:
             fut = ex.submit(self._load, seq[0][1])
             for j, (cur, sid) in enumerate(seq):
-                shard = fut.result() if fut is not None else self._load(sid)
+                reg = _obs.metrics_registry()
+                tr = _obs.tracer()
+                if fut is not None:
+                    # hit: the prefetched shard was ready before the
+                    # consumer asked; miss: the consumer stalls on disk
+                    if reg is not None:
+                        reg.counter("stream.prefetch_hit" if fut.done()
+                                    else "stream.prefetch_miss").inc()
+                    if reg is None and tr is None:
+                        shard = fut.result()
+                    else:
+                        t0 = _time.perf_counter_ns()
+                        shard = fut.result()
+                        t1 = _time.perf_counter_ns()
+                        if tr is not None:
+                            tr.complete("stream.shard_wait", t0, t1,
+                                        cat="stream", shard=sid)
+                        if reg is not None:
+                            reg.histogram("stream.shard_wait_ms").record(
+                                (t1 - t0) / 1e6)
+                else:
+                    # prefetch was skipped (next shard == current: its z
+                    # file was still being rewritten) -- a forced
+                    # synchronous load, always a stall
+                    if reg is not None:
+                        reg.counter("stream.prefetch_skip").inc()
+                    shard = self._load(sid)
                 fut = None
                 if j + 1 < len(seq) and seq[j + 1][1] != sid:
                     fut = ex.submit(self._load, seq[j + 1][1])

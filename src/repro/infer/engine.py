@@ -21,6 +21,7 @@ model; documents are ranked by Σ_{w∈q} log p(w|d).
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
 from typing import Dict, List, NamedTuple, Optional, Sequence, Union
 
@@ -28,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as _obs
 from repro.infer.foldin import FoldInConfig, fold_in_batch, pack_docs
 from repro.infer.snapshot import Snapshot, SnapshotPublisher
 
@@ -72,6 +74,10 @@ class QueryEngine:
         # so scoring can use the same model version that produced a θ even
         # if training has published a newer one in between
         self._recent: Dict[int, Snapshot] = {}
+        # request-id -> submit time (perf_counter_ns), the start of the
+        # per-request latency window the obs plane reports p50/p95/p99
+        # over; entries are dropped as requests are served
+        self._t_submit: Dict[int, int] = {}
 
     # -- snapshot plumbing ----------------------------------------------
     def snapshot(self) -> Snapshot:
@@ -109,6 +115,10 @@ class QueryEngine:
         self._next_rid += 1
         self._queue.append(Request(
             rid, np.asarray(tokens, np.int32), rid if seed is None else seed))
+        reg = _obs.metrics_for(self.ecfg.foldin.obs)
+        if reg is not None:
+            self._t_submit[rid] = time.perf_counter_ns()
+            reg.gauge("serve.queue_depth").set(len(self._queue))
         return rid
 
     @property
@@ -129,15 +139,40 @@ class QueryEngine:
             buckets.setdefault(
                 self.bucket_of(max(len(req.tokens), 1)), []).append(req)
 
+        reg = _obs.metrics_for(self.ecfg.foldin.obs)
+        tr = _obs.tracer_for(self.ecfg.foldin.obs)
+        flush_sp = (tr.span("engine.flush", cat="serve",
+                            requests=len(queue), version=snap.version)
+                    if tr is not None else _obs.NULL_SPAN)
         out: Dict[int, Result] = {}
         mb = self.ecfg.max_batch
         for bucket in sorted(buckets):
             reqs = buckets[bucket]
             for i in range(0, len(reqs), mb):
                 chunk = reqs[i:i + mb]
-                theta = self._run_batch(snap, chunk, bucket)
+                batch_sp = (tr.span("engine.batch", cat="serve",
+                                    bucket=bucket, occupancy=len(chunk),
+                                    max_batch=mb)
+                            if tr is not None else _obs.NULL_SPAN)
+                # _run_batch ends on np.asarray: the batch is host-synced
+                # by the time the span closes
+                with batch_sp:
+                    theta = self._run_batch(snap, chunk, bucket)
+                t_done = time.perf_counter_ns()
                 for j, req in enumerate(chunk):
                     out[req.rid] = Result(req.rid, theta[j], snap.version)
+                if reg is not None:
+                    reg.histogram("serve.batch_occupancy", unit="reqs") \
+                        .record(len(chunk))
+                    for req in chunk:
+                        t0 = self._t_submit.pop(req.rid, None)
+                        if t0 is not None:
+                            reg.histogram("serve.request_ms").record(
+                                (t_done - t0) / 1e6)
+        if reg is not None:
+            reg.gauge("serve.queue_depth").set(len(self._queue))
+            reg.gauge("serve.snapshot_version").set(snap.version)
+        flush_sp.end()
         return out
 
     def _run_batch(self, snap: Snapshot, chunk: List[Request],

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import lightlda as lda
+from repro.obs import ObsConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,12 +44,18 @@ class FoldInConfig:
     ``num_sweeps`` full passes over each document's tokens; θ is estimated
     from the average n_dk of the post-``burnin`` sweeps (a Rao-Blackwellised
     point estimate, lower variance than the last sample alone).
+
+    ``obs`` is the serving-side telemetry tri-state (None: inherit the
+    installed session; ``ObsConfig(enabled=False)``: suppress the
+    engine's spans/metrics locally).  ``ObsConfig`` is frozen and
+    hashable, so this config remains a valid jit static argname.
     """
 
     num_sweeps: int = 30
     burnin: int = 10
     use_kernels: bool = False     # Pallas inference kernel (frozen=True)
     kernel_interpret: Optional[bool] = None  # None: ops.default_interpret
+    obs: Optional[ObsConfig] = None
 
     def __post_init__(self):
         assert 0 <= self.burnin < self.num_sweeps, (self.burnin,

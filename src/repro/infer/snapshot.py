@@ -30,6 +30,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import obs as _obs
 from repro import ps
 from repro.core import lightlda as lda
 from repro.core import perplexity as ppl
@@ -89,23 +90,44 @@ class SnapshotPublisher:
 
     # -- training side ---------------------------------------------------
     def publish(self, nwk_dense: jax.Array, nk: jax.Array) -> Snapshot:
-        """Build and atomically publish the next version from dense counts."""
+        """Build and atomically publish the next version from dense counts.
+
+        Obs spans break the publication cost into its phases --
+        ``snapshot.build`` (φ + alias tables + p(w|C) dispatch),
+        ``snapshot.sync`` (awaiting the device work; this block was always
+        here, the span just names it) and ``snapshot.swap`` (the reference
+        flip) -- the breakdown of the ~seconds-scale publish cost the
+        ISSUE calls out.  Purely observational: published values are
+        identical with tracing on or off.
+        """
         with self._publish_lock:
             target = 1 - self._active if self._active >= 0 else 0
             version = self._version + 1
-            snap = build_snapshot(jnp.asarray(nwk_dense), jnp.asarray(nk),
-                                  self.cfg, version)
-            jax.block_until_ready(snap.model.aprob)  # fully built pre-flip
-            self._slots[target] = snap
-            self._version = version
-            self._active = target        # the flip: one reference store
+            with _obs.span("snapshot.build", cat="snapshot",
+                           version=version):
+                snap = build_snapshot(jnp.asarray(nwk_dense),
+                                      jnp.asarray(nk), self.cfg, version)
+            with _obs.span("snapshot.sync", cat="snapshot",
+                           version=version):
+                jax.block_until_ready(snap.model.aprob)  # built pre-flip
+            with _obs.span("snapshot.swap", cat="snapshot",
+                           version=version):
+                self._slots[target] = snap
+                self._version = version
+                self._active = target    # the flip: one reference store
+        reg = _obs.metrics_registry()
+        if reg is not None:
+            reg.gauge("snapshot.version").set(version)
         return snap
 
     def publish_view(self, view: "ps.ReadOnlyView",
                      nk: "ps.VectorHandle") -> Snapshot:
         """Publish from a read-only snapshot view of the training handles
         (the sanctioned serving-side read: pull, never push)."""
-        return self.publish(view.to_dense(), nk.pull_all().result())
+        with _obs.span("snapshot.pull", cat="snapshot") as sp:
+            dense = sp.sync_on(view.to_dense())
+            nk_val = nk.pull_all().result()
+        return self.publish(dense, nk_val)
 
     def publish_state(self, state: lda.SamplerState) -> Snapshot:
         """Publish straight from a training ``SamplerState``."""

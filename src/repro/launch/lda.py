@@ -57,6 +57,8 @@ def job_from_args(args) -> "api.LDAJob":
                   model_blocks=args.model_blocks, seed=args.seed,
                   eval_every=args.eval_every, sweeps=args.sweeps,
                   epochs=args.epochs)
+    if args.trace_dir:
+        common.update(obs=api.ObsConfig(enabled=True, out_dir=args.trace_dir))
     if args.devices:
         if args.model_blocks:
             print("[lda] note: --model-blocks is in-process only (the SPMD "
@@ -164,6 +166,11 @@ def main():
                          "pushed as (row, col, +/-1) coordinate deltas "
                          "(default: all words dense)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-dir", default="",
+                    help="enable the telemetry plane (repro.obs): write a "
+                         "Perfetto-loadable trace.json + metrics.jsonl "
+                         "under this directory; inspect with "
+                         "python -m repro.launch.obs_report <dir>")
     ap.add_argument("--out", default="experiments/lda")
     ap.add_argument("--checkpoint", default="")
     ap.add_argument("--stream-dir", default="",
@@ -195,6 +202,10 @@ def main():
         ap.error(str(e))
         return
 
+    if args.trace_dir:
+        print(f"[lda] trace written to {job.obs.trace_path} (load in "
+              f"Perfetto); summarise with: python -m "
+              f"repro.launch.obs_report {args.trace_dir}")
     if args.stream_dir and not args.devices:
         print(f"[lda] stream training done ({result.info['mode']} "
               f"executor); checkpoint at {job.checkpoint.path}")

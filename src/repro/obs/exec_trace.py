@@ -1,0 +1,157 @@
+"""Eager traced replay of the blocked executor's group schedule.
+
+The production blocked sweep (``train.async_exec.pipelined_sweep``) runs
+its group loop inside one ``lax.scan``: XLA overlaps the double-buffered
+pull with sampling, but from the host there is exactly one opaque span --
+no per-phase timeline can be recorded from inside a jitted trace (host
+clocks are unavailable there; ``trace._host_time_ok``).
+
+This module replays the *same* schedule as an eager Python loop so every
+phase becomes a real host-timed span:
+
+  * ``pull.inflight``   -- the next group's ``pull_block`` window, from
+                           issue to the await at the top of the next
+                           iteration, drawn on a synthetic ``[pull]``
+                           lane so its overlap with sampling is visible;
+  * ``alias.build``     -- alias tables for the group's rows;
+  * ``sample``          -- the fused Metropolis-Hastings chain;
+  * ``merge.store``     -- routed delta materialisation + group-boundary
+                           write-back (n_wk / n_k / n_dk / z).
+
+Opening the resulting trace in Perfetto shows ``pull.inflight`` running
+concurrently with ``alias.build``/``sample`` -- the paper's
+issue -> overlap -> await shape (section 3.4) made visible.
+
+Numerics: each phase is the same computation as the scan body, executed
+eagerly, so the replayed state matches ``pipelined_sweep``'s output for
+the same inputs (asserted in tests/test_obs.py).  This is a diagnostic
+tool, not a training path -- per-op dispatch makes it slower than the
+fused executor by construction.
+
+Deliberately NOT re-exported from ``repro.obs``: the obs core must stay
+importable without jax (data/stream.py depends on that); this module
+imports jax at module level.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import ps
+from repro.core import alias as alias_mod
+from repro.core import lightlda as lda
+from repro.obs import runtime as _rt
+from repro.obs.trace import _block
+
+
+def traced_pipelined_sweep(state: "lda.SamplerState", key: jax.Array,
+                           cfg: "lda.LDAConfig",
+                           model_blocks: int, staleness: int = 0,
+                           route: Optional[ps.PushRoute] = None
+                           ) -> "lda.SamplerState":
+    """One blocked sweep replayed eagerly with per-phase spans.
+
+    Mirrors ``make_executor``'s blocked mode (token index built at
+    merge-unit granularity) and ``pipelined_sweep``'s group body, but as
+    a host loop: every group emits ``pull.inflight`` / ``alias.build`` /
+    ``sample`` / ``merge.store`` spans into the installed obs session
+    (no session: runs silently).  Returns the swept state.
+    """
+    from repro.train.async_exec import blocked_geometry
+
+    tr = _rt.tracer()
+    reg = _rt.metrics_registry()
+    layout = state.nwk.layout
+    rpb, n_blocks, s = blocked_geometry(layout, model_blocks, staleness)
+    grp_rows = rpb * (s + 1)
+    n_groups = layout.pad_rows // grp_rows
+    if route is None:
+        route = ps.route_for(None, cfg.V)
+
+    idx_np, bval_np = lda.block_token_index(
+        np.asarray(state.w), np.asarray(state.valid), grp_rows, layout)
+    gidx = jnp.asarray(idx_np)
+    gval = jnp.asarray(bval_np)
+    keys = jax.random.split(key, n_groups)
+
+    nwk, nk, ndk, z_flat = state.nwk, state.nk.value, state.ndk, state.z
+
+    def lane(name):
+        return tr.lane(name) if tr is not None else 0
+
+    def phase(name, **args):
+        return (tr.span(name, cat="exec", **args) if tr is not None
+                else _rt.NULL_SPAN)
+
+    # issue group 0's pull before the loop, as the scan carry does
+    t_issue = time.perf_counter_ns()
+    pulled = nwk.pull_block(0, grp_rows)
+
+    for grp in range(n_groups):
+        # 1. await this group's prefetched rows; the pull has been in
+        # flight since the previous iteration issued it
+        rows = pulled.result()
+        _block(rows)
+        if tr is not None:
+            tr.complete("pull.inflight", t_issue, time.perf_counter_ns(),
+                        cat="pull", tid=lane("pull"), group=grp)
+        t_issue = time.perf_counter_ns()
+        pulled = nwk.pull_block((grp + 1) % n_groups, grp_rows)
+
+        # 2. alias tables for the group's rows only
+        with phase("alias.build", group=grp) as sp:
+            weights = (rows.astype(jnp.float32) + cfg.beta) / (
+                nk.astype(jnp.float32)[None, :] + cfg.V * cfg.beta)
+            table = alias_mod.build_alias_rows(weights)
+            sp.sync_on(table.prob)
+
+        # 3. fused resample against the group-start (stale) counts
+        with phase("sample", group=grp) as sp:
+            idx = gidx[grp]
+            vb = gval[grp]
+            wb = jnp.take(state.w, idx)
+            db = jnp.take(state.d, idx)
+            z0 = jnp.take(z_flat, idx)
+            local = jnp.clip(layout.to_physical(wb) - grp * grp_rows, 0,
+                             grp_rows - 1)
+            doc_draw = lda.make_doc_draw(None, db, z_flat, state.doc_start,
+                                         state.doc_len, cfg)
+            rng = lda.draw_mh_randoms(keys[grp], doc_draw, idx.shape[0], cfg)
+            z_new = lda.mh_chain(
+                rng, z0, jnp.take(rows, local, axis=0),
+                jnp.take(ndk, db, axis=0), nk,
+                jnp.take(table.prob, local, axis=0),
+                jnp.take(table.alias, local, axis=0), cfg)
+            z_new = jnp.where(vb, z_new, z0)
+            sp.sync_on(z_new)
+
+        # 4. routed group-boundary merge + write-back
+        with phase("merge.store", group=grp, route=route.label) as sp:
+            changed = (z_new != z0) & vb
+            d_rows = route.block_delta(
+                ps.Reassign(rows=local, words=wb, z_old=z0, z_new=z_new,
+                            changed=changed),
+                grp_rows, cfg.K)
+            nwk = nwk.store_block(grp, rows + d_rows, grp_rows)
+            amt = changed.astype(jnp.int32)
+            nk = nk + (jnp.zeros((cfg.K,), jnp.int32)
+                       .at[z0].add(-amt).at[z_new].add(amt))
+            ndk = ndk.at[db, z0].add(-amt).at[db, z_new].add(amt)
+            z_flat = z_flat.at[idx].add(jnp.where(vb, z_new - z0, 0))
+            sp.sync_on(z_flat)
+
+        if reg is not None:
+            reg.counter("replay.groups").inc()
+
+    # drain the wrap-around pull so no handle leaks past the sweep
+    _block(pulled.result())
+    if tr is not None:
+        tr.complete("pull.inflight", t_issue, time.perf_counter_ns(),
+                    cat="pull", tid=lane("pull"), group=0, drain=True)
+    return lda.SamplerState(state.w, state.d, z_flat, state.valid,
+                            state.doc_start, state.doc_len, nwk,
+                            state.nk.with_value(nk), ndk)

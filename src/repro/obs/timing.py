@@ -1,0 +1,89 @@
+"""The shared benchmark timer: one methodology for every BENCH_*.json.
+
+Every benchmark used to hand-roll the same four lines (warm, ``t0 =
+time.time()``, loop, ``block_until_ready``) with small drifts -- wall
+clock vs perf_counter, sync inside vs outside the window, best-of vs
+single-shot.  ``time_loop`` fixes the methodology once:
+
+  * ``perf_counter_ns`` (monotonic, highest resolution);
+  * an optional warmup call *outside* the window (compile + autotune);
+  * explicit device sync **inside** the window via ``sync(carry)`` --
+    the measured interval always means "work finished";
+  * best-of-``repeats`` (the standard defence against one-off jitter);
+  * when an obs session is installed, each repeat is recorded as a
+    ``bench.<label>`` span, so trace timelines and BENCH numbers come
+    from the same clock and the same sync policy.
+
+The loop shape is ``carry = step(carry, i)`` with ``i`` the *global*
+iteration index (continuous across repeats) -- benchmarks that derive
+per-iteration RNG keys from ``i`` keep their exact key sequence.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, List, Optional
+
+from repro.obs import runtime as _rt
+from repro.obs.trace import _block
+
+
+@dataclasses.dataclass
+class TimerResult:
+    """Per-repeat wall times for ``iters`` iterations each."""
+
+    label: str
+    iters: int
+    times_s: List[float]
+
+    @property
+    def best_s(self) -> float:
+        return min(self.times_s)
+
+    @property
+    def mean_s(self) -> float:
+        return sum(self.times_s) / len(self.times_s)
+
+    def best_rate(self, units_per_iter: float = 1.0) -> float:
+        """Units per second at the best repeat (e.g. tokens/s, pushes/s)."""
+        return units_per_iter * self.iters / self.best_s
+
+    def ms_per_iter(self) -> float:
+        return self.best_s / self.iters * 1e3
+
+
+def time_loop(step: Callable[[Any, int], Any], carry: Any, iters: int, *,
+              repeats: int = 1, warmup: bool = True,
+              sync: Optional[Callable[[Any], Any]] = None,
+              label: str = "loop") -> tuple:
+    """Time ``iters`` calls of ``carry = step(carry, i)``, best of
+    ``repeats``; returns ``(carry, TimerResult)``.
+
+    ``sync(carry)`` names the value whose readiness closes the timing
+    window (``jax.block_until_ready`` under the hood; no-op for host
+    values).  ``warmup`` runs one extra synced call before the first
+    window -- jit compilation and cache warm never pollute repeat 0.
+    """
+    assert iters > 0 and repeats > 0
+
+    def _sync(c):
+        _block(sync(c) if sync is not None else c)
+
+    i = 0
+    if warmup:
+        carry = step(carry, i)
+        i += 1
+        _sync(carry)
+    times = []
+    tr = _rt.tracer()
+    for _ in range(repeats):
+        t0 = time.perf_counter_ns()
+        for _ in range(iters):
+            carry = step(carry, i)
+            i += 1
+        _sync(carry)
+        t1 = time.perf_counter_ns()
+        times.append((t1 - t0) / 1e9)
+        if tr is not None:
+            tr.complete(f"bench.{label}", t0, t1, cat="bench", iters=iters)
+    return carry, TimerResult(label=label, iters=iters, times_s=times)

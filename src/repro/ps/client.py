@@ -34,6 +34,7 @@ from typing import Optional, Tuple, Union
 import jax
 import jax.numpy as jnp
 
+from repro import obs as _obs
 from repro.core.pserver import DistributedMatrix, DistributedVector
 from repro.ps.backend import Backend, InProcessBackend, SpmdBackend
 from repro.ps.routes import DenseRoute, PushRoute, Reassign
@@ -164,25 +165,47 @@ class MatrixHandle:
         alignable deltas, so when one is configured the plan is
         materialised densely first; in-process, the coordinate part is
         applied compressed -- the paper's per-reassignment message.
+
+        When an obs session is installed (and the call is NOT inside a
+        jax trace -- jitted pushes are timed by their enclosing sweep
+        span), the push records a ``ps.push`` span labelled with the
+        route and its traffic shape, the per-route cost table the
+        autotuner roadmap item needs.  The span only reads clocks and
+        syncs the produced value, so pushed values are identical with
+        tracing on or off.
         """
+        sp = _obs.span("ps.push", cat="ps")
+        if sp is not _obs.NULL_SPAN:
+            batch = int(re.rows.shape[0])
+            sp.set(route=self.route.label, batch=batch,
+                   **self.route.traffic(batch, self.num_rows, self.cols))
         interpret = self.client.interpret if interpret is None else interpret
         backend = self.client.backend
         if backend.axis_name is not None:
             dense = self.route.block_delta(
                 re, self.num_rows, self.cols, use_kernels=use_kernels,
                 prefix_rows=True, interpret=interpret)
-            return self.push_dense(backend.reduce(dense))
-        plan = self.route.plan(re, self.num_rows, self.cols,
-                               use_kernels=use_kernels, prefix_rows=True,
-                               interpret=interpret)
-        out = self
-        if plan.dense is not None:
-            out = out.push_dense(plan.dense)
-        if plan.coo is not None:
-            rows, cols, vals = plan.coo
-            out = out.push_coo(rows, cols, vals,
-                               use_kernel=self.route.coo_kernel(use_kernels),
-                               interpret=interpret)
+            out = self.push_dense(backend.reduce(dense))
+        else:
+            plan = self.route.plan(re, self.num_rows, self.cols,
+                                   use_kernels=use_kernels, prefix_rows=True,
+                                   interpret=interpret)
+            out = self
+            if plan.dense is not None:
+                out = out.push_dense(plan.dense)
+            if plan.coo is not None:
+                rows, cols, vals = plan.coo
+                out = out.push_coo(
+                    rows, cols, vals,
+                    use_kernel=self.route.coo_kernel(use_kernels),
+                    interpret=interpret)
+        if sp is not _obs.NULL_SPAN:
+            sp.sync_on(out.value)
+            ms = sp.end()
+            reg = _obs.metrics_registry()
+            if reg is not None:
+                reg.histogram(f"ps.push_ms.{self.route.label}").record(ms)
+                reg.counter(f"ps.push_count.{self.route.label}").inc()
         return out
 
     def push_dense(self, delta_dense: jax.Array) -> "MatrixHandle":

@@ -83,6 +83,24 @@ class PushRoute:
     """Base policy.  Subclasses define ``plan``; ``block_delta`` is the
     shared materialisation used by group-local merges."""
 
+    @property
+    def label(self) -> str:
+        """Short stable name for metrics/trace labels ("dense" / "coo" /
+        "hybrid")."""
+        return type(self).__name__.replace("Route", "").lower()
+
+    def traffic(self, batch: int, num_rows: int, num_topics: int) -> dict:
+        """Static traffic shape of one ``plan`` for a ``batch``-sized
+        reassignment batch: dense rows/bytes shipped and the coordinate
+        capacity/bytes (each COO entry is a ``(row, col, val)`` int32
+        triple).  Derived from shapes only -- never forces device values
+        -- so the obs layer can label every push for free; the *actual*
+        nnz inside the COO capacity is data-dependent and recorded
+        separately when tracing is on."""
+        return {"dense_rows": num_rows,
+                "dense_bytes": num_rows * num_topics * 4,
+                "coo_cap": 0, "coo_bytes": 0}
+
     def plan(self, re: Reassign, num_rows: int, num_topics: int, *,
              use_kernels: bool = False, prefix_rows: bool = False,
              interpret: Optional[bool] = None) -> RouteDelta:
@@ -143,6 +161,12 @@ class CooRoute(PushRoute):
     def coo_kernel(self, use_kernels: bool) -> bool:
         return use_kernels if self.use_kernel is None else self.use_kernel
 
+    def traffic(self, batch: int, num_rows: int, num_topics: int) -> dict:
+        # two coordinate entries per reassignment (-1 from z_old, +1 to
+        # z_new), worst case: every token changed
+        return {"dense_rows": 0, "dense_bytes": 0,
+                "coo_cap": 2 * batch, "coo_bytes": 2 * batch * 3 * 4}
+
     def plan(self, re: Reassign, num_rows: int, num_topics: int, *,
              use_kernels: bool = False, prefix_rows: bool = False,
              interpret: Optional[bool] = None) -> RouteDelta:
@@ -162,6 +186,11 @@ class HybridRoute(PushRoute):
 
     def coo_kernel(self, use_kernels: bool) -> bool:
         return use_kernels if self.use_kernel is None else self.use_kernel
+
+    def traffic(self, batch: int, num_rows: int, num_topics: int) -> dict:
+        hot = min(max(self.hot_words, 0), num_rows)
+        return {"dense_rows": hot, "dense_bytes": hot * num_topics * 4,
+                "coo_cap": 2 * batch, "coo_bytes": 2 * batch * 3 * 4}
 
     def plan(self, re: Reassign, num_rows: int, num_topics: int, *,
              use_kernels: bool = False, prefix_rows: bool = False,

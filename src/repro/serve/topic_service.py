@@ -30,6 +30,7 @@ import numpy as np
 
 import jax.numpy as jnp
 
+from repro import obs as _obs
 from repro import ps
 from repro.core import lightlda as lda
 from repro.infer.engine import EngineConfig, QueryEngine, Result
@@ -88,18 +89,22 @@ class TopicService:
                 if publish_every and view.step % publish_every == 0:
                     service.publisher.publish_state(view.state)
 
-        state, _, _ = memory_fit(
-            self.state, key, self.cfg, self.exec_cfg, num_sweeps,
-            eval_every=0, log_fn=lambda *a, **k: None,
-            callbacks=[_Publish()])
-        self.state = state
-        return self.publisher.publish_state(state)
+        with _obs.span("service.train", cat="serve", sweeps=num_sweeps,
+                       publish_every=publish_every):
+            state, _, _ = memory_fit(
+                self.state, key, self.cfg, self.exec_cfg, num_sweeps,
+                eval_every=0, log_fn=lambda *a, **k: None,
+                callbacks=[_Publish()])
+            self.state = state
+            return self.publisher.publish_state(state)
 
     # -- serving side ----------------------------------------------------
     def fold_in(self, docs: Sequence[np.ndarray],
                 seeds: Optional[Sequence[int]] = None) -> List[Result]:
         """θ for a batch of unseen documents (bucketed + batched)."""
-        return self.engine.infer(docs, seeds)
+        with _obs.span("service.fold_in", cat="serve", docs=len(docs),
+                       version=self.version):
+            return self.engine.infer(docs, seeds)
 
     def score(self, queries: Sequence[np.ndarray],
               docs: Sequence[np.ndarray],
@@ -111,7 +116,9 @@ class TopicService:
         """
         if results is None:
             results = self.fold_in(docs)
-        return self.engine.score(results, docs, queries)
+        with _obs.span("service.score", cat="serve", queries=len(queries),
+                       docs=len(docs)):
+            return self.engine.score(results, docs, queries)
 
     @property
     def version(self) -> int:

@@ -50,15 +50,19 @@ Entry points:
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as _obs
 from repro import ps
 from repro.core import alias as alias_mod
 from repro.core import lightlda as lda
+from repro.obs import ObsConfig
+from repro.obs.trace import _block
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,12 +77,17 @@ class ExecConfig:
     ``model_blocks``: >0 selects the blocked executor (``pipelined_sweep``)
     with the model pulled in that many blocks; 0 selects the full-snapshot
     executor (``snapshot_sweep``).
+    ``obs``: telemetry tri-state (``repro.obs.ObsConfig``) -- None
+    inherits the installed obs session, ``enabled=False`` suppresses the
+    executor's spans locally.  Observation only: values are bitwise
+    identical either way.
     """
 
     staleness: int = 0
     hot_words: Optional[int] = None
     model_blocks: int = 0
     route: Optional[ps.PushRoute] = None
+    obs: Optional[ObsConfig] = None
 
     def resolve_route(self, vocab_size: int) -> ps.PushRoute:
         if self.route is not None:
@@ -381,6 +390,52 @@ def snapshot_sweep(state: "lda.SamplerState", key: jax.Array,
 # Host-side factory: what the launchers and train.loop.fit_lda drive.
 # ---------------------------------------------------------------------------
 
+def _obs_step(jit_step, exec_cfg: ExecConfig, info: dict):
+    """Wrap a jitted sweep step with host-side sweep spans.
+
+    Per sweep, when an obs session is installed: ``exec.dispatch`` (the
+    host enqueue window -- jit call issued, control returned),
+    ``exec.sweep`` (dispatch + device completion, closed by an explicit
+    ``block_until_ready`` on the new state's ``z``), and a ``[device]``
+    lane span for the remainder, so the Perfetto timeline shows how much
+    of each sweep the host was free (the async overlap window).  The
+    *overlap efficiency* is ``1 - dispatch/total``.
+
+    With no session installed the wrapper costs one attribute read and
+    one ``is None`` test per sweep -- the <1% bar ``bench_obs.py``
+    asserts.  The unwrapped step stays reachable as ``step.raw``.  The
+    sync only ever awaits values the caller would consume anyway; the
+    sampled state is bitwise identical with tracing on or off.
+    """
+
+    def step(st, key, *rest):
+        tr = _obs.tracer_for(exec_cfg.obs)
+        if tr is None:
+            return jit_step(st, key, *rest)
+        t0 = time.perf_counter_ns()
+        out = jit_step(st, key, *rest)
+        t1 = time.perf_counter_ns()
+        _block(out.z)
+        t2 = time.perf_counter_ns()
+        overlap = 1.0 - (t1 - t0) / max(t2 - t0, 1)
+        tr.complete("exec.dispatch", t0, t1, cat="exec", mode=info["mode"])
+        tr.complete("exec.sweep", t0, t2, cat="exec", mode=info["mode"],
+                    staleness=info["staleness"], group=info.get("group"),
+                    route=info["route"],
+                    overlap_pct=round(overlap * 100.0, 2))
+        tr.complete("sweep.device", t1, t2, cat="device",
+                    tid=tr.lane("device"))
+        reg = _obs.metrics_for(exec_cfg.obs)
+        if reg is not None:
+            reg.histogram("exec.sweep_ms").record((t2 - t0) / 1e6)
+            reg.histogram("exec.overlap_pct", unit="%").record(
+                overlap * 100.0)
+        return out
+
+    step.raw = jit_step
+    return step
+
+
 def blocked_geometry(layout, model_blocks: int, staleness: int
                      ) -> Tuple[int, int, int]:
     """Resolve the blocked executor's (rows_per_block, n_blocks, effective
@@ -433,15 +488,17 @@ def make_stream_executor(cfg: "lda.LDAConfig", exec_cfg: ExecConfig,
         info = {"mode": "blocked", "n_blocks": n_blocks,
                 "rows_per_block": rpb, "rows_per_step": rpb_step,
                 "staleness": s, "group": s + 1,
+                "staleness_requested": exec_cfg.staleness,
                 "hot_words": exec_cfg.hot_words, "route": repr(route)}
-        return step, build_index, info
+        return _obs_step(step, exec_cfg, info), build_index, info
 
     jit_step = jax.jit(lambda st, k: snapshot_sweep(
         st, k, cfg, staleness=exec_cfg.staleness, route=route))
     info = {"mode": "snapshot", "n_blocks": None, "rows_per_block": None,
             "staleness": exec_cfg.staleness,
+            "staleness_requested": exec_cfg.staleness,
             "hot_words": exec_cfg.hot_words, "route": repr(route)}
-    return jit_step, None, info
+    return _obs_step(jit_step, exec_cfg, info), None, info
 
 
 def make_executor(state: "lda.SamplerState", cfg: "lda.LDAConfig",
@@ -471,6 +528,7 @@ def make_executor(state: "lda.SamplerState", cfg: "lda.LDAConfig",
         info = {"mode": "blocked", "n_blocks": n_blocks,
                 "rows_per_block": rpb, "staleness": s,
                 "group": s + 1, "token_cap": int(idx.shape[1]),
+                "staleness_requested": exec_cfg.staleness,
                 "hot_words": exec_cfg.hot_words, "route": repr(route)}
     else:
         n = state.w.shape[0]
@@ -481,5 +539,6 @@ def make_executor(state: "lda.SamplerState", cfg: "lda.LDAConfig",
         info = {"mode": "snapshot", "n_blocks": n_blocks,
                 "rows_per_block": None, "staleness": s, "group": s + 1,
                 "token_cap": cfg.block_tokens,
+                "staleness_requested": exec_cfg.staleness,
                 "hot_words": exec_cfg.hot_words, "route": repr(route)}
-    return step, info
+    return _obs_step(step, exec_cfg, info), info

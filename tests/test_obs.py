@@ -1,0 +1,499 @@
+"""Telemetry plane (repro.obs) test suite.
+
+The load-bearing invariant: observation never perturbs computation --
+training with tracing enabled is **bitwise identical** to tracing
+disabled, for both the in-memory and the streamed planes, and a disabled
+run writes no files at all.  Around that: the tracer's Chrome-trace
+output, the HDR histogram's percentile error bound, the under-jit no-op
+guard, the instrumented subsystems (ps.push routes, engine serving,
+stream loader), the eager executor replay, the obs_report renderer, and
+the satellite regressions (LogCallback timestamps/flush, fit_lda
+deprecation warnings).
+"""
+from __future__ import annotations
+
+import io
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs.trace import LANE_BASE, NULL_SPAN, Tracer
+
+
+# ---------------------------------------------------------------------------
+# metrics: counters / gauges / histograms
+# ---------------------------------------------------------------------------
+
+def test_histogram_percentiles_within_bucket_error():
+    from repro.obs.metrics import Histogram
+
+    rng = np.random.default_rng(0)
+    values = rng.uniform(0.1, 500.0, size=5000)
+    h = Histogram("lat")
+    for v in values:
+        h.record(float(v))
+    assert h.count == 5000
+    assert h.vmin == pytest.approx(values.min())
+    assert h.vmax == pytest.approx(values.max())
+    assert h.mean == pytest.approx(values.mean(), rel=1e-6)
+    for q in (50, 90, 95, 99):
+        exact = np.percentile(values, q)
+        got = h.percentile(q)
+        assert got == pytest.approx(exact, rel=0.05), (q, got, exact)
+
+
+def test_histogram_edge_cases():
+    from repro.obs.metrics import Histogram
+
+    h = Histogram("empty")
+    assert h.percentile(99) == 0.0 and h.mean == 0.0
+    h.record(0.0)          # clamped to a tiny positive bucket, not an error
+    h.record(-5.0)
+    assert h.count == 2
+
+
+def test_registry_jsonl_roundtrip(tmp_path):
+    from repro.obs.metrics import MetricsRegistry, load_jsonl
+
+    reg = MetricsRegistry()
+    reg.counter("hits").inc(3)
+    reg.gauge("depth").set(7)
+    reg.histogram("lat").record(12.5)
+    path = str(tmp_path / "m.jsonl")
+    reg.save(path)
+    rows = {r["name"]: r for r in load_jsonl(path)}
+    assert rows["hits"]["kind"] == "counter" and rows["hits"]["value"] == 3
+    assert rows["depth"]["value"] == 7
+    assert rows["lat"]["count"] == 1 and rows["lat"]["p50"] > 0
+
+
+# ---------------------------------------------------------------------------
+# tracer: Chrome-trace JSON, lanes, thread metadata
+# ---------------------------------------------------------------------------
+
+def test_tracer_chrome_trace_output(tmp_path):
+    import time
+
+    tr = Tracer()
+    with tr.span("outer", cat="test", foo=1) as sp:
+        time.sleep(0.005)
+        sp.set(bar=2)
+    tr.complete("lane_ev", time.perf_counter_ns() - 2_000_000,
+                time.perf_counter_ns(), cat="pull", tid=tr.lane("pull"))
+    tr.instant("mark", cat="test")
+    path = str(tmp_path / "t.json")
+    tr.save(path)
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc["displayTimeUnit"] == "ms"
+    events = doc["traceEvents"]
+    spans = {e["name"]: e for e in events if e.get("ph") == "X"}
+    assert spans["outer"]["dur"] >= 4000            # us; slept 5ms
+    assert spans["outer"]["args"] == {"foo": 1, "bar": 2}
+    assert spans["lane_ev"]["tid"] >= LANE_BASE
+    metas = [e for e in events if e.get("ph") == "M"]
+    assert any(e["args"]["name"] == "[pull]" for e in metas)
+    assert any(e.get("ph") == "i" and e["name"] == "mark" for e in events)
+
+
+def test_no_session_means_null_span():
+    assert obs.active() is None
+    sp = obs.span("anything", cat="x")
+    assert sp is NULL_SPAN
+    assert sp.sync_on("value") == "value"
+    assert sp.end() == 0.0
+    assert obs.tracer_for(None) is None
+    assert obs.metrics_for(None) is None
+
+
+def test_span_is_noop_under_jit_trace():
+    import jax
+    import jax.numpy as jnp
+
+    tr = Tracer()
+    seen = []
+
+    @jax.jit
+    def f(x):
+        seen.append(tr.span("inside_trace"))
+        return x + 1
+
+    f(jnp.arange(3))
+    assert seen[0] is NULL_SPAN
+    # outside the trace the same tracer records normally
+    assert tr.span("outside") is not NULL_SPAN
+
+
+def test_obsconfig_is_hashable_and_jit_static_safe():
+    from repro.infer.foldin import FoldInConfig
+    from repro.train.async_exec import ExecConfig
+
+    cfg = obs.ObsConfig(enabled=True, out_dir="x")
+    assert hash(cfg) != 0 or True                  # hashable at all
+    assert {cfg: 1}[cfg] == 1
+    hash(FoldInConfig(obs=cfg))
+    hash(ExecConfig(obs=cfg))
+
+
+def test_session_install_restore_nesting():
+    outer = obs.ObsSession(obs.ObsConfig(enabled=True, trace=True,
+                                         metrics=False)).install()
+    try:
+        assert obs.active() is outer
+        inner = obs.ObsSession(obs.ObsConfig(enabled=True)).install()
+        assert obs.active() is inner
+        inner.close(save=False)
+        assert obs.active() is outer
+    finally:
+        outer.close(save=False)
+    assert obs.active() is None
+
+
+# ---------------------------------------------------------------------------
+# the zero-perturbation invariant + disabled-mode smoke
+# ---------------------------------------------------------------------------
+
+def _tiny_job(corp, tmp_dir=None, **kw):
+    from repro import api
+
+    obs_cfg = (api.ObsConfig(enabled=True, out_dir=str(tmp_dir))
+               if tmp_dir is not None else api.ObsConfig())
+    return api.LDAJob(corpus=corp, num_topics=8, num_shards=2,
+                      block_tokens=512, sweeps=3, eval_every=0, seed=0,
+                      obs=obs_cfg, **kw)
+
+
+def test_disabled_mode_writes_nothing(tmp_path, tiny_corpus):
+    import dataclasses
+    from repro import api
+
+    out = tmp_path / "should_stay_empty"
+    job = dataclasses.replace(
+        _tiny_job(tiny_corpus),
+        obs=api.ObsConfig(enabled=False, out_dir=str(out)))
+    api.APSLDA(job, log_fn=lambda *a, **k: None).fit()
+    assert obs.active() is None
+    assert not out.exists()
+
+
+def test_memory_plane_bitwise_identical_traced_vs_untraced(tmp_path,
+                                                           tiny_corpus):
+    from repro import api
+
+    off = api.APSLDA(_tiny_job(tiny_corpus),
+                     log_fn=lambda *a, **k: None).fit()
+    on = api.APSLDA(_tiny_job(tiny_corpus, tmp_dir=tmp_path / "obs"),
+                    log_fn=lambda *a, **k: None).fit()
+    np.testing.assert_array_equal(on.nwk, off.nwk)
+    np.testing.assert_array_equal(on.nk, off.nk)
+    # the traced run actually produced its artifacts
+    trace = tmp_path / "obs" / "trace.json"
+    metrics = tmp_path / "obs" / "metrics.jsonl"
+    assert trace.exists() and metrics.exists()
+    with open(trace) as f:
+        names = {e["name"] for e in json.load(f)["traceEvents"]}
+    assert {"exec.sweep", "exec.dispatch", "session.step"} <= names
+    assert obs.active() is None                    # session closed
+
+
+def test_stream_plane_bitwise_identical_traced_vs_untraced(tmp_path,
+                                                           stream_dir):
+    from repro import api
+
+    path, _, _ = stream_dir
+
+    def fit(obs_cfg):
+        job = api.LDAJob(stream_dir=path, num_topics=8, num_shards=2,
+                         block_tokens=512, epochs=1, eval_every=0,
+                         seed=0, obs=obs_cfg)
+        return api.APSLDA(job, log_fn=lambda *a, **k: None).fit()
+
+    off = fit(api.ObsConfig())
+    on = fit(api.ObsConfig(enabled=True, out_dir=str(tmp_path / "sobs")))
+    np.testing.assert_array_equal(on.nwk, off.nwk)
+    np.testing.assert_array_equal(on.nk, off.nk)
+    with open(tmp_path / "sobs" / "trace.json") as f:
+        names = {e["name"] for e in json.load(f)["traceEvents"]}
+    assert "exec.sweep" in names
+    assert "stream.load" in names                  # loader instrumented
+
+
+# ---------------------------------------------------------------------------
+# instrumented subsystems
+# ---------------------------------------------------------------------------
+
+def test_push_routes_labels_and_traffic():
+    from repro import ps
+
+    assert ps.DenseRoute().label == "dense"
+    assert ps.CooRoute().label == "coo"
+    assert ps.HybridRoute(hot_words=4).label == "hybrid"
+    batch, rows, k = 100, 50, 8
+    dense = ps.DenseRoute().traffic(batch, rows, k)
+    assert dense["dense_rows"] == rows and dense["coo_cap"] == 0
+    coo = ps.CooRoute().traffic(batch, rows, k)
+    # cold_coo emits 2 coordinate entries per reassignment (-1 old, +1 new)
+    assert coo["coo_cap"] == 2 * batch
+    assert coo["coo_bytes"] == 2 * batch * 3 * 4
+    hyb = ps.HybridRoute(hot_words=16).traffic(batch, rows, k)
+    assert 0 < hyb["dense_rows"] <= 16 and hyb["coo_cap"] == 2 * batch
+
+
+def test_ps_push_records_span_and_histogram():
+    import jax.numpy as jnp
+    from repro import ps
+
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.integers(0, 40, 64, dtype=np.int32))
+    re = ps.Reassign(rows=w, words=w,
+                     z_old=jnp.asarray(rng.integers(0, 8, 64,
+                                                    dtype=np.int32)),
+                     z_new=jnp.asarray(rng.integers(0, 8, 64,
+                                                    dtype=np.int32)),
+                     changed=jnp.asarray(rng.random(64) < 0.5))
+    s = obs.ObsSession(obs.ObsConfig(enabled=True)).install()
+    try:
+        h = ps.PSClient.create(num_shards=2).matrix(40, 8)
+        h.with_route(ps.HybridRoute(hot_words=8)).push(re)
+        pushes = [e for e in s.tracer.events()
+                  if e.get("ph") == "X" and e["name"] == "ps.push"]
+        assert len(pushes) == 1
+        args = pushes[0]["args"]
+        assert args["route"] == "hybrid" and args["batch"] == 64
+        assert args["coo_cap"] == 128
+        hist = s.metrics.get("ps.push_ms.hybrid")
+        assert hist is not None and hist.count == 1
+        assert s.metrics.get("ps.push_count.hybrid").value == 1
+    finally:
+        s.close(save=False)
+
+
+def test_engine_serving_metrics(tmp_path, tiny_corpus):
+    from repro import api
+    from repro.infer.engine import EngineConfig, QueryEngine
+    from repro.infer.foldin import FoldInConfig
+
+    model = api.APSLDA(_tiny_job(tiny_corpus),
+                       log_fn=lambda *a, **k: None).fit()
+    s = obs.ObsSession(obs.ObsConfig(enabled=True)).install()
+    try:
+        eng = QueryEngine(model.publisher(),
+                          EngineConfig(max_batch=4,
+                                       foldin=FoldInConfig(num_sweeps=2,
+                                                           burnin=1)))
+        rng = np.random.default_rng(0)
+        docs = [rng.integers(0, 300, size=n).astype(np.int32)
+                for n in (5, 9, 17, 30, 31, 12)]
+        for d in docs:
+            eng.submit(d)
+        assert s.metrics.get("serve.queue_depth").value == len(docs)
+        out = eng.flush()
+        assert len(out) == len(docs)
+        req = s.metrics.get("serve.request_ms")
+        assert req.count == len(docs)
+        assert req.summary()["p99"] >= req.summary()["p50"] > 0
+        occ = s.metrics.get("serve.batch_occupancy")
+        assert occ.count >= 2                       # several buckets/batches
+        names = {e["name"] for e in s.tracer.events()
+                 if e.get("ph") == "X"}
+        # snapshot.build/sync/swap from model.publisher()'s publish, plus
+        # the engine's flush/batch spans
+        assert {"engine.flush", "engine.batch", "snapshot.build",
+                "snapshot.swap"} <= names
+        assert s.metrics.get("serve.queue_depth").value == 0
+    finally:
+        s.close(save=False)
+
+
+def test_loader_prefetch_counters(stream_dir):
+    from repro.data.stream import Cursor, StreamingLoader
+
+    path, reader, _ = stream_dir
+    s = obs.ObsSession(obs.ObsConfig(enabled=True)).install()
+    try:
+        loader = StreamingLoader(reader, seed=0)
+        visits = list(loader.iterate(Cursor(), end_epoch=1))
+        assert len(visits) == reader.num_shards
+        hit = s.metrics.get("stream.prefetch_hit")
+        miss = s.metrics.get("stream.prefetch_miss")
+        total = (hit.value if hit else 0) + (miss.value if miss else 0)
+        assert total == reader.num_shards
+        assert s.metrics.get("stream.shard_wait_ms").count == total
+        names = {e["name"] for e in s.tracer.events()
+                 if e.get("ph") == "X"}
+        assert {"stream.load", "stream.shard_wait"} <= names
+    finally:
+        s.close(save=False)
+
+
+# ---------------------------------------------------------------------------
+# eager executor replay (obs.exec_trace)
+# ---------------------------------------------------------------------------
+
+def test_exec_trace_replay_matches_executor(lda_state):
+    import jax
+    from repro.obs import exec_trace
+    from repro.train import async_exec
+
+    _, cfg, state = lda_state(num_docs=80, vocab=128, k=8, num_shards=2,
+                              block_tokens=256)
+    blocks, staleness = 4, 1
+    step, _ = async_exec.make_executor(
+        state, cfg, async_exec.ExecConfig(staleness=staleness,
+                                          model_blocks=blocks))
+    key = jax.random.PRNGKey(3)
+    want = step.raw(state, key)
+
+    s = obs.ObsSession(obs.ObsConfig(enabled=True)).install()
+    try:
+        got = exec_trace.traced_pipelined_sweep(
+            state, key, cfg, model_blocks=blocks, staleness=staleness)
+        names = {e["name"] for e in s.tracer.events()
+                 if e.get("ph") == "X"}
+        assert {"pull.inflight", "alias.build", "sample",
+                "merge.store"} <= names
+        pulls = [e for e in s.tracer.events()
+                 if e.get("ph") == "X" and e["name"] == "pull.inflight"]
+        assert all(e["tid"] >= LANE_BASE for e in pulls)
+    finally:
+        s.close(save=False)
+    np.testing.assert_array_equal(np.asarray(got.z), np.asarray(want.z))
+    np.testing.assert_array_equal(np.asarray(got.nwk.to_dense()),
+                                  np.asarray(want.nwk.to_dense()))
+    np.testing.assert_array_equal(np.asarray(got.nk.value),
+                                  np.asarray(want.nk.value))
+
+
+# ---------------------------------------------------------------------------
+# shared bench timer
+# ---------------------------------------------------------------------------
+
+def test_time_loop_global_index_and_repeats():
+    from repro.obs.timing import time_loop
+
+    seen = []
+
+    def step(carry, i):
+        seen.append(i)
+        return carry + 1
+
+    carry, tm = time_loop(step, 0, iters=3, repeats=2, label="t")
+    # warmup consumes global index 0; repeats continue the sequence
+    assert seen == [0, 1, 2, 3, 4, 5, 6]
+    assert carry == 7
+    assert len(tm.times_s) == 2 and tm.best_s <= tm.mean_s
+    assert tm.best_rate(10.0) == pytest.approx(30.0 / tm.best_s)
+
+
+# ---------------------------------------------------------------------------
+# obs_report
+# ---------------------------------------------------------------------------
+
+def test_obs_report_render_sections(tmp_path):
+    from repro.launch import obs_report
+
+    events = [
+        {"name": "exec.sweep", "cat": "exec", "ph": "X", "pid": 1,
+         "tid": 0, "ts": 0.0, "dur": 9000.0,
+         "args": {"overlap_pct": 80.0}},
+        {"name": "exec.sweep", "cat": "exec", "ph": "X", "pid": 1,
+         "tid": 0, "ts": 9000.0, "dur": 11000.0,
+         "args": {"overlap_pct": 60.0}},
+        {"name": "ps.push", "cat": "ps", "ph": "X", "pid": 1, "tid": 0,
+         "ts": 0.0, "dur": 2000.0,
+         "args": {"route": "hybrid", "batch": 100, "dense_rows": 4,
+                  "dense_bytes": 128, "coo_cap": 200, "coo_bytes": 2400}},
+    ]
+    with open(tmp_path / "trace.json", "w") as f:
+        json.dump({"traceEvents": events, "displayTimeUnit": "ms"}, f)
+    from repro.obs.metrics import MetricsRegistry
+    reg = MetricsRegistry()
+    for v in (1.0, 2.0, 3.0, 50.0):
+        reg.histogram("serve.request_ms").record(v)
+    reg.counter("stream.prefetch_hit").inc(5)
+    reg.save(str(tmp_path / "metrics.jsonl"))
+
+    text = obs_report.render(str(tmp_path))
+    assert "exec.sweep" in text
+    assert "mean=70.0%" in text                    # (80 + 60) / 2
+    assert "hybrid" in text and "push routes" in text
+    assert "serve.request_ms" in text
+    assert "stream.prefetch_hit" in text
+
+
+def test_obs_report_tolerates_empty_dir(tmp_path):
+    from repro.launch import obs_report
+
+    text = obs_report.render(str(tmp_path))
+    assert "nothing recorded" in text
+
+
+# ---------------------------------------------------------------------------
+# satellites: TraceCallback, LogCallback, deprecation shims
+# ---------------------------------------------------------------------------
+
+def test_trace_callback_owns_session_when_job_untraced(tmp_path,
+                                                       tiny_corpus):
+    from repro import api
+
+    out = tmp_path / "cb_obs"
+    cb = api.TraceCallback(api.ObsConfig(enabled=True, out_dir=str(out)))
+    api.Session(_tiny_job(tiny_corpus),
+                log_fn=lambda *a, **k: None).run(callbacks=[cb])
+    assert obs.active() is None                    # closed after the fit
+    with open(out / "trace.json") as f:
+        events = json.load(f)["traceEvents"]
+    names = {e["name"] for e in events}
+    # the callback's own spans AND the executor's (ExecConfig.obs=None
+    # inherits the callback-installed session)
+    assert {"session.visit", "exec.sweep", "fit.start", "fit.end"} <= names
+
+
+def test_log_callback_timestamps_and_flush(tmp_path):
+    from repro.api.callbacks import LogCallback
+
+    # path sink: every line durable and stamped with both clocks
+    path = str(tmp_path / "log.jsonl")
+    cb = LogCallback(path)
+    cb.on_fit_start({"mode": "blocked", "staleness": 1})
+    cb.on_fit_end(None)
+    with open(path) as f:
+        lines = [json.loads(ln) for ln in f if ln.strip()]
+    assert [ln["event"] for ln in lines] == ["fit_start", "fit_end"]
+    for ln in lines:
+        assert isinstance(ln["t_wall"], float)
+        assert isinstance(ln["t_mono"], float)
+    assert lines[1]["t_mono"] >= lines[0]["t_mono"]
+
+    # file sink: flushed per write (readable before close)
+    buf = io.StringIO()
+    cb2 = LogCallback(buf)
+    cb2.on_fit_start({"mode": "snapshot"})
+    first = buf.getvalue()
+    assert first.endswith("\n") and "t_mono" in first
+
+
+def test_fit_lda_shims_warn_deprecation(lda_state, stream_dir):
+    import jax
+    from repro.core import lightlda as lda
+    from repro.train import loop as train_loop
+    from repro.train.async_exec import ExecConfig
+
+    _, cfg, state = lda_state(num_docs=80, vocab=128, k=8, num_shards=2,
+                              block_tokens=256)
+    with pytest.warns(DeprecationWarning, match="fit_lda is deprecated"):
+        train_loop.fit_lda(state, jax.random.PRNGKey(0), cfg, ExecConfig(),
+                           sweeps=1, eval_every=0,
+                           log_fn=lambda *a, **k: None)
+
+    path, reader, corp = stream_dir
+    scfg = lda.LDAConfig(num_topics=8, vocab_size=corp.vocab_size,
+                         block_tokens=256, num_shards=2)
+    with pytest.warns(DeprecationWarning,
+                      match="fit_lda_stream is deprecated"):
+        train_loop.fit_lda_stream(reader, scfg, ExecConfig(), epochs=1,
+                                  max_shards=1,
+                                  log_fn=lambda *a, **k: None)

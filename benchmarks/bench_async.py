@@ -86,18 +86,32 @@ def main(fast: bool = False):
     speedup = results[best_s]["tokens_per_s"] / base
     print(f"async,async_speedup,s{best_s},{speedup:.2f},x_vs_sync")
 
-    # hybrid push: throughput at a few hot/cold boundaries (staleness
-    # fixed at the best grid point); values are identical by construction,
-    # this measures traffic-shape cost only
-    hybrid = {}
-    for h in ((None, 256, 0) if fast else (None, 2000, 0)):
-        tps, _ = _tokens_per_s(
-            state, cfg, async_exec.ExecConfig(staleness=best_s,
-                                              hot_words=h,
-                                              model_blocks=blocks),
-            corp.num_tokens, iters, repeats=1)
-        hybrid[str(h)] = tps
-        print(f"async,hot_words_{h},{tps:,.0f},tok_per_s")
+    # routed push: throughput per PushRoute, keyed by the route's own
+    # label (not a stringified hot_words knob), at both the synchronous
+    # bound and the best grid point -- so the route choice is not
+    # conditioned on one pre-selected staleness.  Each record carries the
+    # route's split-vs-apply traffic breakdown (``PushRoute.traffic()``)
+    # at the executor's merge-unit batch, the cost table ``ps.autotune``
+    # consumes.  Values are identical by construction; this measures
+    # traffic-shape cost only.
+    from repro import ps as ps_mod
+    route_grid = ((None, 256, 0) if fast else (None, 2000, 0))
+    batch = results[best_s]["token_cap"] * (results[best_s]["group"] or 1)
+    routes = {}
+    for h in route_grid:
+        route = ps_mod.route_for(h, vocab)
+        rec = {"hot_words": h,
+               "traffic": {kk: int(vv) for kk, vv in route.traffic(
+                   batch, vocab, k).items()},
+               "tokens_per_s_by_staleness": {}}
+        for s in sorted({0, best_s}):
+            tps, _ = _tokens_per_s(
+                state, cfg, async_exec.ExecConfig(staleness=s, route=route,
+                                                  model_blocks=blocks),
+                corp.num_tokens, iters, repeats=1)
+            rec["tokens_per_s_by_staleness"][str(s)] = tps
+            print(f"async,route_{route.label},s{s},{tps:,.0f},tok_per_s")
+        routes[route.label] = rec
 
     os.makedirs(os.path.dirname(OUT), exist_ok=True)
     with open(OUT, "w") as f:
@@ -111,7 +125,7 @@ def main(fast: bool = False):
             "baseline_tokens_per_s": base,
             "best_staleness": best_s,
             "async_speedup_x": speedup,
-            "hybrid_tokens_per_s_by_hot_words": hybrid,
+            "routes": routes,
         }, f, indent=2)
     print(f"async,wrote,{OUT}")
     assert speedup >= 1.3, (

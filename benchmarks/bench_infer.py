@@ -33,10 +33,17 @@ def _trained_snapshot(num_docs, vocab, k, sweeps, seed=0):
     job = api.LDAJob(corpus=corp, num_topics=k, block_tokens=4096,
                      sweeps=sweeps, eval_every=0, seed=seed)
     model = api.APSLDA(job, log_fn=lambda *a, **kw: None).fit()
-    # the once-per-version alias build
-    pub, tm = time_loop(lambda c, i: model.publisher(), None, 1,
-                        warmup=False, label="snapshot_publish")
-    return model.cfg, pub, pub.acquire(), tm.best_s
+    # The once-per-version publish cost, measured honestly in two parts:
+    # ``cold`` is the FIRST publish ever for this geometry (pays the jit
+    # compile of the cached snapshot builder, once per process), ``steady``
+    # is every publish after it -- the recurring cost a live trainer pays
+    # per version, and the headline ``snapshot_publish_ms``.
+    _, tm_cold = time_loop(lambda c, i: model.publisher(), None, 1,
+                           warmup=False, label="snapshot_publish_cold")
+    pub, tm = time_loop(lambda c, i: model.publisher(), None, 3,
+                        warmup=True, label="snapshot_publish")
+    return model.cfg, pub, pub.acquire(), tm.ms_per_iter() / 1e3, \
+        tm_cold.best_s
 
 
 def _foldin_docs_per_s(snap, cfg, fcfg, docs, batch, length, iters=3):
@@ -65,8 +72,10 @@ def main(fast: bool = False):
     num_docs, vocab, k, sweeps = ((300, 500, 16, 8) if fast
                                   else (1000, 2000, 50, 20))
     serve_docs, length = (64, 64) if fast else (256, 128)
-    cfg, pub, snap, publish_s = _trained_snapshot(num_docs, vocab, k, sweeps)
-    print(f"infer,snapshot_publish,V={cfg.V},K={cfg.K},{publish_s*1e3:.0f},ms")
+    cfg, pub, snap, publish_s, publish_cold_s = _trained_snapshot(
+        num_docs, vocab, k, sweeps)
+    print(f"infer,snapshot_publish,V={cfg.V},K={cfg.K},"
+          f"{publish_s*1e3:.1f},ms_steady,{publish_cold_s*1e3:.0f},ms_cold")
 
     rng = np.random.default_rng(0)
     docs = [rng.integers(0, vocab, size=length - 8).astype(np.int32)
@@ -105,6 +114,7 @@ def main(fast: bool = False):
             "config": {"V": cfg.V, "K": cfg.K, "docs": serve_docs,
                        "doc_len": length, "foldin_sweeps": fcfg.num_sweeps},
             "snapshot_publish_ms": publish_s * 1e3,
+            "snapshot_publish_cold_ms": publish_cold_s * 1e3,
             "naive_docs_per_s": naive,
             "batched_docs_per_s": {str(b): v for b, v in batched.items()},
             "batching_speedup_x": speedup,

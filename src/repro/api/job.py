@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Any, Optional, Sequence
+from typing import Any, Optional, Sequence, Union
 
 from repro import ps
 from repro.core import lightlda as lda
@@ -119,9 +119,9 @@ class LDAJob:
     # --- schedule ---
     sweeps: int = 50                      # in-memory source
     epochs: int = 3                       # streamed source
-    staleness: int = 0
+    staleness: Union[int, str] = 0        # int, or "auto" (ps.autotune)
     model_blocks: int = 0
-    route: Optional[ps.PushRoute] = None
+    route: Optional[Union[ps.PushRoute, str]] = None   # or "auto"
     hot_words: Optional[int] = None
     max_shards: Optional[int] = None      # streamed: stop after N visits
     prefetch: bool = True                 # streamed: double-buffered loader
@@ -215,16 +215,35 @@ class LDAJob:
             out.append(f"sweeps must be >= 1 (got {self.sweeps})")
         if self.epochs < 1:
             out.append(f"epochs must be >= 1 (got {self.epochs})")
-        if self.staleness < 0:
+        if isinstance(self.staleness, str):
+            if self.staleness != "auto":
+                out.append(f"staleness must be an int >= 0 or the string "
+                           f"'auto' (got {self.staleness!r})")
+        elif self.staleness < 0:
             out.append(f"staleness must be >= 0 (got {self.staleness}); 0 "
                        "is the synchronous schedule")
         if self.model_blocks < 0:
             out.append(f"model_blocks must be >= 0 (got "
                        f"{self.model_blocks}); 0 selects the full-snapshot "
                        "executor")
+        if isinstance(self.route, str) and self.route != "auto":
+            out.append(f"route must be a ps.PushRoute or the string 'auto' "
+                       f"(got {self.route!r})")
+        if self.route == "auto" or self.staleness == "auto":
+            if self.source_kind != "memory":
+                out.append("route='auto'/staleness='auto' needs an "
+                           "in-memory source (the autotuner measures "
+                           "against the materialised state); pass concrete "
+                           "values for streamed jobs")
+            if self.backend != IN_PROCESS:
+                out.append("route='auto'/staleness='auto' is in_process-"
+                           "only (the SPMD planes resolve their schedule "
+                           "at shard_map build time); pass concrete values "
+                           "under backend='spmd'")
         if self.route is not None and self.hot_words is not None:
             out.append("pass either route= (ps.DenseRoute / ps.CooRoute / "
-                       "ps.HybridRoute) or the legacy hot_words=, not both")
+                       "ps.HybridRoute / 'auto') or the legacy hot_words=, "
+                       "not both")
         if self.max_shards is not None:
             if self.source_kind != "stream":
                 out.append("max_shards only applies to streamed sources; "

@@ -267,6 +267,11 @@ class _MemoryPlane:
         self.step_fn, info = async_exec.make_executor(state, cfg,
                                                       self.exec_cfg)
         self.info = dict(info)
+        tuned = info.get("autotune")
+        if tuned is not None:
+            self.log_fn(f"[lda] autotune: chose {tuned['chosen']} "
+                        f"(route='auto'/staleness='auto' measured against "
+                        f"the materialised state)")
         if info["mode"] == "blocked":
             rpb = info["rows_per_block"]
             self.log_fn(

@@ -309,7 +309,9 @@ class FrozenModel(NamedTuple):
 
 
 def freeze_model(nwk_dense: jax.Array, nk: jax.Array, cfg: LDAConfig,
-                 weights: Optional[jax.Array] = None) -> FrozenModel:
+                 weights: Optional[jax.Array] = None,
+                 use_kernels: bool = False,
+                 interpret: Optional[bool] = None) -> FrozenModel:
     """Freeze dense counts into a ``FrozenModel`` (alias tables included).
 
     This is the expensive, once-per-snapshot step: O(V*K) alias
@@ -317,13 +319,23 @@ def freeze_model(nwk_dense: jax.Array, nk: jax.Array, cfg: LDAConfig,
     per token against these tables.  ``weights`` lets the caller pass the
     already-computed smoothed φ matrix (q_w and φ are the same quantity);
     otherwise it is computed here.
+
+    ``use_kernels`` routes the alias build through the Pallas kernel
+    (``kernels.ops.alias_build``): same induced proposal pmf, but the
+    alias *assignments* are permutation-dependent, so sampled fold-in
+    paths may differ from the jnp construction -- opt-in, matching the
+    training-side ``cfg.use_kernels`` convention.
     """
     from repro.core import perplexity as ppl
     nwk_f = nwk_dense.astype(jnp.float32)
     nk_f = nk.astype(jnp.float32)
     if weights is None:
         weights = ppl.phi_from_counts(nwk_f, nk_f, cfg.beta)
-    table = alias_mod.build_alias_rows(weights)
+    if use_kernels:
+        from repro.kernels import ops as kops
+        table = kops.alias_build(weights, interpret=interpret)
+    else:
+        table = alias_mod.build_alias_rows(weights)
     return FrozenModel(nwk_f, nk_f, table.prob, table.alias)
 
 

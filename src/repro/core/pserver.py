@@ -175,6 +175,25 @@ class DistributedMatrix:
         new = self.value + padded[perm].astype(self.value.dtype)
         return dataclasses.replace(self, value=new)
 
+    def push_prefix(self, delta: jax.Array) -> "DistributedMatrix":
+        """Push a dense delta covering only the FIRST ``delta.shape[0]``
+        logical rows (the id prefix).
+
+        This is the wire format of the hybrid route's hot-word buffer
+        (paper section 3.3): frequency-ordered ids put the hot words at
+        the front, so their dense block is ``[H, cols]`` and the server
+        applies it to ``H`` scattered physical rows -- never
+        materialising (or touching) the full ``[pad_rows, cols]`` matrix
+        the old pad-to-V path paid for.  ``delta.shape[0] == num_rows``
+        degrades to ``push_dense`` exactly.
+        """
+        rows = delta.shape[0]
+        if rows >= self.num_rows:
+            return self.push_dense(delta)
+        phys = self.layout.to_physical(jnp.arange(rows))
+        new = self.value.at[phys].add(delta.astype(self.value.dtype))
+        return dataclasses.replace(self, value=new)
+
     def push_sparse(self, rows: jax.Array, cols: jax.Array, vals: jax.Array,
                     *, use_kernel: bool = False,
                     interpret: Optional[bool] = None) -> "DistributedMatrix":

@@ -19,12 +19,15 @@ from repro.ps.backend import Backend, InProcessBackend, SpmdBackend
 from repro.ps.client import (MatrixHandle, PSClient, PullHandle,
                              ReadOnlyView, VectorHandle, client_for)
 from repro.ps.routes import (CooRoute, DenseRoute, HybridRoute, PushRoute,
-                             Reassign, RouteDelta, route_for)
+                             Reassign, RouteDelta, partition_reassign,
+                             route_for)
+from repro.ps import autotune
 
 __all__ = [
     "Backend", "InProcessBackend", "SpmdBackend",
     "MatrixHandle", "PSClient", "PullHandle", "ReadOnlyView",
     "VectorHandle", "client_for",
     "CooRoute", "DenseRoute", "HybridRoute", "PushRoute", "Reassign",
-    "RouteDelta", "route_for",
+    "RouteDelta", "partition_reassign", "route_for",
+    "autotune",
 ]

@@ -47,6 +47,9 @@ class InProcessBackend:
     def reduce(self, delta: jax.Array) -> jax.Array:
         return delta
 
+    def gather_concat(self, x: jax.Array) -> jax.Array:
+        return x
+
     def localize(self, full: DistributedMatrix) -> DistributedMatrix:
         return full
 
@@ -77,6 +80,20 @@ class SpmdBackend:
         if self.axis_name is None:
             return delta
         return jax.lax.psum(delta, self.axis_name)
+
+    def gather_concat(self, x: jax.Array) -> jax.Array:
+        """Concatenate every worker's buffer along axis 0 -- the COO
+        analogue of ``reduce``: a coordinate message cannot be summed
+        elementwise, so the workers' compressed buffers are gathered and
+        every entry applied once (value-0 padding stays a no-op).  One
+        ``all_gather`` per worker axis."""
+        if self.axis_name is None:
+            return x
+        axes = (self.axis_name if isinstance(self.axis_name, tuple)
+                else (self.axis_name,))
+        for ax in axes:
+            x = jax.lax.all_gather(x, ax, axis=0, tiled=True)
+        return x
 
     def localize(self, full: DistributedMatrix) -> DistributedMatrix:
         if self.model_axis is None:

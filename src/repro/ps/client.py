@@ -37,7 +37,7 @@ import jax.numpy as jnp
 from repro import obs as _obs
 from repro.core.pserver import DistributedMatrix, DistributedVector
 from repro.ps.backend import Backend, InProcessBackend, SpmdBackend
-from repro.ps.routes import DenseRoute, PushRoute, Reassign
+from repro.ps.routes import DenseRoute, PushRoute, Reassign, RouteDelta
 
 
 @jax.tree_util.register_pytree_node_class
@@ -156,32 +156,42 @@ class MatrixHandle:
 
     # --- pushes -----------------------------------------------------------
     def push(self, re: Reassign, *, use_kernels: bool = False,
-             interpret: Optional[bool] = None) -> "MatrixHandle":
+             interpret: Optional[bool] = None,
+             hot_prefix: Optional[int] = None) -> "MatrixHandle":
         """Push a reassignment batch through the handle's ``PushRoute``.
 
-        The route plans the traffic (dense / coordinate / hybrid), the
-        backend reduces worker deltas exactly once (identity in-process,
-        ``psum`` under SPMD).  A cross-worker reduction needs elementwise-
-        alignable deltas, so when one is configured the plan is
-        materialised densely first; in-process, the coordinate part is
-        applied compressed -- the paper's per-reassignment message.
+        The route plans the traffic (dense / coordinate / hybrid) and the
+        backend merges worker contributions exactly once: the dense part
+        -- prefix-shaped for the hybrid, see ``RouteDelta`` -- reduces
+        elementwise (identity in-process, ``psum`` under SPMD) and lands
+        through ``push_prefix``; the coordinate part stays compressed --
+        the paper's per-reassignment message -- and under SPMD the
+        workers' buffers are all-gathered and each entry applied once
+        (``Backend.gather_concat``).  Only a model-sharded backend
+        (``model_axis`` set) still materialises the full dense delta: its
+        ``push_dense`` write-back needs the whole physical width.
+
+        ``hot_prefix`` asserts the batch was pre-partitioned at the hot
+        boundary (``ps.partition_reassign``), shrinking the hybrid's cold
+        buffer to the post-split tail.
 
         When an obs session is installed (and the call is NOT inside a
         jax trace -- jitted pushes are timed by their enclosing sweep
         span), the push records a ``ps.push`` span labelled with the
         route and its traffic shape, the per-route cost table the
-        autotuner roadmap item needs.  The span only reads clocks and
-        syncs the produced value, so pushed values are identical with
+        autotuner (``ps.autotune``) consumes.  The span only reads clocks
+        and syncs the produced value, so pushed values are identical with
         tracing on or off.
         """
         sp = _obs.span("ps.push", cat="ps")
         if sp is not _obs.NULL_SPAN:
             batch = int(re.rows.shape[0])
             sp.set(route=self.route.label, batch=batch,
-                   **self.route.traffic(batch, self.num_rows, self.cols))
+                   **self.route.traffic(batch, self.num_rows, self.cols,
+                                        hot_prefix=hot_prefix))
         interpret = self.client.interpret if interpret is None else interpret
         backend = self.client.backend
-        if backend.axis_name is not None:
+        if backend.model_axis is not None:
             dense = self.route.block_delta(
                 re, self.num_rows, self.cols, use_kernels=use_kernels,
                 prefix_rows=True, interpret=interpret)
@@ -189,16 +199,15 @@ class MatrixHandle:
         else:
             plan = self.route.plan(re, self.num_rows, self.cols,
                                    use_kernels=use_kernels, prefix_rows=True,
-                                   interpret=interpret)
-            out = self
-            if plan.dense is not None:
-                out = out.push_dense(plan.dense)
-            if plan.coo is not None:
-                rows, cols, vals = plan.coo
-                out = out.push_coo(
-                    rows, cols, vals,
-                    use_kernel=self.route.coo_kernel(use_kernels),
-                    interpret=interpret)
+                                   hot_prefix=hot_prefix, interpret=interpret)
+            if backend.axis_name is not None:
+                plan = RouteDelta(
+                    None if plan.dense is None else backend.reduce(plan.dense),
+                    None if plan.coo is None else tuple(
+                        backend.gather_concat(x) for x in plan.coo))
+            out = self.push_plan(plan,
+                                 use_kernel=self.route.coo_kernel(use_kernels),
+                                 interpret=interpret)
         if sp is not _obs.NULL_SPAN:
             sp.sync_on(out.value)
             ms = sp.end()
@@ -208,10 +217,34 @@ class MatrixHandle:
                 reg.counter(f"ps.push_count.{self.route.label}").inc()
         return out
 
+    def push_plan(self, plan: "RouteDelta", *, use_kernel: bool = False,
+                  interpret: Optional[bool] = None) -> "MatrixHandle":
+        """Apply an already-planned ``RouteDelta`` (the server-side half
+        of a push): prefix-dense block through ``push_prefix``, coordinate
+        entries through ``push_coo``.  ``MatrixHandle.push`` is plan +
+        merge + this; benchmarks time the two halves separately because
+        the paper's worker builds the plan *while sampling* (the split
+        cost is amortised into the sweep), so the server apply is the
+        contended-resource cost."""
+        out = self
+        if plan.dense is not None:
+            out = out.push_prefix(plan.dense)
+        if plan.coo is not None:
+            rows, cols, vals = plan.coo
+            out = out.push_coo(rows, cols, vals, use_kernel=use_kernel,
+                               interpret=interpret)
+        return out
+
     def push_dense(self, delta_dense: jax.Array) -> "MatrixHandle":
         """Push a dense logical [num_rows, cols] delta."""
         return dataclasses.replace(
             self, storage=self.storage.push_dense(delta_dense))
+
+    def push_prefix(self, delta: jax.Array) -> "MatrixHandle":
+        """Push a dense delta covering the first ``delta.shape[0]``
+        logical rows (the hybrid's hot-word buffer wire format)."""
+        return dataclasses.replace(
+            self, storage=self.storage.push_prefix(delta))
 
     def push_rows(self, rows: jax.Array, deltas: jax.Array) -> "MatrixHandle":
         """Push row deltas to logical rows (duplicates accumulate)."""

@@ -51,7 +51,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -70,10 +70,14 @@ class ExecConfig:
     """Executor schedule knobs (orthogonal to the model's ``LDAConfig``).
 
     ``staleness``: how many block deltas may be in flight while a block
-    samples; 0 reproduces the synchronous schedule exactly.
+    samples; 0 reproduces the synchronous schedule exactly.  The string
+    ``"auto"`` asks ``ps.autotune`` to measure candidate bounds when the
+    executor is built (``make_executor`` only).
     ``route``: the declarative push policy (``ps.DenseRoute`` /
     ``ps.CooRoute`` / ``ps.HybridRoute``); ``hot_words`` is the legacy
     scalar knob mapped through ``ps.route_for`` when ``route`` is None.
+    The string ``"auto"`` asks ``ps.autotune`` for a cost-model +
+    measurement pick (``make_executor`` only).
     ``model_blocks``: >0 selects the blocked executor (``pipelined_sweep``)
     with the model pulled in that many blocks; 0 selects the full-snapshot
     executor (``snapshot_sweep``).
@@ -83,13 +87,24 @@ class ExecConfig:
     identical either way.
     """
 
-    staleness: int = 0
+    staleness: Union[int, str] = 0
     hot_words: Optional[int] = None
     model_blocks: int = 0
-    route: Optional[ps.PushRoute] = None
+    route: Optional[Union[ps.PushRoute, str]] = None
     obs: Optional[ObsConfig] = None
 
+    def wants_autotune(self) -> bool:
+        return self.route == "auto" or self.staleness == "auto"
+
     def resolve_route(self, vocab_size: int) -> ps.PushRoute:
+        if self.route == "auto" or self.staleness == "auto":
+            raise ValueError(
+                "route='auto'/staleness='auto' must be resolved by "
+                "make_executor (which runs ps.autotune against the actual "
+                "state) before the schedule is built; this code path "
+                "(streaming / SPMD launchers) needs concrete values -- "
+                "pass a ps.PushRoute / int, or run ps.autotune.autotune() "
+                "yourself and use its TunedPlan.")
         if self.route is not None:
             return self.route
         return ps.route_for(self.hot_words, vocab_size)
@@ -356,22 +371,44 @@ def snapshot_sweep(state: "lda.SamplerState", key: jax.Array,
 
         # --- routed delta aggregation + group-boundary merge (3.3) ---
         changed = (z0 != z_new) & valid_b
-        d_nwk = route.block_delta(
+        plan = route.plan(
             ps.Reassign(rows=w_b, words=w_b, z_old=z0, z_new=z_new,
                         changed=changed),
             cfg.V, cfg.K, use_kernels=cfg.use_kernels, prefix_rows=True,
             interpret=cfg.kernel_interpret)
         d_nk, d_ndk = token_deltas(d_b, z0, z_new, changed, num_docs,
                                    cfg.K)
-        # SPMD "push": sum deltas over the workers -- one collective per
-        # group, not per block (identity in-process).
-        d_nwk = backend.reduce(d_nwk)
+        # SPMD "push": merge each half of the plan over the workers once
+        # per group (identity in-process).  The dense part -- the
+        # hybrid's [H, K] hot prefix, never padded to [V, K] -- sums
+        # elementwise and lands on the first H rows; the coordinate part
+        # stays compressed, the workers' buffers are concatenated and
+        # every entry scatter-applied once.  Int adds commute, so the
+        # merged counts are bitwise those of the dense formulation.
+        if plan.dense is not None:
+            d = backend.reduce(plan.dense)
+            h = d.shape[0]
+            if h < cfg.V:
+                nwk_dense = nwk_dense.at[:h, :].add(d)
+            else:
+                nwk_dense = nwk_dense + d
+        if plan.coo is not None:
+            c_rows, c_cols, c_vals = (backend.gather_concat(x)
+                                      for x in plan.coo)
+            if route.coo_kernel(cfg.use_kernels):
+                from repro.kernels import ops as kops
+                nwk_dense = nwk_dense + kops.delta_apply_coo(
+                    c_rows, c_cols, c_vals, cfg.V, cfg.K,
+                    interpret=cfg.kernel_interpret)
+            else:
+                safe = jnp.clip(c_rows, 0, cfg.V - 1)
+                nwk_dense = nwk_dense.at[safe, c_cols].add(c_vals)
         d_nk = backend.reduce(d_nk)
         # n_dk stays local: docs are owned by one worker (paper sec. 3).
 
         z_flat = jax.lax.dynamic_update_slice_in_dim(
             z_flat, z_new, grp * gtok, axis=0)
-        return (z_flat, ndk + d_ndk, nwk_dense + d_nwk, nk + d_nk), ()
+        return (z_flat, ndk + d_ndk, nwk_dense, nk + d_nk), ()
 
     keys = jax.random.split(key, n_groups)
     carry = (state.z, state.ndk, snapshot, nk_snap)
@@ -508,7 +545,16 @@ def make_executor(state: "lda.SamplerState", cfg: "lda.LDAConfig",
     Returns ``(step_fn, info)`` where ``step_fn(state, key) -> state`` and
     ``info`` describes the realised schedule (block geometry, effective
     staleness after divisor rounding, push route).
+
+    ``route="auto"`` / ``staleness="auto"`` on the config run the
+    ``ps.autotune`` pass against the *actual* state (word frequencies,
+    batch geometry, measured apply costs) here, before anything is
+    traced; the winning plan and its report land in ``info["autotune"]``.
     """
+    report = None
+    if exec_cfg.wants_autotune():
+        from repro.ps import autotune as _autotune
+        exec_cfg, report = _autotune.resolve_exec(state, cfg, exec_cfg)
     route = exec_cfg.resolve_route(cfg.V)
     if exec_cfg.model_blocks > 0:
         layout = state.nwk.layout
@@ -541,4 +587,6 @@ def make_executor(state: "lda.SamplerState", cfg: "lda.LDAConfig",
                 "token_cap": cfg.block_tokens,
                 "staleness_requested": exec_cfg.staleness,
                 "hot_words": exec_cfg.hot_words, "route": repr(route)}
+    if report is not None:
+        info["autotune"] = report
     return _obs_step(step, exec_cfg, info), info

@@ -1,0 +1,156 @@
+"""Route/staleness autotuner tests (repro/ps/autotune.py).
+
+The autotuner's contract: it only *selects* among routes and staleness
+bounds whose results are bitwise-identical by construction, so these
+tests check the selection machinery -- cost model consistency with
+``PushRoute.traffic()``, measurement plumbing, the ``"auto"`` resolution
+through ``make_executor``/``LDAJob`` -- never sampled values.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import ps
+from repro.ps import autotune
+
+
+def _zipf_words(n, v, seed=0, a=1.3):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray((rng.zipf(a, n) - 1).clip(0, v - 1).astype(np.int32))
+
+
+class TestCostModel:
+    def test_candidate_grid_shape(self):
+        cands = autotune.candidate_routes(2000)
+        labels = [r.label for r in cands]
+        assert labels[:2] == ["dense", "coo"]
+        hots = [r.hot_words for r in cands[2:]]
+        assert hots == [64, 128, 256, 512, 1024]  # powers of two < V
+
+    def test_hot_fraction_monotone(self):
+        freq = autotune.word_frequencies(_zipf_words(5000, 100), None, 100)
+        fr = [autotune.hot_fraction(freq, h) for h in (0, 1, 10, 100)]
+        assert fr[0] == 0.0 and fr[-1] == 1.0
+        assert all(a <= b for a, b in zip(fr, fr[1:]))
+
+    def test_predicted_cost_tracks_traffic(self):
+        """The model is a linear functional of traffic(): a hybrid whose
+        boundary captures all the mass must be predicted cheaper than
+        pure COO (its expected cold tail is empty), and pure dense must
+        cost exactly its cell count."""
+        v, k, b = 1000, 32, 512
+        freq = np.zeros(v, np.int64)
+        freq[:64] = 100                       # all mass in the hot prefix
+        dense_c = autotune.predicted_cost(ps.DenseRoute(), b, v, k, freq)
+        assert dense_c == v * k
+        hyb_c = autotune.predicted_cost(ps.HybridRoute(hot_words=64),
+                                        b, v, k, freq)
+        coo_c = autotune.predicted_cost(ps.CooRoute(), b, v, k, freq)
+        assert hyb_c < coo_c
+        assert hyb_c < dense_c
+
+    def test_sample_reassign_uses_word_mass(self):
+        w = _zipf_words(4000, 50)
+        re = autotune.sample_reassign(w, None, 256, 8, seed=1)
+        assert re.rows.shape == (256,)
+        assert bool(re.changed.all())
+        assert int(re.rows.max()) < 50
+        assert not bool((re.z_old == re.z_new).any())
+
+
+class TestMeasurement:
+    def test_autotune_route_returns_measured_report(self):
+        v, k = 60, 8
+        w = _zipf_words(3000, v)
+        route, report = autotune.autotune_route(w, None, v, k, batch=128,
+                                                iters=2)
+        labels = {r["route"] for r in report["measured"]}
+        assert {"dense", "coo"} <= labels       # references always timed
+        assert report["chosen_route"] == route.label
+        for row in report["measured"]:
+            assert row["apply_ms"] > 0 and row["plan_ms"] > 0
+            assert row["traffic"]["apply_entries"] >= 0
+
+    def test_observed_push_ms_roundtrip(self):
+        """Histograms the obs plane recorded under ps.push_ms.* surface
+        in the report."""
+        from repro import obs
+        s = obs.ObsSession(obs.ObsConfig(enabled=True)).install()
+        try:
+            reg = obs.metrics_registry()
+            reg.histogram("ps.push_ms.hybrid").record(1.5)
+            seen = autotune.observed_push_ms()
+            assert "hybrid" in seen and seen["hybrid"]["count"] == 1
+        finally:
+            s.close(save=False)
+
+
+class TestResolveExec:
+    def _job_state(self, route="auto", staleness="auto"):
+        from repro import api
+        from repro.data import corpus as corpus_mod
+        corp = corpus_mod.synthetic_corpus(60, 80, model_topics=6,
+                                           mean_doc_len=30, seed=0)
+        job = api.LDAJob(corpus=corp, num_topics=6, block_tokens=256,
+                         sweeps=1, eval_every=0, route=route,
+                         staleness=staleness)
+        sess = api.Session(job, log_fn=lambda *a, **kw: None)
+        state, _, _ = sess.make_step()
+        return sess.cfg, state, job.exec_config()
+
+    def test_resolve_exec_concretises_auto(self):
+        cfg, state, exec_cfg = self._job_state()
+        assert exec_cfg.wants_autotune()
+        concrete, report = __import__(
+            "repro.ps.autotune", fromlist=["resolve_exec"]).resolve_exec(
+            state, cfg, exec_cfg)
+        assert isinstance(concrete.route, ps.PushRoute)
+        assert isinstance(concrete.staleness, int)
+        assert not concrete.wants_autotune()
+        assert report["chosen"]["route"] == concrete.route.label
+        assert report["chosen"]["staleness"] == concrete.staleness
+        assert "route" in report and "staleness" in report
+
+    def test_make_executor_resolves_auto_and_reports(self):
+        from repro.train import async_exec
+        cfg, state, exec_cfg = self._job_state(route="auto", staleness=0)
+        step, info = async_exec.make_executor(state, cfg, exec_cfg)
+        assert "autotune" in info
+        assert info["autotune"]["chosen"]["staleness"] == 0
+        out = step(state, jax.random.PRNGKey(0))   # the step actually runs
+        assert out.z.shape == state.z.shape
+
+    def test_auto_choice_never_changes_values(self):
+        """Whatever the tuner picks, the sampled state is bitwise the
+        synchronous dense reference (routes/staleness are traffic-shape
+        only; staleness=0 candidates win or lose on speed alone, so pin
+        staleness and compare routes)."""
+        from repro.train import async_exec
+        cfg, state, exec_cfg = self._job_state(route="auto", staleness=0)
+        step_auto, _ = async_exec.make_executor(state, cfg, exec_cfg)
+        ref_cfg = dataclasses.replace(exec_cfg, route=ps.DenseRoute())
+        step_ref, _ = async_exec.make_executor(state, cfg, ref_cfg)
+        key = jax.random.PRNGKey(7)
+        a = step_auto(state, key)
+        b = step_ref(state, key)
+        np.testing.assert_array_equal(np.asarray(a.z), np.asarray(b.z))
+        np.testing.assert_array_equal(np.asarray(a.nwk.to_dense()),
+                                      np.asarray(b.nwk.to_dense()))
+
+    def test_stream_executor_rejects_auto(self):
+        from repro.train import async_exec
+        exec_cfg = async_exec.ExecConfig(route="auto")
+        with pytest.raises(ValueError, match="make_executor"):
+            exec_cfg.resolve_route(100)
+
+    def test_job_validation_gates_auto(self):
+        from repro import api
+        bad = api.LDAJob(stream_dir=".", route="auto")
+        assert any("in-memory" in p for p in bad.problems())
+        bad2 = api.LDAJob(docs=[[0, 1]], backend="spmd", staleness="auto")
+        assert any("in_process" in p for p in bad2.problems())
+        bad3 = api.LDAJob(docs=[[0, 1]], route="fastest")
+        assert any("'auto'" in p for p in bad3.problems())

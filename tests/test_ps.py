@@ -159,6 +159,167 @@ class TestRouteInvariance:
         assert isinstance(r, ps.HybridRoute) and r.hot_words == 10
 
 
+class TestHotWordBoundaries:
+    """Regression (ISSUE): ``HybridRoute.traffic()`` used to clamp
+    ``hot_words`` to ``[0, num_rows]`` while ``plan()`` branched on the
+    raw value -- the cost model and the executed plan could disagree at
+    the edges.  One hoisted clamp (``HybridRoute.clamped``) now feeds
+    both; every boundary value must produce the oracle delta through
+    ``MatrixHandle.push`` and a traffic dict consistent with the plan."""
+
+    V, K, B = 11, 5, 48
+
+    @pytest.mark.parametrize("hot", [-1, 0, 1, 10, 11, 12])
+    def test_boundary_push_matches_oracle(self, hot):
+        client = ps.PSClient.create(num_shards=3)
+        base = jax.random.randint(jax.random.PRNGKey(4), (self.V, self.K),
+                                  0, 40)
+        re = _reassign(self.V, self.K, self.B, seed=7)
+        want = np.asarray(base) + _oracle_delta(re, self.V, self.K)
+        route = ps.HybridRoute(hot_words=hot)
+        out = client.matrix_from_dense(base, route=route).push(re)
+        np.testing.assert_array_equal(np.asarray(out.to_dense()), want,
+                                      err_msg=f"hot_words={hot}")
+
+    @pytest.mark.parametrize("hot", [-1, 0, 1, 10, 11, 12])
+    def test_traffic_agrees_with_plan(self, hot):
+        """The clamp is hoisted: whatever traffic() says travels is what
+        plan() materialises (dense row count and COO capacity)."""
+        route = ps.HybridRoute(hot_words=hot)
+        re = _reassign(self.V, self.K, self.B, seed=8)
+        t = route.traffic(self.B, self.V, self.K)
+        plan = route.plan(re, self.V, self.K, prefix_rows=True)
+        dense_rows = 0 if plan.dense is None else plan.dense.shape[0]
+        coo_cap = 0 if plan.coo is None else plan.coo[0].shape[0]
+        assert t["dense_rows"] == dense_rows, f"hot_words={hot}"
+        assert t["coo_cap"] == coo_cap, f"hot_words={hot}"
+
+    @pytest.mark.parametrize("hot", [-1, 0, 1, 10, 11, 12])
+    def test_partitioned_push_matches_oracle(self, hot):
+        """Same boundaries through the pre-partitioned fast path."""
+        client = ps.PSClient.create(num_shards=3)
+        base = jax.random.randint(jax.random.PRNGKey(5), (self.V, self.K),
+                                  0, 40)
+        re = _reassign(self.V, self.K, self.B, seed=9)
+        want = np.asarray(base) + _oracle_delta(re, self.V, self.K)
+        route = ps.HybridRoute(hot_words=hot)
+        clamped = route.clamped(self.V)
+        re_p, hp = ps.partition_reassign(re, clamped)
+        out = client.matrix_from_dense(base, route=route).push(
+            re_p, hot_prefix=hp)
+        np.testing.assert_array_equal(np.asarray(out.to_dense()), want,
+                                      err_msg=f"hot_words={hot}")
+
+
+class TestPrefixDelta:
+    """The prefix-shaped ``RouteDelta`` wire format (the root fix for the
+    hybrid regression): the hot dense block travels as [H, K], never
+    padded to [V, K], and the partitioned cold buffer is sized to the
+    post-split tail."""
+
+    def test_hybrid_plan_dense_is_prefix_shaped(self):
+        v, k, hot = 40, 6, 9
+        re = _reassign(v, k, 32, seed=11)
+        plan = ps.HybridRoute(hot_words=hot).plan(re, v, k,
+                                                  prefix_rows=True)
+        assert plan.dense.shape == (hot, k)
+
+    def test_partitioned_cold_capacity_is_tail_sized(self):
+        v, k, b, hot = 40, 6, 32, 9
+        re = _reassign(v, k, b, seed=12)
+        re_p, hp = ps.partition_reassign(re, hot)
+        plan = ps.HybridRoute(hot_words=hot).plan(re_p, v, k,
+                                                  prefix_rows=True,
+                                                  hot_prefix=hp)
+        assert plan.dense.shape == (hot, k)
+        if hp == b:
+            assert plan.coo is None
+        else:
+            assert plan.coo[0].shape[0] == 2 * (b - hp)
+        # and the traffic dict says the same
+        t = ps.HybridRoute(hot_words=hot).traffic(b, v, k, hot_prefix=hp)
+        assert t["coo_cap"] == (0 if plan.coo is None
+                                else plan.coo[0].shape[0])
+
+    def test_block_delta_pads_back_to_full_width(self):
+        v, k, hot = 25, 4, 6
+        re = _reassign(v, k, 40, seed=13)
+        route = ps.HybridRoute(hot_words=hot)
+        full = np.asarray(route.block_delta(re, v, k, prefix_rows=True))
+        assert full.shape == (v, k)
+        np.testing.assert_array_equal(full, _oracle_delta(re, v, k))
+
+    def test_push_prefix_applies_to_leading_rows(self):
+        client = ps.PSClient.create(num_shards=3)
+        h = client.matrix_from_dense(jnp.zeros((10, 4), jnp.int32))
+        d = jnp.arange(12, dtype=jnp.int32).reshape(3, 4)
+        out = np.asarray(h.push_prefix(d).to_dense())
+        want = np.zeros((10, 4), np.int64)
+        want[:3] = np.asarray(d)
+        np.testing.assert_array_equal(out, want)
+
+    def test_understated_hot_prefix_is_still_exact(self):
+        """A *smaller* hot_prefix than the true hot count is legal: the
+        surplus hot tokens just ride the COO path (the trust contract
+        only forbids overstating)."""
+        v, k, b, hot = 30, 5, 24, 8
+        client = ps.PSClient.create(num_shards=2)
+        re = _reassign(v, k, b, seed=14)
+        re_p, hp = ps.partition_reassign(re, hot)
+        want = _oracle_delta(re, v, k)
+        route = ps.HybridRoute(hot_words=hot)
+        for hp_use in {0, hp // 2, hp}:
+            out = client.matrix(v, k).with_route(route).push(
+                re_p, hot_prefix=hp_use)
+            np.testing.assert_array_equal(np.asarray(out.to_dense()), want,
+                                          err_msg=f"hot_prefix={hp_use}")
+
+
+class TestRouteInvarianceRandom:
+    """Property-style sweep: on random batches every route (and the
+    partitioned hybrid) lands bitwise on the oracle.  Runs seeded cases
+    always; widens via hypothesis when it is installed."""
+
+    def _check(self, v, k, b, hot, seed):
+        re = _reassign(v, k, b, seed=seed)
+        want = _oracle_delta(re, v, k)
+        client = ps.PSClient.create(num_shards=3)
+        for route in (ps.DenseRoute(), ps.CooRoute(),
+                      ps.HybridRoute(hot_words=hot)):
+            out = client.matrix(v, k).with_route(route).push(re)
+            np.testing.assert_array_equal(
+                np.asarray(out.to_dense()), want,
+                err_msg=f"route {route!r} v={v} k={k} b={b} seed={seed}")
+        route = ps.HybridRoute(hot_words=hot)
+        re_p, hp = ps.partition_reassign(re, route.clamped(v))
+        out = client.matrix(v, k).with_route(route).push(re_p,
+                                                         hot_prefix=hp)
+        np.testing.assert_array_equal(
+            np.asarray(out.to_dense()), want,
+            err_msg=f"partitioned hybrid v={v} k={k} b={b} hot={hot}")
+
+    @pytest.mark.parametrize("seed", range(6))
+    def test_fixed_seeds(self, seed):
+        rng = np.random.default_rng(1000 + seed)
+        v = int(rng.integers(3, 60))
+        k = int(rng.integers(2, 17))
+        b = int(rng.integers(1, 96))
+        hot = int(rng.integers(-2, v + 3))
+        self._check(v, k, b, hot, seed)
+
+    def test_hypothesis_widening(self):
+        pytest.importorskip("hypothesis", reason="hypothesis not installed")
+        from hypothesis import given, settings, strategies as st
+
+        @given(st.integers(3, 60), st.integers(2, 17), st.integers(1, 96),
+               st.integers(-2, 70), st.integers(0, 10_000))
+        @settings(max_examples=25, deadline=None)
+        def run(v, k, b, hot, seed):
+            self._check(v, k, b, min(hot, v + 2), seed)
+
+        run()
+
+
 class TestPushCooPaddingInvariant:
     """Regression: raw ``DistributedMatrix.push_sparse`` trusts its row
     ids; the client layer must mask padded logical ids >= num_rows, which
@@ -280,6 +441,48 @@ class TestBackendParity:
         got = np.asarray(fn(base, stacked))
         np.testing.assert_array_equal(got, want,
                                       err_msg=f"route {route!r}")
+
+    def test_spmd_partitioned_hybrid_matches_in_process(self):
+        """The prefix-delta SPMD path: each worker pushes its own
+        pre-partitioned batch with a (common, understated-safe)
+        hot_prefix; the prefix dense psums, the COO buffers all-gather,
+        and every replica lands on the in-process result bitwise."""
+        from repro.sharding.compat import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        v, k, hot = 19, 6, 5
+        n_dev = jax.device_count()
+        route = ps.HybridRoute(hot_words=hot)
+        base = jax.random.randint(jax.random.PRNGKey(3), (v, k), 0, 30)
+        batches = [_reassign(v, k, 24, seed=40 + i) for i in range(n_dev)]
+        parts = [ps.partition_reassign(re, hot) for re in batches]
+        # shard_map runs ONE program, so the static hot_prefix must be
+        # uniform: the min over workers is always safe (surplus hot
+        # tokens ride the COO path, see TestPrefixDelta)
+        hp = min(p[1] for p in parts)
+
+        want = None
+        h0 = ps.PSClient.create(num_shards=2).matrix_from_dense(
+            base, route=route)
+        for re_p, _ in parts:
+            h0 = h0.push(re_p, hot_prefix=hp)
+        want = np.asarray(h0.to_dense())
+
+        mesh = jax.make_mesh((n_dev,), ("x",))
+        client = ps.PSClient.create(num_shards=2, axis_name="x")
+
+        def worker(base_rep, re):
+            re = jax.tree.map(lambda a: a[0], re)
+            h = client.matrix_from_dense(base_rep, route=route)
+            return h.push(re, hot_prefix=hp).to_dense()
+
+        stacked = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *[p[0] for p in parts])
+        fn = shard_map(worker, mesh=mesh,
+                       in_specs=(P(), P("x", None)), out_specs=P(),
+                       check_vma=False)
+        got = np.asarray(fn(base, stacked))
+        np.testing.assert_array_equal(got, want)
 
     def test_model_sharded_pull_all(self):
         """pull_all on a model-sharded handle all-gathers the cyclic rows

@@ -1,0 +1,209 @@
+"""Tiered-storage benchmark: vocabulary past the device budget.
+
+The claim under test is the tentpole's: with ``storage="tiered"`` a model
+whose full ``[V, K]`` table is >= 8x a device byte budget trains end to
+end while the device never holds more than the budget -- a hot-row cache
+(``ps/tiered.py``) over the host memmap cold tier -- and, because word
+traffic is Zipfian, >= 90% of changed assignments land on device-resident
+rows.
+
+Protocol:
+  * geometry: full table ``V*K*4`` bytes == 8x the device budget; the
+    hot tier (``hot_rows*K*4``) plus the executor's two block pull
+    buffers must fit inside the budget;
+  * child process (clean RSS, same technique as bench_stream): draw a
+    Zipf(1.5) corpus, train ``APSLDA(job).fit()`` with
+    ``storage="tiered"`` and obs metrics on, sample VmRSS throughout,
+    then report the ``ps.tier.*`` / ``exec.tiered.device_table_bytes``
+    gauges from metrics.jsonl as one JSON line;
+  * parent asserts the acceptance gates: table >= 8x budget, peak
+    device-table bytes <= budget, hit rate >= 0.9.
+
+Writes ``experiments/bench/BENCH_tiered.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import subprocess
+import sys
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+OUT = "experiments/bench/BENCH_tiered.json"
+MiB = 2 ** 20
+
+
+def _rss_bytes() -> int:
+    """Current VmRSS from /proc (Linux); 0 when unavailable."""
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmRSS"):
+                    return int(line.split()[1]) * 1024
+    except OSError:
+        pass
+    return 0
+
+
+def _zipf_docs(rng: np.random.Generator, total_tokens: int,
+               vocab: int) -> list:
+    """Zipf(1.5) word ids split into ~192-token docs.
+
+    ``corpus_from_docs`` re-ranks ids by frequency afterwards (the
+    section-3.2 contract), so the hottest rows end up as the id prefix
+    -- exactly the rows the tier makes resident first."""
+    ids = np.empty(0, np.int64)
+    while ids.size < total_tokens:
+        draw = rng.zipf(1.5, size=2 * total_tokens)
+        ids = np.concatenate([ids, draw[draw <= vocab] - 1])
+    ids = ids[:total_tokens].astype(np.int32)
+    lens = rng.integers(128, 256, size=total_tokens // 128 + 1)
+    cuts = np.cumsum(lens)
+    return [d for d in np.split(ids, cuts[cuts < total_tokens])
+            if d.size > 0]
+
+
+def _child_main(workdir: str, budget: int, vocab: int, topics: int,
+                hot: int, blocks: int, sweeps: int,
+                total_tokens: int) -> None:
+    """The measured process: tiered fit + gauge harvest, one JSON line."""
+    from repro import api
+    from repro.obs import ObsConfig
+    from repro.obs.metrics import load_jsonl
+
+    rng = np.random.default_rng(0)
+    docs = _zipf_docs(rng, total_tokens, vocab)
+    n_tokens = int(sum(d.size for d in docs))
+
+    peak = {"rss": _rss_bytes()}
+    stop = threading.Event()
+
+    def _sample() -> None:
+        while not stop.is_set():
+            peak["rss"] = max(peak["rss"], _rss_bytes())
+            stop.wait(0.05)
+
+    sampler = threading.Thread(target=_sample, daemon=True)
+    sampler.start()
+
+    obs_dir = os.path.join(workdir, "obs")
+    job = api.LDAJob(
+        docs=docs, num_topics=topics, vocab_size=vocab,
+        storage="tiered", hot_rows=hot, model_blocks=blocks,
+        tier_dir=os.path.join(workdir, "tier"),
+        sweeps=sweeps, eval_every=0, seed=0,
+        obs=ObsConfig(enabled=True, out_dir=obs_dir, trace=False,
+                      metrics=True))
+    t0 = time.time()
+    api.APSLDA(job).fit()
+    dt = time.time() - t0
+    stop.set()
+    sampler.join(timeout=1.0)
+
+    gauges = {m["name"]: m.get("value")
+              for m in load_jsonl(os.path.join(obs_dir, "metrics.jsonl"))
+              if m.get("kind") == "gauge"}
+    print(json.dumps({
+        "tokens": n_tokens * sweeps,
+        "seconds": dt,
+        "tokens_per_s": n_tokens * sweeps / dt,
+        "peak_rss_bytes": peak["rss"],
+        "hit_rate": gauges.get("ps.tier.hit_rate"),
+        "hot_rows": gauges.get("ps.tier.hot_rows"),
+        "tier_device_bytes": gauges.get("ps.tier.device_bytes"),
+        "device_table_bytes": gauges.get("exec.tiered.device_table_bytes"),
+        "evictions": gauges.get("ps.tier.evictions"),
+    }))
+
+
+def _run_child(workdir: str, budget: int, geom: dict) -> dict:
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src")]
+        + [p for p in env.get("PYTHONPATH", "").split(os.pathsep) if p])
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_tiered",
+         "--child", workdir, "--budget", str(budget),
+         "--vocab", str(geom["vocab"]), "--topics", str(geom["topics"]),
+         "--hot", str(geom["hot"]), "--blocks", str(geom["blocks"]),
+         "--sweeps", str(geom["sweeps"]), "--tokens", str(geom["tokens"])],
+        env=env, capture_output=True, text=True, cwd=root)
+    if out.returncode != 0:
+        sys.stderr.write(out.stdout + out.stderr)
+        raise RuntimeError("tiered child failed")
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def main(fast: bool = False) -> None:
+    if fast:
+        geom = {"vocab": 32768, "topics": 32, "hot": 2048, "blocks": 64,
+                "sweeps": 2, "tokens": 96_000}
+        budget = MiB // 2
+    else:
+        geom = {"vocab": 65536, "topics": 64, "hot": 4096, "blocks": 64,
+                "sweeps": 3, "tokens": 384_000}
+        budget = 2 * MiB
+    table_bytes = geom["vocab"] * geom["topics"] * 4
+    print(f"tiered,table,{table_bytes / MiB:.1f},MiB,budget,"
+          f"{budget / MiB:.2f},MiB,table_over_budget,"
+          f"{table_bytes / budget:.1f}x,hot_rows,{geom['hot']}")
+    assert table_bytes >= 8 * budget, (table_bytes, budget)
+
+    work = tempfile.mkdtemp(prefix="bench_tiered_")
+    try:
+        child = _run_child(work, budget, geom)
+        dev = child["device_table_bytes"]
+        hit = child["hit_rate"]
+        print(f"tiered,train,{child['tokens_per_s']:,.0f},tok_per_s,"
+              f"peak_rss,{child['peak_rss_bytes'] / MiB:.0f},MiB")
+        print(f"tiered,device_table,{dev / MiB:.2f},MiB,"
+              f"over_budget,{dev / budget:.2f}x,"
+              f"hit_rate,{hit:.3f},evictions,{int(child['evictions'])}")
+
+        os.makedirs(os.path.dirname(OUT), exist_ok=True)
+        with open(OUT, "w") as f:
+            json.dump({
+                "config": dict(geom, budget_bytes=budget,
+                               table_bytes=table_bytes),
+                "table_over_budget_x": table_bytes / budget,
+                "device_table_bytes": dev,
+                "device_over_budget_x": dev / budget,
+                "hit_rate": hit,
+                "evictions": child["evictions"],
+                "tokens_per_s": child["tokens_per_s"],
+                "peak_rss_bytes": child["peak_rss_bytes"],
+            }, f, indent=2)
+        print(f"tiered,wrote,{OUT}")
+
+        assert dev is not None and dev <= budget, (
+            f"device table {dev} bytes exceeds the {budget} byte budget")
+        assert hit is not None and hit >= 0.9, (
+            f"tier hit rate {hit} below the 0.9 acceptance bar")
+    finally:
+        shutil.rmtree(work, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--child", default="")
+    ap.add_argument("--budget", type=int, default=0)
+    ap.add_argument("--vocab", type=int, default=32768)
+    ap.add_argument("--topics", type=int, default=32)
+    ap.add_argument("--hot", type=int, default=2048)
+    ap.add_argument("--blocks", type=int, default=64)
+    ap.add_argument("--sweeps", type=int, default=2)
+    ap.add_argument("--tokens", type=int, default=96_000)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.child:
+        _child_main(args.child, args.budget, args.vocab, args.topics,
+                    args.hot, args.blocks, args.sweeps, args.tokens)
+    else:
+        main(fast=not args.full)

@@ -14,6 +14,9 @@
                MatrixHandle.push (emits BENCH_ps.json)
   stream       out-of-core loader: tokens/sec + peak RSS streaming a
                corpus >= 4x the loader budget (emits BENCH_stream.json)
+  tiered       tiered parameter storage: train a table >= 8x the device
+               budget, gate device bytes + hit rate (emits
+               BENCH_tiered.json)
   obs          telemetry plane: disabled-mode overhead bar (<1%) + a
                fully traced train/push/serve demo summarised by
                obs_report (emits BENCH_obs.json)
@@ -32,7 +35,7 @@ import traceback
 from benchmarks import (bench_async, bench_comm, bench_convergence,
                         bench_infer, bench_kernels, bench_loadbalance,
                         bench_obs, bench_ps, bench_roofline, bench_stream,
-                        bench_table1)
+                        bench_table1, bench_tiered)
 
 MODULES = {
     "table1": bench_table1.main,
@@ -46,6 +49,7 @@ MODULES = {
     "ps": bench_ps.main,
     "stream": bench_stream.main,
     "obs": bench_obs.main,
+    "tiered": bench_tiered.main,
 }
 
 

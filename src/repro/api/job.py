@@ -94,6 +94,16 @@ class LDAJob:
     ``staleness``/``model_blocks``/``route`` are the asynchronous
     executor's knobs (``train.async_exec.ExecConfig``); ``hot_words`` is
     the legacy scalar mapped through ``ps.route_for``.
+
+    Storage: ``"dense"`` keeps the whole ``[V, K]`` count table device-
+    resident; ``"tiered"`` keeps only the ``hot_rows`` hottest rows on
+    device over a host memmap cold tier (``repro.ps.tiered`` -- the
+    vocabulary-past-device-memory axis).  ``hot_rows=None`` auto-sizes
+    the hot tier from the corpus word frequencies
+    (``ps.autotune.size_hot_rows``); ``tier_dir`` is the cold store's
+    directory (None: a temporary directory, deleted with the process);
+    ``tier_refresh`` is the sweep cadence of residency refresh (0:
+    never).
     """
 
     # --- data source (exactly one) ---
@@ -125,6 +135,12 @@ class LDAJob:
     hot_words: Optional[int] = None
     max_shards: Optional[int] = None      # streamed: stop after N visits
     prefetch: bool = True                 # streamed: double-buffered loader
+
+    # --- parameter storage (repro.ps.tiered) ---
+    storage: str = "dense"                # "dense" | "tiered"
+    hot_rows: Optional[int] = None        # tiered: device rows (None: auto)
+    tier_dir: Optional[str] = None        # tiered: cold-store dir (None: tmp)
+    tier_refresh: int = 1                 # tiered: refresh cadence (sweeps)
 
     # --- policies ---
     checkpoint: CheckpointPolicy = CheckpointPolicy()
@@ -255,6 +271,50 @@ class LDAJob:
                        "holds the resumable z state, paper section 3.5); "
                        "for in-memory runs restore via "
                        "train.checkpoint.restore_lda")
+        if self.storage not in ("dense", "tiered"):
+            out.append(f"storage must be 'dense' or 'tiered' (got "
+                       f"{self.storage!r})")
+        elif self.storage == "tiered":
+            if self.backend != IN_PROCESS:
+                out.append("storage='tiered' is in_process-only (the tiered "
+                           "store is the single-process scale-up axis, the "
+                           "SPMD backend the scale-out one); use "
+                           "backend='in_process'")
+            if self.num_shards != 1:
+                out.append(f"storage='tiered' requires num_shards=1 (got "
+                           f"{self.num_shards}); the cold memmap holds the "
+                           "whole table, there is nothing to shard")
+            if self.source_kind != "memory":
+                out.append("storage='tiered' needs an in-memory source "
+                           "(corpus= or docs=); the streamed trainer keeps "
+                           "its own device-resident model")
+            if self.route == "auto" or self.staleness == "auto":
+                out.append("storage='tiered' does not support route/"
+                           "staleness 'auto' (the autotuner measures "
+                           "against dense in-memory handles); pass "
+                           "concrete values")
+            if self.model_blocks < 1:
+                out.append(f"storage='tiered' requires the blocked executor "
+                           f"-- set model_blocks >= 1 (e.g. 64; got "
+                           f"{self.model_blocks}); pulling the full [V, K] "
+                           "snapshot would defeat the tiering")
+            if self.checkpoint.path:
+                out.append("checkpointing tiered storage is not supported "
+                           "yet; drop checkpoint= (the cold store under "
+                           "tier_dir persists the table itself)")
+            if self.hot_rows is not None and self.hot_rows < 0:
+                out.append(f"hot_rows must be >= 0 (got {self.hot_rows}); "
+                           "or omit it to auto-size from word frequencies")
+            if self.tier_refresh < 0:
+                out.append(f"tier_refresh must be >= 0 (got "
+                           f"{self.tier_refresh}; 0 disables residency "
+                           "refresh)")
+        if self.storage == "dense":
+            for knob, val in (("hot_rows", self.hot_rows),
+                              ("tier_dir", self.tier_dir)):
+                if val is not None:
+                    out.append(f"{knob}= only applies to storage='tiered' "
+                               f"(got {knob}={val!r} with storage='dense')")
         if self.eval_every < 0:
             out.append(f"eval_every must be >= 0 (got {self.eval_every}; "
                        "0 disables evaluation)")

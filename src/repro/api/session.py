@@ -350,6 +350,120 @@ class _MemoryPlane:
 
 
 # ---------------------------------------------------------------------------
+# Plane 1b: in-memory corpus over tiered parameter storage (ps.tiered).
+# ---------------------------------------------------------------------------
+
+class _TieredPlane(_MemoryPlane):
+    """The memory plane with the count table in tiered storage: the
+    ``hot_rows`` hottest rows device-resident, the full ``[V, K]`` table
+    in a host memmap cold store (``repro.ps.tiered``, DESIGN.md s. 13).
+
+    Differences from ``_MemoryPlane``, all confined to setup/teardown:
+    the initial ``n_wk`` is histogrammed *host-side* straight into the
+    cold store (the full table never lands on device -- the point of the
+    plane), the executor is ``make_tiered_executor``'s host-driven
+    blocked loop, and ``finish`` flushes the cold store and reports the
+    tier's hit rate.  The visit protocol, eval and RNG discipline are
+    inherited -- a sweep key chain of ``key, sub = split(key)`` exactly
+    like the dense memory plane.
+    """
+
+    kind = "tiered"
+
+    def __init__(self, corp, cfg, exec_cfg, sweeps, job, log_fn=print):
+        super().__init__(cfg, exec_cfg, None, None, sweeps, log_fn)
+        self.corp = corp
+        self.job = job
+        self.tier_dir: Optional[str] = None
+
+    def setup(self):
+        if self._ready:
+            return
+        self._ready = True
+        import tempfile
+
+        from repro.ps import autotune as _autotune
+        from repro.ps import tiered as tiered_mod
+
+        cfg, corp, job = self.cfg, self.corp, self.job
+        key = jax.random.PRNGKey(job.seed)
+
+        # token arrays + z init, padded exactly like lda.init_state
+        w = jnp.asarray(corp.w)
+        d = jnp.asarray(corp.d)
+        n = int(w.shape[0])
+        pad = (-n) % cfg.block_tokens
+        z = jax.random.randint(key, (n,), 0, cfg.K, dtype=jnp.int32)
+        w = jnp.concatenate([w.astype(jnp.int32),
+                             jnp.zeros((pad,), jnp.int32)])
+        d = jnp.concatenate([d.astype(jnp.int32),
+                             jnp.zeros((pad,), jnp.int32)])
+        z = jnp.concatenate([z, jnp.zeros((pad,), jnp.int32)])
+        valid = jnp.concatenate([jnp.ones((n,), bool),
+                                 jnp.zeros((pad,), bool)])
+        doc_len = jnp.zeros((corp.num_docs,), jnp.int32).at[d[:n]].add(1)
+        doc_start = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                     jnp.cumsum(doc_len)[:-1]])
+
+        # counts: n_wk histogrammed host-side straight into the cold
+        # store (the full [V, K] never materialises on device); n_k and
+        # n_dk are small and build on device like rebuild_counts
+        w_np, z_np = np.asarray(w[:n]), np.asarray(z[:n])
+        nwk_np = np.zeros((cfg.V, cfg.K), np.int32)
+        np.add.at(nwk_np, (w_np, z_np), 1)
+        one = valid.astype(jnp.int32)
+        nk = jnp.zeros((cfg.K,), jnp.int32).at[z].add(one)
+        ndk = jnp.zeros((corp.num_docs, cfg.K), jnp.int32).at[d, z].add(one)
+
+        hot_rows = job.hot_rows
+        if hot_rows is None:
+            freq = _autotune.word_frequencies(w_np, None, cfg.V)
+            hot_rows = _autotune.size_hot_rows(freq, cfg.K)
+        self.tier_dir = job.tier_dir or tempfile.mkdtemp(
+            prefix="repro-tier-")
+        client = ps.PSClient(backend=tiered_mod.TieredBackend(),
+                             interpret=cfg.kernel_interpret)
+        nwk = tiered_mod.tiered_matrix_from_dense(
+            nwk_np, hot_rows, self.tier_dir,
+            route=self.exec_cfg.resolve_route(cfg.V), client=client)
+        self.state = lda.SamplerState(w, d, z, valid, doc_start, doc_len,
+                                      nwk, client.wrap_vector(nk), ndk)
+        _, self.key = jax.random.split(key)
+
+        self.step_fn, info = async_exec.make_tiered_executor(
+            self.state, cfg, self.exec_cfg,
+            refresh_every=job.tier_refresh,
+            auto_resize=(job.hot_rows is None))
+        self.info = dict(info, storage="tiered", tier_dir=self.tier_dir)
+        tier = nwk.tier
+        self.log_fn(
+            f"[lda] tiered storage: hot {tier.hot_rows} / {cfg.V} rows "
+            f"({tier.device_bytes() / 2**20:.2f} MiB device) over cold "
+            f"memmap {tier.cold.nbytes / 2**20:.1f} MiB at "
+            f"{self.tier_dir}; {info['n_blocks']} blocks x "
+            f"{info['rows_per_block']} rows, route {info['route']}")
+        self.num_tokens = int(jnp.sum(valid))
+        self.t0 = time.time()
+
+    def checkpoint(self, view, path: str):
+        raise ValueError("checkpointing tiered storage is not supported "
+                         "yet; the cold store under tier_dir persists the "
+                         "count table itself (and TopicModel.save the "
+                         "frozen model)")
+
+    def finish(self, stopped: bool):
+        st = self.state
+        st.nwk.flush()
+        s = st.nwk.tier_stats()
+        self.log_fn(
+            f"[lda] tier: hit rate {s.hit_rate():.3f} "
+            f"({s.hits}/{s.hits + s.misses} changed assignments "
+            f"device-local), {s.promotions} promotions, {s.evictions} "
+            f"evictions, H2D {s.h2d_bytes / 2**20:.1f} MiB, D2H "
+            f"{s.d2h_bytes / 2**20:.1f} MiB")
+
+
+# ---------------------------------------------------------------------------
 # Plane 2: on-disk shard stream, in-process backend (the old
 # fit_lda_stream).
 # ---------------------------------------------------------------------------
@@ -955,6 +1069,9 @@ class Session:
                                          seed=job.seed,
                                          mesh_model=job.mesh_model,
                                          log_fn=self.log_fn)
+            elif job.storage == "tiered":
+                self._plane = _TieredPlane(corp, cfg, exec_cfg, job.sweeps,
+                                           job, log_fn=self.log_fn)
             else:
                 key = jax.random.PRNGKey(job.seed)
                 state = lda.init_state(key, jnp.asarray(corp.w),
@@ -992,7 +1109,8 @@ class Session:
         ev = None
         if self.job.eval_every:
             ev = EvalCallback(every=self.job.eval_every,
-                              include_last=plane.kind in ("memory", "spmd"),
+                              include_last=plane.kind in ("memory", "tiered",
+                                                          "spmd"),
                               log_fn=self.log_fn)
             cbs.append(ev)
         cbs.extend(callbacks)
@@ -1012,7 +1130,7 @@ class Session:
         ``(state, step_fn, info)`` with ``step_fn(state, key) -> state``
         the compiled executor, so timing loops drive it directly."""
         plane = self._ensure_plane()
-        if plane.kind != "memory":
+        if plane.kind not in ("memory", "tiered"):
             raise ValueError(
                 "make_step() exposes the in-memory in-process executor "
                 "only; drive other planes through run()")

@@ -90,6 +90,19 @@ class CyclicLayout:
         phys = np.arange(self.pad_rows)
         return (phys % self.rows_per_shard) * self.num_shards + phys // self.rows_per_shard
 
+    def block_rows(self, block, rows_per_block: int) -> np.ndarray:
+        """Logical row ids covered by physical block ``block`` of
+        ``rows_per_block`` physical rows (host-side numpy; padding rows at
+        or past ``num_rows`` are dropped).  With one shard physical ==
+        logical, so the block is the contiguous id range -- the geometry
+        the tiered store's block pulls/write-backs rely on."""
+        start = int(block) * int(rows_per_block)
+        phys = np.arange(start, min(start + int(rows_per_block),
+                                    self.pad_rows))
+        logical = ((phys % self.rows_per_shard) * self.num_shards
+                   + phys // self.rows_per_shard)
+        return logical[logical < self.num_rows]
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass

@@ -150,8 +150,19 @@ class SnapshotPublisher:
     def publish_view(self, view: "ps.ReadOnlyView",
                      nk: "ps.VectorHandle") -> Snapshot:
         """Publish from a read-only snapshot view of the training handles
-        (the sanctioned serving-side read: pull, never push)."""
+        (the sanctioned serving-side read: pull, never push).
+
+        Storage-agnostic: for a tiered handle (``ps.TieredMatrixHandle``)
+        ``to_dense`` composes hot device rows over the memmap cold tier,
+        so the published model is the same bitwise table a single-tier
+        handle would yield.  When the view is tiered the pull span is
+        annotated with the tier geometry and hit rate at publish time.
+        """
         with _obs.span("snapshot.pull", cat="snapshot") as sp:
+            stats_fn = getattr(view.handle, "tier_stats", None)
+            if stats_fn is not None:
+                sp.set(tier_hot_rows=view.handle.tier.hot_rows,
+                       tier_hit_rate=round(stats_fn().hit_rate(), 4))
             dense = sp.sync_on(view.to_dense())
             nk_val = nk.pull_all().result()
         return self.publish(dense, nk_val)

@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python -m repro.launch.obs_report experiments/obs
 
-Four sections, each skipped gracefully when its inputs are absent:
+Five sections, each skipped gracefully when its inputs are absent:
 
   * **top spans** -- wall time by span name (count / total / mean / max),
     from the Chrome-trace ``"ph": "X"`` events;
@@ -14,6 +14,10 @@ Four sections, each skipped gracefully when its inputs are absent:
     spans: calls, mean ms, and the traffic shape the route planned
     (dense bytes vs COO bytes), paper section 3.3's dense/hybrid/COO
     trade made measurable;
+  * **tiered storage** -- residency state of the device hot-row cache
+    (``ps.tier.*`` gauges) and the H2D cost of cold misses
+    (``tier.miss_fetch`` spans), present only for ``storage="tiered"``
+    runs;
   * **serving latency** -- p50/p90/p95/p99 for every ``serve.*`` (and any
     other) histogram in the metrics dump -- the SLO view over
     ``QueryEngine`` requests.
@@ -103,6 +107,33 @@ def route_rows(events: List[dict]) -> List[dict]:
     return rows
 
 
+def tier_stats_rows(events: List[dict],
+                    metrics: List[dict]) -> Optional[dict]:
+    """Tiered-storage summary: miss-fetch traffic + ps.tier.* gauges.
+
+    ``tier.miss_fetch`` spans carry the H2D bytes paid per cold pull;
+    the ``ps.tier.*`` gauges carry the last observed residency state
+    (hit rate, hot rows, device bytes, evictions).  None when the run
+    never touched tiered storage.
+    """
+    fetches = [ev for ev in events
+               if ev.get("ph") == "X" and ev.get("name") == "tier.miss_fetch"]
+    gauges = {m["name"]: m.get("value") for m in metrics
+              if m.get("kind") == "gauge"
+              and m.get("name", "").startswith("ps.tier.")}
+    if not fetches and not gauges:
+        return None
+    return {
+        "fetches": len(fetches),
+        "fetch_ms": sum(ev.get("dur", 0.0) for ev in fetches) / 1e3,
+        "fetch_rows": sum(ev.get("args", {}).get("rows", 0)
+                          for ev in fetches),
+        "h2d_bytes": sum(ev.get("args", {}).get("h2d_bytes", 0)
+                         for ev in fetches),
+        "gauges": gauges,
+    }
+
+
 def latency_rows(metrics: List[dict]) -> List[dict]:
     """Every histogram's percentile summary (serve.* first)."""
     rows = [m for m in metrics if m.get("kind") == "histogram"
@@ -150,6 +181,30 @@ def render(trace_dir: str, trace_file: str = "trace.json",
                        f"{_fmt_ms(r['mean_ms'])} {r['batch']:>10} "
                        f"{_fmt_bytes(r['dense_bytes']):>14} "
                        f"{_fmt_bytes(r['coo_bytes']):>14}")
+
+    tier = tier_stats_rows(events, metrics)
+    if tier is not None:
+        out += ["", "tiered storage (device hot rows over host memmap)"]
+        g = tier["gauges"]
+        if g:
+            hit = g.get("ps.tier.hit_rate")
+            parts = []
+            if hit is not None:
+                parts.append(f"hit_rate={hit:.3f}")
+            if "ps.tier.hot_rows" in g:
+                parts.append(f"hot_rows={int(g['ps.tier.hot_rows'])}")
+            if "ps.tier.device_bytes" in g:
+                parts.append(
+                    f"device={_fmt_bytes(g['ps.tier.device_bytes']).strip()}")
+            if "ps.tier.evictions" in g:
+                parts.append(f"evictions={int(g['ps.tier.evictions'])}")
+            out.append("  " + "  ".join(parts))
+        if tier["fetches"]:
+            out.append(
+                f"  miss fetches: {tier['fetches']} "
+                f"({tier['fetch_rows']} rows, "
+                f"{_fmt_bytes(tier['h2d_bytes']).strip()} H2D, "
+                f"{tier['fetch_ms']:.1f} ms total)")
 
     lats = latency_rows(metrics)
     if lats:

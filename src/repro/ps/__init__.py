@@ -10,24 +10,32 @@ The single sanctioned gateway to the distributed count tables:
 
 Routes (``DenseRoute`` / ``CooRoute`` / ``HybridRoute``) make the paper's
 section-3.3 hybrid push a declarative policy; backends
-(``InProcessBackend`` / ``SpmdBackend``) swap the collectives without
-touching call sites.  ``core/pserver.py`` remains the storage layer
+(``InProcessBackend`` / ``SpmdBackend`` / ``TieredBackend``) swap the
+collectives -- and, for the tiered backend, the storage substrate itself
+(device hot-row cache over a host memmap cold tier, ``repro.ps.tiered``)
+-- without touching call sites.  ``core/pserver.py`` remains the storage layer
 underneath -- constructing ``DistributedMatrix`` / ``DistributedVector``
 directly outside this package is deprecated (CI-gated).
 """
 from repro.ps.backend import Backend, InProcessBackend, SpmdBackend
 from repro.ps.client import (MatrixHandle, PSClient, PullHandle,
                              ReadOnlyView, VectorHandle, client_for)
+from repro.ps.coldstore import ColdStore
 from repro.ps.routes import (CooRoute, DenseRoute, HybridRoute, PushRoute,
-                             Reassign, RouteDelta, partition_reassign,
-                             route_for)
+                             Reassign, RouteDelta, partition_by_mask,
+                             partition_reassign, route_for)
+from repro.ps.tiered import (TieredBackend, TieredMatrix,
+                             TieredMatrixHandle, TierStats,
+                             tiered_matrix_from_dense)
 from repro.ps import autotune
 
 __all__ = [
-    "Backend", "InProcessBackend", "SpmdBackend",
+    "Backend", "InProcessBackend", "SpmdBackend", "TieredBackend",
     "MatrixHandle", "PSClient", "PullHandle", "ReadOnlyView",
     "VectorHandle", "client_for",
+    "ColdStore", "TieredMatrix", "TieredMatrixHandle", "TierStats",
+    "tiered_matrix_from_dense",
     "CooRoute", "DenseRoute", "HybridRoute", "PushRoute", "Reassign",
-    "RouteDelta", "partition_reassign", "route_for",
+    "RouteDelta", "partition_by_mask", "partition_reassign", "route_for",
     "autotune",
 ]

@@ -332,3 +332,52 @@ def resolve_exec(state, cfg, exec_cfg):
     concrete = dataclasses.replace(exec_cfg, route=plan.route,
                                    staleness=plan.staleness)
     return concrete, plan.report
+
+
+# ---------------------------------------------------------------------------
+# Tiered-storage hot-tier sizing (repro.ps.tiered).
+# ---------------------------------------------------------------------------
+
+def size_hot_rows(freq: np.ndarray, num_topics: int, *,
+                  budget_bytes: Optional[int] = None,
+                  target_mass: float = 0.95, min_rows: int = 64) -> int:
+    """Initial hot-tier capacity H from the workload's word frequencies.
+
+    Same logic as ranking hybrid boundaries, applied to residency: under
+    frequency ordering the cumulative token mass of the id prefix is the
+    *expected hit rate* of a prefix-resident hot tier, so H is the
+    smallest prefix whose mass reaches ``target_mass`` -- then clamped to
+    ``[min_rows, V]`` and (when given) to the device byte budget
+    (``H * K * 4 <= budget_bytes``).
+    """
+    freq = np.asarray(freq, np.int64)
+    v = int(freq.size)
+    total = int(freq.sum())
+    if total == 0:
+        h = min_rows
+    else:
+        mass = np.cumsum(freq, dtype=np.float64) / total
+        h = int(np.searchsorted(mass, float(target_mass)) + 1)
+    h = min(max(h, min_rows), v)
+    if budget_bytes is not None:
+        h = min(h, max(int(budget_bytes) // (int(num_topics) * 4), 0))
+    return h
+
+
+def retune_hot_rows(current: int, hit_rate: float, *, vocab_size: int,
+                    target: float = 0.9,
+                    budget_bytes: Optional[int] = None,
+                    num_topics: Optional[int] = None) -> int:
+    """Re-size H from the *measured* traffic hit rate (the tiered
+    executor's periodic retune): below target, double the hot tier
+    (promotion fills it with the observed-hottest rows); at or above,
+    keep it -- shrinking would only churn residency for no win.  Clamped
+    to the vocabulary and the byte budget like ``size_hot_rows``.
+    """
+    h = int(current)
+    if hit_rate < target:
+        h = max(2 * h, 64)
+    h = min(h, int(vocab_size))
+    if budget_bytes is not None and num_topics:
+        h = min(h, max(int(budget_bytes) // (int(num_topics) * 4), 0))
+    return h

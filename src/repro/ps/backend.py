@@ -12,24 +12,64 @@ routes, handles) is backend-agnostic:
   * ``localize``   -- keep only this server shard's rows of a full
     physical matrix (the write-back half of a sharded push).
 
-``InProcessBackend`` is the single-device functional-update backend: one
-process holds the whole matrix, every moment is the identity.
-``SpmdBackend`` is the pod backend: it runs under ``shard_map`` and maps
-the three moments onto hardware collectives -- ``all_gather`` over the
-model (server) axis for pulls, ``psum`` over the worker axes for pushes,
-and a dynamic row-slice for localisation.  Both are frozen dataclasses so
-they can ride in a handle's static pytree metadata (and hence through
-``jit``/``scan`` carries).
+``Backend`` itself is a ``typing.Protocol`` -- the formal contract a new
+substrate must satisfy (and the thing the conformance test in
+tests/test_ps.py parametrises over).  ``InProcessBackend`` is the
+single-device functional-update backend: one process holds the whole
+matrix, every moment is the identity.  ``SpmdBackend`` is the pod
+backend: it runs under ``shard_map`` and maps the three moments onto
+hardware collectives -- ``all_gather`` over the model (server) axis for
+pulls, ``psum`` over the worker axes for pushes, and a dynamic row-slice
+for localisation.  ``repro.ps.tiered.TieredBackend`` is the third
+implementation: a device hot-row cache over a host memmap cold tier,
+where the moments are identities (one process) but storage is split
+across tiers.  All are frozen dataclasses so they can ride in a handle's
+static pytree metadata (and hence through ``jit``/``scan`` carries).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple, Union
+from typing import Optional, Protocol, Tuple, Union, runtime_checkable
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.pserver import DistributedMatrix
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """The backend contract: the collective moments of the pull/push
+    protocol, plus the two axis names that tell handles which collectives
+    are live (both None on single-process backends).
+
+    ``isinstance(obj, Backend)`` checks structural conformance at runtime
+    (methods by presence); the conformance *test* additionally checks the
+    identity/merge semantics each moment must satisfy.
+    """
+
+    axis_name: Optional[Union[str, Tuple[str, ...]]]
+    model_axis: Optional[str]
+
+    def pull_full(self, storage: DistributedMatrix) -> DistributedMatrix:
+        """Materialise the full physical matrix from this worker's view
+        (the paper's snapshot pull, section 2.3)."""
+        ...
+
+    def reduce(self, delta: jax.Array) -> jax.Array:
+        """Combine all workers' dense push deltas exactly once
+        (sections 2.4-2.5)."""
+        ...
+
+    def gather_concat(self, x: jax.Array) -> jax.Array:
+        """Concatenate all workers' COO buffers along axis 0 (the
+        coordinate analogue of ``reduce``)."""
+        ...
+
+    def localize(self, full: DistributedMatrix) -> DistributedMatrix:
+        """Keep only this server shard's rows of a full physical matrix
+        (the write-back half of a sharded push)."""
+        ...
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,6 +143,3 @@ class SpmdBackend:
         local = jax.lax.dynamic_slice_in_dim(full.value, sidx * rps, rps,
                                              axis=0)
         return dataclasses.replace(full, value=local)
-
-
-Backend = Union[InProcessBackend, SpmdBackend]

@@ -450,6 +450,20 @@ class PSClient:
             storage = DistributedMatrix(value, num_rows, self.num_shards)
         return MatrixHandle(storage, self, route)
 
+    def tiered_matrix_from_dense(self, dense: jax.Array, hot_rows: int,
+                                 path: str, *,
+                                 route: PushRoute = DenseRoute()):
+        """Wrap a dense logical matrix in tiered storage: the full table
+        lands in a host memmap cold store at ``path`` and the top
+        ``hot_rows`` rows are promoted into a device hot tier
+        (``repro.ps.tiered``).  Single-shard only -- the tiered store is
+        the in-process scale-up axis, the SPMD backend the scale-out one.
+        """
+        from repro.ps.tiered import tiered_matrix_from_dense
+        assert self.num_shards == 1, "tiered storage is single-shard"
+        return tiered_matrix_from_dense(dense, hot_rows, path, route=route,
+                                        client=self)
+
     # --- vector factories -------------------------------------------------
     def vector(self, n: int, dtype=jnp.int32) -> VectorHandle:
         return VectorHandle(DistributedVector.zeros(n, dtype), self)

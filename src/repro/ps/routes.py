@@ -95,6 +95,25 @@ def _dense_delta(rows, z_old, z_new, amount, num_rows: int, num_topics: int,
             .at[idx].add(vals).reshape(num_rows, num_topics))
 
 
+def partition_by_mask(re: Reassign, keep) -> Tuple[Reassign, int]:
+    """Host-side stable partition of a batch by an arbitrary membership
+    mask: tokens with ``keep[i]`` True come first.
+
+    Returns ``(reordered, prefix)`` where ``prefix`` is the static count
+    of leading kept tokens.  This is ``partition_reassign`` generalised
+    from the id-prefix boundary (``word < hot_words``) to any membership
+    predicate -- the tiered store partitions on *residency* (is the row
+    currently in the device hot tier?), which under refresh is a set, not
+    a prefix.  Reordering never changes the applied delta: scatter-adds
+    commute.
+    """
+    import numpy as np
+    keep = np.asarray(keep, dtype=bool)
+    order = np.argsort(~keep, kind="stable")
+    re2 = Reassign(*[jnp.asarray(np.asarray(x)[order]) for x in re])
+    return re2, int(keep.sum())
+
+
 def partition_reassign(re: Reassign, hot_words: int
                        ) -> Tuple[Reassign, int]:
     """Host-side stable partition of a batch at the hot/cold boundary.
@@ -110,11 +129,7 @@ def partition_reassign(re: Reassign, hot_words: int
     never changes the applied delta: scatter-adds commute.
     """
     import numpy as np
-    w = np.asarray(re.words)
-    hot = w < hot_words
-    order = np.argsort(~hot, kind="stable")
-    re2 = Reassign(*[jnp.asarray(np.asarray(x)[order]) for x in re])
-    return re2, int(hot.sum())
+    return partition_by_mask(re, np.asarray(re.words) < hot_words)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,565 @@
+"""Tiered parameter storage: device hot-row cache over a host cold tier.
+
+The paper's web-scale claim ("135x more data and 10x more topics") needs
+the model to outgrow device memory: LightLDA keeps only the hot slice of
+the count table near the sampler and streams the long tail.  This module
+is that storage layer for the PS client API:
+
+  * the **hot tier** is a device-resident ``[H, K]`` int32 block holding
+    the ``H`` currently-hottest rows under an explicit logical->physical
+    row map (``slot_of`` / ``ids``): logical row ``r`` lives in hot slot
+    ``slot_of[r]`` when resident, and slot ``s`` holds logical row
+    ``ids[s]``;
+  * the **cold tier** is a host ``np.memmap`` holding the full ``[V, K]``
+    table (``repro.ps.coldstore.ColdStore``, same atomic-manifest
+    discipline as ``data/stream.py``).
+
+Ownership contract (what makes composition exact): a *resident* row's
+authoritative value is its hot-tier slot -- its memmap copy is stale and
+is only rewritten at eviction (the D2H write-back).  A non-resident row
+lives solely in the memmap.  The composed table is therefore::
+
+    compose(r) = hot[slot_of[r]]  if slot_of[r] >= 0 else  cold[r]
+
+and because every update on either tier is an exact int32 copy or add,
+``compose`` equals the single-tier oracle table bitwise after ANY
+schedule of pulls, pushes, promotions and evictions -- the invariant
+tests/test_tiered.py asserts.
+
+Miss path: a pull touching cold rows reads them from the memmap and
+issues the H2D copy immediately -- the returned ``PullHandle`` is the
+same issue -> overlap -> await future as every other pull, so the
+executor's double-buffered prefetch hides the transfer (a cache miss is
+just a slower pull, exactly the asynchrony the paper's PS exists to
+hide).  Misses are traced as ``tier.miss_fetch`` spans carrying the H2D
+byte count.
+
+Refresh policy: pushes bump a per-row traffic counter (the per-push
+``PushRoute.traffic()`` dicts / obs counters aggregated per row);
+``refresh()`` promotes the top-H rows by observed traffic and evicts the
+rest (stable ordering, lowest id wins ties), then decays the counters so
+the window tracks the recent workload.  ``ps/autotune.py`` sizes H from
+frequency mass and re-sizes it from the measured hit rate.
+
+The obs plane sees ``ps.tier.hit_rate`` / ``ps.tier.evictions`` /
+``ps.tier.hot_rows`` / ``ps.tier.device_bytes`` gauges and
+``tier.miss_fetch`` / ``tier.refresh`` spans; ``repro.launch.obs_report``
+renders them as the tier section.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs as _obs
+from repro.core.pserver import CyclicLayout, DistributedMatrix
+from repro.ps.coldstore import ColdStore
+from repro.ps.routes import (DenseRoute, PushRoute, Reassign, RouteDelta,
+                             _dense_delta)
+
+
+@dataclasses.dataclass(frozen=True)
+class TieredBackend:
+    """Backend moments for the tiered store (conforms to ``ps.Backend``).
+
+    One process owns both tiers, so all four moments are identities --
+    the tiering happens *below* the backend protocol, in how the handle
+    services pulls and pushes.  Frozen/hashable like the other backends
+    so it can sit in a client's static metadata.
+    """
+
+    axis_name = None
+    model_axis = None
+
+    def pull_full(self, storage: DistributedMatrix) -> DistributedMatrix:
+        return storage
+
+    def reduce(self, delta: jax.Array) -> jax.Array:
+        return delta
+
+    def gather_concat(self, x: jax.Array) -> jax.Array:
+        return x
+
+    def localize(self, full: DistributedMatrix) -> DistributedMatrix:
+        return full
+
+
+@dataclasses.dataclass
+class TierStats:
+    """Running tier telemetry.
+
+    ``hits``/``misses`` count *push-traffic entries* (changed topic
+    reassignments) landing on resident vs cold rows -- the traffic-mass
+    hit rate the refresh policy optimises.  (Block pulls touch every row
+    uniformly, so a row-uniform rate would be pinned at H/V no matter how
+    good the residency set is; traffic weighting measures what actually
+    matters: how much of the *update* stream stays device-local.)
+    ``pull_hits``/``pull_misses`` count pulled rows by residency;
+    ``h2d_bytes``/``d2h_bytes`` the cross-tier transfer volume.
+    """
+
+    hits: int = 0
+    misses: int = 0
+    pull_hits: int = 0
+    pull_misses: int = 0
+    promotions: int = 0
+    evictions: int = 0
+    refreshes: int = 0
+    h2d_bytes: int = 0
+    d2h_bytes: int = 0
+
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return (self.hits / total) if total else 1.0
+
+    def to_json(self) -> dict:
+        return dict(dataclasses.asdict(self), hit_rate=self.hit_rate())
+
+
+class TieredMatrix:
+    """The two-tier count table (mutable host object; NOT a pytree).
+
+    Holds the hot device block, the cold memmap store, the row maps and
+    the traffic counters.  Deliberately not jit-traceable: the cold tier
+    is host state, so tiered training runs the *eager* blocked executor
+    (``train.async_exec.make_tiered_executor``), which jits the per-block
+    math and drives the tiers from the host loop.
+    """
+
+    def __init__(self, cold: ColdStore, hot_rows: int,
+                 resident: Optional[np.ndarray] = None):
+        self.cold = cold
+        self.num_rows = cold.num_rows
+        self.cols = cold.cols
+        # THE clamp (mirrors HybridRoute.clamped): every consumer sees
+        # the same effective H in [0, num_rows]
+        self.hot_rows = min(max(int(hot_rows), 0), self.num_rows)
+        self.traffic = np.zeros(self.num_rows, np.int64)
+        self.stats = TierStats()
+        self._init_residency(resident)
+
+    def _init_residency(self, resident: Optional[np.ndarray]) -> None:
+        h, k = self.hot_rows, self.cols
+        self.slot_of = np.full(self.num_rows, -1, np.int64)
+        self.ids = np.full(h, -1, np.int64)
+        if h == 0:
+            self.hot = jnp.zeros((0, k), jnp.int32)
+            return
+        if resident is None:
+            # frequency-ordered ids (the section-3.2 contract) make the
+            # id prefix the right initial guess; refresh adapts it
+            resident = np.arange(h, dtype=np.int64)
+        rows = np.unique(np.asarray(resident, np.int64))[:h]
+        self.ids[: rows.size] = rows
+        self.slot_of[rows] = np.arange(rows.size)
+        vals = self.cold.read_rows(rows)
+        if rows.size < h:
+            vals = np.pad(vals, ((0, h - rows.size), (0, 0)))
+        self.hot = jnp.asarray(vals)          # the promotion H2D
+        self.stats.h2d_bytes += int(vals.nbytes)
+        self.stats.promotions += int(rows.size)
+
+    # -- geometry ----------------------------------------------------------
+    @property
+    def shape(self):
+        return (self.num_rows, self.cols)
+
+    def device_bytes(self) -> int:
+        """Bytes of count table resident on device (the hot block)."""
+        return int(self.hot.size) * 4
+
+    # -- composition (pull side) -------------------------------------------
+    def compose_rows(self, rows: np.ndarray) -> jax.Array:
+        """The composed value of the given logical rows, [B, K] on device.
+
+        Resident rows gather from the hot block (device-local); cold rows
+        read from the memmap with the H2D issued immediately (the miss
+        path).  The compose itself is exact copies, never arithmetic.
+        """
+        rows = np.asarray(rows, np.int64)
+        slots = self.slot_of[rows]
+        res = slots >= 0
+        n_cold = int(rows.size - res.sum())
+        self.stats.pull_hits += int(res.sum())
+        self.stats.pull_misses += n_cold
+        if n_cold == 0:
+            return jnp.take(self.hot, jnp.asarray(slots), axis=0)
+        cold_np = self.cold.read_rows(rows[~res])
+        with _obs.span("tier.miss_fetch", cat="ps", rows=n_cold,
+                       h2d_bytes=int(cold_np.nbytes)):
+            cold_dev = jnp.asarray(cold_np)   # H2D in flight from here
+        self.stats.h2d_bytes += int(cold_np.nbytes)
+        if n_cold == rows.size:
+            return cold_dev
+        out = jnp.zeros((rows.size, self.cols), jnp.int32)
+        out = out.at[jnp.asarray(np.nonzero(res)[0])].set(
+            jnp.take(self.hot, jnp.asarray(slots[res]), axis=0))
+        return out.at[jnp.asarray(np.nonzero(~res)[0])].set(cold_dev)
+
+    def to_dense(self) -> jax.Array:
+        """The full composed [V, K] table (materialises host-side first;
+        this is the snapshot/freeze path, not the training hot path)."""
+        base = self.cold.to_array()
+        mask = self.ids >= 0
+        if mask.any():
+            base[self.ids[mask]] = np.asarray(self.hot)[mask]  # D2H
+        return jnp.asarray(base)
+
+    # -- writes (push side) ------------------------------------------------
+    def note_traffic(self, rows: np.ndarray, counts: np.ndarray) -> None:
+        """Account per-row push traffic (changed-reassignment counts):
+        feeds both the refresh policy and the hit/miss stats."""
+        rows = np.asarray(rows, np.int64)
+        counts = np.asarray(counts, np.int64)
+        np.add.at(self.traffic, rows, counts)
+        res = self.slot_of[rows] >= 0
+        self.stats.hits += int(counts[res].sum())
+        self.stats.misses += int(counts[~res].sum())
+
+    def store_rows(self, rows: np.ndarray, values: jax.Array,
+                   changed: Optional[np.ndarray] = None) -> None:
+        """Overwrite logical ``rows`` with ``values`` (device [B, K]) --
+        the exclusive-owner write-back (``store_block`` semantics).
+
+        Resident rows land in the hot block on device; cold rows are
+        copied D2H into the memmap.  ``changed`` (host bool [B]) limits
+        the cold write-back to rows that actually changed -- unchanged
+        rows carry a zero delta, so skipping them is bitwise free and
+        saves the D2H for the untouched tail.
+        """
+        rows = np.asarray(rows, np.int64)
+        slots = self.slot_of[rows]
+        res = slots >= 0
+        if res.any():
+            self.hot = self.hot.at[jnp.asarray(slots[res])].set(
+                jnp.take(values, jnp.asarray(np.nonzero(res)[0]), axis=0))
+        cold = ~res
+        if changed is not None:
+            cold = cold & np.asarray(changed, bool)
+        if cold.any():
+            vals = np.asarray(jnp.take(
+                values, jnp.asarray(np.nonzero(cold)[0]), axis=0))  # D2H
+            self.cold.write_rows(rows[cold], vals)
+            self.stats.d2h_bytes += int(vals.nbytes)
+
+    def push_reassign(self, re: Reassign) -> None:
+        """Apply a reassignment batch split on *residency*: resident
+        entries aggregate into a dense device delta in slot space (the
+        hot half of PR 7's ``partition_reassign`` split, with the tier's
+        residency set as the boundary); cold entries apply host-side as
+        COO triples into the memmap."""
+        w = np.asarray(re.words, np.int64)
+        changed = np.asarray(re.changed, bool)
+        z_old = np.asarray(re.z_old)
+        z_new = np.asarray(re.z_new)
+        self.note_traffic(w[changed], np.ones(int(changed.sum()), np.int64))
+        slots = self.slot_of[np.clip(w, 0, self.num_rows - 1)]
+        res = (slots >= 0) & (w < self.num_rows)
+        hot_m = res & changed
+        if hot_m.any():
+            d_hot = _dense_delta(
+                jnp.asarray(np.where(res, slots, 0)), jnp.asarray(z_old),
+                jnp.asarray(z_new), jnp.asarray(hot_m), self.hot_rows,
+                self.cols, use_kernels=False, interpret=None)
+            self.hot = self.hot + d_hot
+        cold_m = (~res) & changed & (w < self.num_rows)
+        if cold_m.any():
+            r = w[cold_m]
+            self.cold.apply_coo(np.concatenate([r, r]),
+                                np.concatenate([z_old[cold_m],
+                                                z_new[cold_m]]),
+                                np.concatenate([-np.ones(r.size, np.int32),
+                                                np.ones(r.size, np.int32)]))
+
+    def push_coo(self, rows, cols, vals) -> None:
+        """Coordinate deltas split on residency (resident -> device
+        scatter in slot space, cold -> host ``np.add.at``); out-of-range
+        rows are value-0 no-ops (the client's padding contract)."""
+        r = np.asarray(rows, np.int64)
+        c = np.asarray(cols, np.int64)
+        v = np.asarray(vals, np.int32)
+        ok = (r >= 0) & (r < self.num_rows)
+        slots = self.slot_of[np.where(ok, r, 0)]
+        res = ok & (slots >= 0)
+        if res.any():
+            self.hot = self.hot.at[
+                jnp.asarray(np.where(res, slots, 0)),
+                jnp.asarray(c)].add(jnp.asarray(np.where(res, v, 0)))
+        cold = ok & ~res
+        if cold.any():
+            self.cold.apply_coo(r[cold], c[cold], v[cold])
+
+    # -- residency management ----------------------------------------------
+    def refresh(self, decay: bool = True) -> dict:
+        """Promote/evict so the hot tier holds the top-H rows by observed
+        push traffic.  Deterministic: stable sort, lowest id wins ties.
+        Evictions write the authoritative hot value back to the memmap
+        (D2H) before the slot is reused; promotions read the memmap value
+        up (H2D).  Both are exact copies -- composition is unchanged.
+        """
+        h = self.hot_rows
+        sp = _obs.span("tier.refresh", cat="ps")
+        n_evict = n_promote = 0
+        if 0 < h < self.num_rows:
+            target = np.argsort(-self.traffic, kind="stable")[:h]
+            in_target = np.zeros(self.num_rows, bool)
+            in_target[target] = True
+            resident = self.ids[self.ids >= 0]
+            evict = resident[~in_target[resident]]
+            if evict.size:
+                slots_e = self.slot_of[evict]
+                vals = np.asarray(jnp.take(self.hot, jnp.asarray(slots_e),
+                                           axis=0))           # D2H
+                self.cold.write_rows(evict, vals)
+                self.slot_of[evict] = -1
+                self.ids[slots_e] = -1
+                self.stats.d2h_bytes += int(vals.nbytes)
+                n_evict = int(evict.size)
+            promote = target[self.slot_of[target] < 0]
+            free = np.nonzero(self.ids < 0)[0]
+            promote = promote[: free.size]
+            if promote.size:
+                vals = self.cold.read_rows(promote)
+                self.hot = self.hot.at[jnp.asarray(free[: promote.size])
+                                       ].set(jnp.asarray(vals))   # H2D
+                self.ids[free[: promote.size]] = promote
+                self.slot_of[promote] = free[: promote.size]
+                self.stats.h2d_bytes += int(vals.nbytes)
+                n_promote = int(promote.size)
+        self.stats.evictions += n_evict
+        self.stats.promotions += n_promote
+        self.stats.refreshes += 1
+        if decay:
+            self.traffic //= 2    # recent pushes dominate the next window
+        self.publish_gauges()
+        if sp is not _obs.NULL_SPAN:
+            sp.set(evicted=n_evict, promoted=n_promote,
+                   hit_rate=round(self.stats.hit_rate(), 4))
+            sp.end()
+        return {"evicted": n_evict, "promoted": n_promote}
+
+    def resize(self, hot_rows: int) -> None:
+        """Re-size the hot tier (the autotuner's hit-rate-driven knob):
+        write every resident row back, reallocate, promote the top rows
+        by traffic into the new capacity."""
+        resident = self.ids[self.ids >= 0]
+        if resident.size:
+            vals = np.asarray(jnp.take(
+                self.hot, jnp.asarray(self.slot_of[resident]), axis=0))
+            self.cold.write_rows(resident, vals)
+            self.stats.d2h_bytes += int(vals.nbytes)
+            self.stats.evictions += int(resident.size)
+        self.hot_rows = min(max(int(hot_rows), 0), self.num_rows)
+        target = np.argsort(-self.traffic, kind="stable")[: self.hot_rows]
+        self._init_residency(np.sort(target))
+        self.publish_gauges()
+
+    # -- obs ---------------------------------------------------------------
+    def publish_gauges(self) -> None:
+        reg = _obs.metrics_registry()
+        if reg is None:
+            return
+        reg.gauge("ps.tier.hit_rate").set(self.stats.hit_rate())
+        reg.gauge("ps.tier.evictions").set(float(self.stats.evictions))
+        reg.gauge("ps.tier.hot_rows").set(float(self.hot_rows))
+        reg.gauge("ps.tier.device_bytes").set(float(self.device_bytes()))
+
+    # -- lifecycle ---------------------------------------------------------
+    def flush(self) -> None:
+        """Write every resident row's authoritative value back to the
+        memmap (without evicting) and flush it -- after this the cold
+        tier alone equals the composed table on disk."""
+        resident = self.ids[self.ids >= 0]
+        if resident.size:
+            vals = np.asarray(jnp.take(
+                self.hot, jnp.asarray(self.slot_of[resident]), axis=0))
+            self.cold.write_rows(resident, vals)
+            self.stats.d2h_bytes += int(vals.nbytes)
+        self.cold.flush()
+
+    def __repr__(self):
+        return (f"TieredMatrix(V={self.num_rows}, K={self.cols}, "
+                f"H={self.hot_rows}, hit_rate="
+                f"{self.stats.hit_rate():.3f})")
+
+
+class TieredMatrixHandle:
+    """Client handle over a ``TieredMatrix``, mirroring ``MatrixHandle``.
+
+    Duck-typed to the ``MatrixHandle`` read/write surface (``pull`` /
+    ``pull_block`` / ``pull_all`` / ``push`` / ``push_coo`` /
+    ``store_block`` / ``to_dense`` / ``read_view``) so everything built
+    on handles -- ``SnapshotPublisher.publish_view``, the session result,
+    perplexity eval -- composes the two tiers without knowing they exist.
+    Mutating calls update the underlying tier *and return the handle*, so
+    both the functional idiom (``h = h.push(re)``) and the mutable one
+    work.  Not a pytree: tiered handles drive the eager executor
+    (``make_tiered_executor``), never jit carries.
+    """
+
+    def __init__(self, tier: TieredMatrix, client, route: PushRoute):
+        self.tier = tier
+        self.client = client
+        self.route = route
+
+    # -- storage mirror ----------------------------------------------------
+    @property
+    def num_rows(self) -> int:
+        return self.tier.num_rows
+
+    @property
+    def cols(self) -> int:
+        return self.tier.cols
+
+    @property
+    def num_shards(self) -> int:
+        return 1
+
+    @property
+    def layout(self) -> CyclicLayout:
+        # one logical shard: physical == logical, so block b covers the
+        # contiguous id range [b*rpb, (b+1)*rpb)
+        return CyclicLayout(self.tier.num_rows, 1)
+
+    def with_route(self, route: PushRoute) -> "TieredMatrixHandle":
+        self.route = route
+        return self
+
+    def tier_stats(self) -> TierStats:
+        return self.tier.stats
+
+    # -- pulls -------------------------------------------------------------
+    def pull(self, rows):
+        from repro.ps.client import PullHandle
+        return PullHandle(self.tier.compose_rows(np.asarray(rows)))
+
+    def pull_block(self, block, rows_per_block: int):
+        from repro.ps.client import PullHandle
+        start = int(block) * int(rows_per_block)
+        rows = np.arange(start, min(start + int(rows_per_block),
+                                    self.tier.num_rows))
+        return PullHandle(self.tier.compose_rows(rows))
+
+    def pull_all(self):
+        from repro.ps.client import PullHandle
+        return PullHandle(self.tier.to_dense())
+
+    def to_dense(self) -> jax.Array:
+        return self.tier.to_dense()
+
+    def num_blocks(self, rows_per_block: int) -> int:
+        return -(-self.layout.pad_rows // int(rows_per_block))
+
+    def block_logical_rows(self, block, rows_per_block: int):
+        return self.layout.block_rows(block, rows_per_block)
+
+    # -- pushes ------------------------------------------------------------
+    def push(self, re: Reassign, *, use_kernels: bool = False,
+             interpret: Optional[bool] = None,
+             hot_prefix: Optional[int] = None) -> "TieredMatrixHandle":
+        """Push a reassignment batch, split on tier residency (the tier
+        boundary supersedes the route's hot/cold id boundary -- residency
+        IS the hot set here).  Traced as a ``ps.push`` span labelled
+        ``tiered`` with the route's traffic dict, like every push."""
+        sp = _obs.span("ps.push", cat="ps")
+        if sp is not _obs.NULL_SPAN:
+            batch = int(re.rows.shape[0])
+            sp.set(route="tiered", batch=batch,
+                   **self.route.traffic(batch, self.num_rows, self.cols,
+                                        hot_prefix=hot_prefix))
+        self.tier.push_reassign(re)
+        if sp is not _obs.NULL_SPAN:
+            sp.sync_on(self.tier.hot)
+            ms = sp.end()
+            reg = _obs.metrics_registry()
+            if reg is not None:
+                reg.histogram("ps.push_ms.tiered").record(ms)
+                reg.counter("ps.push_count.tiered").inc()
+        return self
+
+    def push_plan(self, plan: RouteDelta, *, use_kernel: bool = False,
+                  interpret: Optional[bool] = None) -> "TieredMatrixHandle":
+        """Apply an already-planned ``RouteDelta``: the prefix-dense part
+        lands on the leading logical rows, the COO part splits on
+        residency (same contract as ``MatrixHandle.push_plan``)."""
+        if plan.dense is not None:
+            h = int(plan.dense.shape[0])
+            rows = np.arange(min(h, self.num_rows))
+            cur = self.tier.compose_rows(rows)
+            self.tier.store_rows(rows, cur + plan.dense[: rows.size])
+        if plan.coo is not None:
+            self.push_coo(*plan.coo)
+        return self
+
+    def push_coo(self, rows, cols, vals, *, use_kernel: bool = False,
+                 interpret: Optional[bool] = None) -> "TieredMatrixHandle":
+        self.tier.push_coo(np.asarray(rows), np.asarray(cols),
+                           np.asarray(vals))
+        return self
+
+    def store_block(self, block, rows: jax.Array, rows_per_block: int,
+                    row_changed: Optional[np.ndarray] = None
+                    ) -> "TieredMatrixHandle":
+        """Write back an exclusively-owned block (the executor's merge).
+        ``row_changed`` (host bool) skips the cold-tier D2H for rows the
+        block left untouched -- bitwise free, since their delta is 0."""
+        start = int(block) * int(rows_per_block)
+        ids = np.arange(start, min(start + int(rows_per_block),
+                                   self.tier.num_rows))
+        self.tier.store_rows(
+            ids, rows[: ids.size],
+            None if row_changed is None else row_changed[: ids.size])
+        return self
+
+    def note_traffic(self, block, rows_per_block: int,
+                     row_traffic: np.ndarray) -> None:
+        """Feed one block's per-row changed-counts into the refresh
+        policy's traffic window (and the hit/miss accounting)."""
+        start = int(block) * int(rows_per_block)
+        ids = np.arange(start, min(start + int(rows_per_block),
+                                   self.tier.num_rows))
+        self.tier.note_traffic(ids, np.asarray(row_traffic)[: ids.size])
+
+    # -- residency / lifecycle --------------------------------------------
+    def refresh(self, decay: bool = True) -> "TieredMatrixHandle":
+        self.tier.refresh(decay=decay)
+        return self
+
+    def resize_hot(self, hot_rows: int) -> "TieredMatrixHandle":
+        self.tier.resize(hot_rows)
+        return self
+
+    def localize(self) -> "TieredMatrixHandle":
+        return self
+
+    def read_view(self):
+        from repro.ps.client import ReadOnlyView
+        return ReadOnlyView(self)
+
+    def flush(self) -> None:
+        self.tier.flush()
+
+    def __repr__(self):
+        return f"TieredMatrixHandle({self.tier!r}, route={self.route!r})"
+
+
+def tiered_matrix_from_dense(dense, hot_rows: int, path: str, *,
+                             route: Optional[PushRoute] = None,
+                             client=None,
+                             resident: Optional[np.ndarray] = None
+                             ) -> TieredMatrixHandle:
+    """Build a tiered handle holding ``dense`` ([V, K] counts): the full
+    table lands in a new ``ColdStore`` at ``path`` and the top rows are
+    promoted into a fresh device hot tier.  The sanctioned construction
+    point (also reachable as ``PSClient.tiered_matrix_from_dense``)."""
+    from repro.ps.client import PSClient
+    cold = ColdStore.from_dense(path, dense)
+    tier = TieredMatrix(cold, hot_rows, resident=resident)
+    tier.publish_gauges()
+    if client is None:
+        client = PSClient(backend=TieredBackend())
+    return TieredMatrixHandle(tier, client, route or DenseRoute())

@@ -590,3 +590,175 @@ def make_executor(state: "lda.SamplerState", cfg: "lda.LDAConfig",
     if report is not None:
         info["autotune"] = report
     return _obs_step(step, exec_cfg, info), info
+
+
+# ---------------------------------------------------------------------------
+# Tiered executor: blocked schedule over ps.tiered storage (DESIGN.md s. 13).
+# ---------------------------------------------------------------------------
+
+def make_tiered_executor(state: "lda.SamplerState", cfg: "lda.LDAConfig",
+                         exec_cfg: ExecConfig, *, refresh_every: int = 1,
+                         hot_budget_bytes: Optional[int] = None,
+                         auto_resize: bool = False):
+    """Build the one-sweep step for a state whose ``nwk`` is a
+    ``ps.TieredMatrixHandle`` (device hot-row cache over a host memmap).
+
+    Same blocked schedule as ``pipelined_sweep`` at staleness 0 -- pull a
+    model block, resample its tokens against block-start counts, write
+    the owned rows back -- but driven from a *host* loop: the tier's
+    residency maps and cold memmap are host state, so the handle cannot
+    ride a jitted scan carry.  The per-block math is one jitted inner
+    step (bit-for-bit the group body of ``pipelined_sweep``); the host
+    loop supplies the asynchrony the paper's PS promises -- block ``b+1``'s
+    tier pull (including any cold-tier H2D misses) is issued *before*
+    block ``b`` samples, so the miss path hides behind the MH chain.
+    Exact, not approximate: blocks own disjoint rows, so the in-flight
+    pull cannot be invalidated by the write-back racing it.
+
+    Token index: per-block id lists padded to power-of-two capacities
+    (the jit retraces once per distinct capacity).  Under the Zipf +
+    frequency-ordering workload the block sizes span orders of magnitude,
+    so per-block capacities cost a handful of traces where a uniform cap
+    (sized by the hottest block) would pad ~40x the real token count.
+
+    After each sweep the observed per-row push traffic drives the tier's
+    ``refresh()`` every ``refresh_every`` sweeps (0: never), and -- when
+    ``auto_resize`` -- ``ps.autotune.retune_hot_rows`` grows the hot tier
+    while the measured hit rate is below target (bounded by
+    ``hot_budget_bytes``).  Returns ``(step_fn, info)`` like
+    ``make_executor``.
+    """
+    from repro.ps.tiered import TieredMatrixHandle
+
+    nwk = state.nwk
+    assert isinstance(nwk, TieredMatrixHandle), (
+        "make_tiered_executor needs a ps.TieredMatrixHandle state "
+        "(build one via PSClient.tiered_matrix_from_dense)")
+    if exec_cfg.wants_autotune():
+        raise ValueError(
+            "route='auto'/staleness='auto' are not supported with tiered "
+            "storage: the autotuner measures against dense in-memory "
+            "handles; pass concrete values (api.job validates this).")
+    if exec_cfg.model_blocks <= 0:
+        raise ValueError(
+            "tiered storage requires the blocked executor (the whole "
+            "point is never materialising [V, K] on device): set "
+            "ExecConfig.model_blocks > 0.")
+    route = exec_cfg.resolve_route(cfg.V)
+    layout = nwk.layout
+    rpb, n_blocks, _ = blocked_geometry(layout, exec_cfg.model_blocks, 0)
+
+    # --- host-side token index: per-block ids, power-of-two caps ---
+    w_np = np.asarray(state.w)
+    tok = np.nonzero(np.asarray(state.valid))[0]
+    blk = w_np[tok] // rpb            # one shard: physical == logical
+    order = np.argsort(blk, kind="stable")
+    tok, blk = tok[order], blk[order]
+    starts = np.searchsorted(blk, np.arange(n_blocks + 1))
+    index = []
+    for b in range(n_blocks):
+        ids = tok[starts[b]: starts[b + 1]]
+        if ids.size == 0:
+            index.append(None)
+            continue
+        cap = max(128, 1 << (int(ids.size) - 1).bit_length())
+        idx = np.zeros(cap, np.int32)
+        idx[: ids.size] = ids
+        bval = np.zeros(cap, bool)
+        bval[: ids.size] = True
+        index.append((jnp.asarray(idx), jnp.asarray(bval)))
+
+    w_dev, d_dev = state.w, state.d
+    doc_start, doc_len = state.doc_start, state.doc_len
+
+    @jax.jit
+    def inner(rows, nk, ndk, z_flat, idx, bval, start, key_b):
+        # bit-for-bit the group body of pipelined_sweep (staleness 0),
+        # with the block offset a traced scalar so every block of one
+        # capacity shares a single compiled trace
+        cap = idx.shape[0]
+        weights = (rows.astype(jnp.float32) + cfg.beta) / (
+            nk.astype(jnp.float32)[None, :] + cfg.V * cfg.beta)
+        table = alias_mod.build_alias_rows(weights)
+        wb = jnp.take(w_dev, idx)
+        db = jnp.take(d_dev, idx)
+        z0 = jnp.take(z_flat, idx)
+        local = jnp.clip(wb - start, 0, rpb - 1)
+        nwk_rows = jnp.take(rows, local, axis=0)
+        ndk_rows = jnp.take(ndk, db, axis=0)
+        aprob = jnp.take(table.prob, local, axis=0)
+        aalias = jnp.take(table.alias, local, axis=0)
+        doc_draw = lda.make_doc_draw(None, db, z_flat, doc_start, doc_len,
+                                     cfg)
+        rng = lda.draw_mh_randoms(key_b, doc_draw, cap, cfg)
+        if cfg.use_kernels:
+            from repro.kernels import ops as kops
+            z_new = kops.mh_sample(rng, z0, nwk_rows, ndk_rows, nk, aprob,
+                                   aalias, cfg,
+                                   interpret=cfg.kernel_interpret)
+        else:
+            z_new = lda.mh_chain(rng, z0, nwk_rows, ndk_rows, nk, aprob,
+                                 aalias, cfg)
+        z_new = jnp.where(bval, z_new, z0)
+        changed = (z_new != z0) & bval
+        d_rows = route.block_delta(
+            ps.Reassign(rows=local, words=wb, z_old=z0, z_new=z_new,
+                        changed=changed),
+            rpb, cfg.K, use_kernels=cfg.use_kernels,
+            interpret=cfg.kernel_interpret)
+        amt = changed.astype(jnp.int32)
+        nk2 = nk + (jnp.zeros((cfg.K,), jnp.int32)
+                    .at[z0].add(-amt).at[z_new].add(amt))
+        ndk2 = ndk.at[db, z0].add(-amt).at[db, z_new].add(amt)
+        z2 = z_flat.at[idx].add(jnp.where(bval, z_new - z0, 0))
+        rtraf = jnp.zeros((rpb,), jnp.int32).at[local].add(amt)
+        return rows + d_rows, nk2, ndk2, z2, rtraf
+
+    sweep_count = [0]
+
+    def step(st: "lda.SamplerState", key: jax.Array) -> "lda.SamplerState":
+        tier_h = st.nwk
+        nk, ndk, z = st.nk.value, st.ndk, st.z
+        keys = jax.random.split(key, n_blocks)
+        pulled = tier_h.pull_block(0, rpb)
+        for b in range(n_blocks):
+            rows = pulled.result()
+            if b + 1 < n_blocks:
+                pulled = tier_h.pull_block(b + 1, rpb)   # issue -> overlap
+            if index[b] is None:
+                continue
+            idx, bval = index[b]
+            rows2, nk, ndk, z, rtraf = inner(
+                rows, nk, ndk, z, idx, bval,
+                jnp.asarray(b * rpb, jnp.int32), keys[b])
+            rtraf_np = np.asarray(rtraf)
+            tier_h.store_block(b, rows2, rpb, row_changed=rtraf_np > 0)
+            tier_h.note_traffic(b, rpb, rtraf_np)
+        sweep_count[0] += 1
+        if refresh_every > 0 and sweep_count[0] % refresh_every == 0:
+            tier_h.refresh()
+            if auto_resize:
+                from repro.ps import autotune as _autotune
+                new_h = _autotune.retune_hot_rows(
+                    tier_h.tier.hot_rows, tier_h.tier_stats().hit_rate(),
+                    vocab_size=cfg.V, budget_bytes=hot_budget_bytes,
+                    num_topics=cfg.K)
+                if new_h != tier_h.tier.hot_rows:
+                    tier_h.resize_hot(new_h)
+        reg = _obs.metrics_for(exec_cfg.obs)
+        if reg is not None:
+            # device-resident table footprint: hot tier + the two block
+            # buffers in flight (pulled + being-sampled) -- the quantity
+            # the bench_tiered device-memory gate bounds
+            reg.gauge("exec.tiered.device_table_bytes").set(
+                float(tier_h.tier.device_bytes() + 2 * rpb * cfg.K * 4))
+        return lda.SamplerState(st.w, st.d, z, st.valid, st.doc_start,
+                                st.doc_len, tier_h, st.nk.with_value(nk),
+                                ndk)
+
+    caps = sorted({int(ix.shape[0]) for ix, _ in filter(None, index)})
+    info = {"mode": "tiered", "n_blocks": n_blocks, "rows_per_block": rpb,
+            "staleness": 0, "group": 1, "token_caps": caps,
+            "hot_rows": nwk.tier.hot_rows,
+            "refresh_every": refresh_every, "route": repr(route)}
+    return _obs_step(step, exec_cfg, info), info

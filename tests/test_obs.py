@@ -431,6 +431,34 @@ def test_obs_report_tolerates_empty_dir(tmp_path):
     assert "nothing recorded" in text
 
 
+def test_obs_report_tier_section(tmp_path):
+    from repro.launch import obs_report
+
+    events = [
+        {"name": "tier.miss_fetch", "cat": "ps", "ph": "X", "pid": 1,
+         "tid": 0, "ts": 0.0, "dur": 1500.0,
+         "args": {"rows": 32, "h2d_bytes": 8192}},
+    ]
+    with open(tmp_path / "trace.json", "w") as f:
+        json.dump({"traceEvents": events, "displayTimeUnit": "ms"}, f)
+    from repro.obs.metrics import MetricsRegistry
+    reg = MetricsRegistry()
+    reg.gauge("ps.tier.hit_rate").set(0.953)
+    reg.gauge("ps.tier.hot_rows").set(2048)
+    reg.gauge("ps.tier.device_bytes").set(262144)
+    reg.gauge("ps.tier.evictions").set(7)
+    reg.save(str(tmp_path / "metrics.jsonl"))
+
+    text = obs_report.render(str(tmp_path))
+    assert "tiered storage" in text
+    assert "hit_rate=0.953" in text and "hot_rows=2048" in text
+    assert "32 rows" in text and "8.0 KiB H2D" in text
+    # absent inputs -> no tier section (other runs unaffected)
+    assert "tiered storage" not in obs_report.render(str(tmp_path),
+                                                     trace_file="none.json",
+                                                     metrics_file="none")
+
+
 # ---------------------------------------------------------------------------
 # satellites: TraceCallback, LogCallback, deprecation shims
 # ---------------------------------------------------------------------------

@@ -506,3 +506,48 @@ class TestBackendParity:
                        out_specs=P(), check_vma=False)
         got = np.asarray(fn(full.value))
         np.testing.assert_array_equal(got, np.asarray(dense))
+
+
+class TestBackendProtocol:
+    """``Backend`` is a runtime-checkable Protocol (DESIGN.md sec. 8):
+    every substrate -- in-process, SPMD, tiered -- must satisfy it
+    structurally, and single-process backends must realise each moment
+    as the identity (the semantics the handles rely on outside
+    ``shard_map``)."""
+
+    ALL = [ps.InProcessBackend(), ps.SpmdBackend(),
+           ps.SpmdBackend(axis_name="data", model_axis="model"),
+           ps.TieredBackend()]
+
+    @pytest.mark.parametrize("backend", ALL,
+                             ids=lambda b: type(b).__name__)
+    def test_structural_conformance(self, backend):
+        assert isinstance(backend, ps.Backend)
+        assert hasattr(backend, "axis_name")
+        assert hasattr(backend, "model_axis")
+
+    def test_non_backends_rejected(self):
+        class Half:
+            axis_name = model_axis = None
+
+            def pull_full(self, s):
+                return s
+
+        assert not isinstance(object(), ps.Backend)
+        assert not isinstance(Half(), ps.Backend)
+
+    @pytest.mark.parametrize(
+        "backend",
+        [ps.InProcessBackend(), ps.SpmdBackend(), ps.TieredBackend()],
+        ids=lambda b: type(b).__name__)
+    def test_single_process_moments_are_identity(self, backend):
+        """Outside collectives every moment is the identity: pulls see
+        the stored matrix, reduces pass deltas through unchanged."""
+        dense = jnp.arange(20, dtype=jnp.int32).reshape(5, 4)
+        storage = ps.PSClient.create(num_shards=1).matrix_from_dense(
+            dense).storage
+        assert backend.pull_full(storage) is storage
+        assert backend.localize(storage) is storage
+        delta = jnp.ones((5, 4), jnp.int32)
+        assert backend.reduce(delta) is delta
+        assert backend.gather_concat(delta) is delta

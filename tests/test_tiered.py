@@ -1,0 +1,315 @@
+"""Tiered parameter storage tests (repro/ps/tiered: DESIGN.md sec. 13).
+
+The load-bearing guarantee is the **composition invariant**: after ANY
+schedule of pulls, pushes, promotions, evictions and resizes, the hot
+tier composed over the cold memmap equals the single-tier oracle table
+bitwise (int32 adds and copies commute with residency moves).  Covered
+here as:
+
+  * a deterministic mixed pull/push/refresh/resize schedule checked
+    bitwise against a numpy oracle after every step;
+  * the degenerate capacities ``H in {0, 1, V-1, V, V+1}`` through the
+    same pull/push surface;
+  * a hypothesis property: random promote/evict schedules preserve both
+    the composed table and total count conservation;
+  * ``SnapshotPublisher.publish_view`` over a tiered handle publishes
+    the same model as publishing the oracle dense directly;
+  * the end-to-end estimator path (``storage="tiered"``) conserves the
+    token count, single-device and under forced multi-device.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro import ps
+from repro.ps.autotune import retune_hot_rows, size_hot_rows
+from repro.ps.coldstore import ColdStore
+
+
+def _make(tmp_path, v=40, k=6, hot=8, seed=0, name="tier"):
+    """A tiered handle plus its int64 numpy oracle (same initial counts)."""
+    rng = np.random.default_rng(seed)
+    dense = rng.integers(0, 50, size=(v, k)).astype(np.int32)
+    handle = ps.tiered_matrix_from_dense(jnp.asarray(dense), hot,
+                                         str(tmp_path / name))
+    return dense.astype(np.int64), handle
+
+
+def _reassign(v, k, n, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.integers(0, v, size=n).astype(np.int32)
+    return ps.Reassign(rows=jnp.asarray(w), words=jnp.asarray(w),
+                       z_old=jnp.asarray(rng.integers(0, k, n, np.int32)),
+                       z_new=jnp.asarray(rng.integers(0, k, n, np.int32)),
+                       changed=jnp.asarray(rng.random(n) < 0.7))
+
+
+def _oracle_push(oracle, re):
+    w = np.asarray(re.words)
+    ch = np.asarray(re.changed)
+    zo, zn = np.asarray(re.z_old), np.asarray(re.z_new)
+    ok = ch & (w < oracle.shape[0])
+    np.add.at(oracle, (w[ok], zo[ok]), -1)
+    np.add.at(oracle, (w[ok], zn[ok]), 1)
+
+
+def _oracle_coo(oracle, rows, cols, vals):
+    r, c, v = (np.asarray(a) for a in (rows, cols, vals))
+    ok = (r >= 0) & (r < oracle.shape[0])
+    np.add.at(oracle, (r[ok], c[ok]), v[ok])
+
+
+def _assert_composed(handle, oracle):
+    np.testing.assert_array_equal(
+        np.asarray(handle.to_dense(), np.int64), oracle)
+
+
+class TestColdStore:
+    def test_roundtrip_and_reopen(self, tmp_path):
+        dense = np.arange(24, dtype=np.int32).reshape(6, 4)
+        cold = ColdStore.from_dense(str(tmp_path / "c"), dense)
+        np.testing.assert_array_equal(cold.to_array(), dense)
+        cold.write_rows(np.array([1, 5]), np.full((2, 4), 7, np.int32))
+        cold.flush()
+        reopened = ColdStore.open(str(tmp_path / "c"))
+        assert reopened.num_rows == 6 and reopened.cols == 4
+        np.testing.assert_array_equal(reopened.read_rows(np.array([1, 5])),
+                                      np.full((2, 4), 7, np.int32))
+
+    def test_apply_coo_out_of_range_is_noop(self, tmp_path):
+        cold = ColdStore.create(str(tmp_path / "c"), 5, 3)
+        cold.apply_coo(np.array([0, 7, -1, 4]), np.array([1, 0, 2, 2]),
+                       np.array([3, 9, 9, 2], np.int32))
+        out = cold.to_array()
+        assert out[0, 1] == 3 and out[4, 2] == 2
+        assert out.sum() == 5
+
+
+class TestComposition:
+    def test_pull_composes_hot_and_cold(self, tmp_path):
+        oracle, h = _make(tmp_path, v=30, k=5, hot=6)
+        rows = np.array([0, 3, 5, 6, 17, 29])   # mixed residency
+        np.testing.assert_array_equal(
+            np.asarray(h.pull(rows).result(), np.int64), oracle[rows])
+        # pure-hot and pure-cold fast paths
+        np.testing.assert_array_equal(
+            np.asarray(h.pull(np.array([1, 2])).result(), np.int64),
+            oracle[[1, 2]])
+        np.testing.assert_array_equal(
+            np.asarray(h.pull(np.array([20, 10])).result(), np.int64),
+            oracle[[20, 10]])
+
+    def test_mixed_schedule_matches_oracle(self, tmp_path):
+        """The invariant: pulls/pushes/refreshes/resizes in any order
+        keep the composed table bitwise equal to the single-tier oracle."""
+        v, k = 40, 6
+        oracle, h = _make(tmp_path, v=v, k=k, hot=8)
+        rng = np.random.default_rng(1)
+        for step in range(12):
+            op = step % 4
+            if op == 0:
+                re = _reassign(v, k, 64, seed=100 + step)
+                h = h.push(re)
+                _oracle_push(oracle, re)
+            elif op == 1:
+                rows = rng.integers(-2, v + 3, size=20).astype(np.int32)
+                cols = rng.integers(0, k, size=20).astype(np.int32)
+                vals = rng.integers(-2, 3, size=20).astype(np.int32)
+                h = h.push_coo(rows, cols, vals)
+                _oracle_coo(oracle, rows, cols, vals)
+            elif op == 2:
+                h = h.refresh()
+            else:
+                h = h.resize_hot(int(rng.integers(0, v + 2)))
+            _assert_composed(h, oracle)
+        st = h.tier_stats()
+        assert st.promotions > 0 and st.evictions > 0
+        assert 0.0 <= st.hit_rate() <= 1.0
+
+    def test_store_block_overwrites_exclusively(self, tmp_path):
+        oracle, h = _make(tmp_path, v=25, k=4, hot=5)
+        rpb = 8
+        block = 1
+        rows = h.pull_block(block, rpb).result()
+        new = rows + 3
+        h = h.store_block(block, new, rpb)
+        oracle[8:16] += 3
+        _assert_composed(h, oracle)
+        # row_changed=False rows may skip the write but must stay bitwise
+        h = h.store_block(0, h.pull_block(0, rpb).result(), rpb,
+                          row_changed=np.zeros(rpb, bool))
+        _assert_composed(h, oracle)
+
+    def test_flush_makes_cold_tier_authoritative(self, tmp_path):
+        oracle, h = _make(tmp_path, v=20, k=3, hot=4)
+        h = h.push(_reassign(20, 3, 40, seed=7))
+        _oracle_push(oracle, _reassign(20, 3, 40, seed=7))
+        h.flush()
+        np.testing.assert_array_equal(
+            h.tier.cold.to_array().astype(np.int64), oracle)
+
+
+class TestBoundaryCapacity:
+    @pytest.mark.parametrize("hot", [0, 1, 19, 20, 21])
+    def test_boundary_hot_rows(self, tmp_path, hot):
+        """H in {0, 1, V-1, V, V+1} through pull + push + refresh."""
+        v, k = 20, 4
+        oracle, h = _make(tmp_path, v=v, k=k, hot=hot)
+        assert h.tier.hot_rows == min(hot, v)
+        re = _reassign(v, k, 50, seed=hot)
+        h = h.push(re)
+        _oracle_push(oracle, re)
+        _assert_composed(h, oracle)
+        rows = np.array([0, v // 2, v - 1])
+        np.testing.assert_array_equal(
+            np.asarray(h.pull(rows).result(), np.int64), oracle[rows])
+        h = h.refresh()
+        _assert_composed(h, oracle)
+
+
+class TestConservationProperty:
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_seeded_random_schedules_conserve_counts(self, tmp_path, seed):
+        """Deterministic fallback for the hypothesis property below: a
+        seeded random promote/evict schedule preserves the composed table
+        and the total count even when hypothesis is not installed."""
+        v, k = 12, 3
+        rng = np.random.default_rng(seed)
+        oracle, h = _make(tmp_path, v=v, k=k,
+                          hot=int(rng.integers(0, v + 2)), seed=3,
+                          name=f"seeded-{seed}")
+        total = oracle.sum()
+        for i in range(10):
+            op = int(rng.integers(0, 4))
+            if op == 0:
+                re = _reassign(v, k, 16, seed=1000 * seed + i)
+                h = h.push(re)
+                _oracle_push(oracle, re)
+            elif op == 1:
+                rows = rng.integers(0, v, size=8)
+                h.note_traffic(0, v, np.bincount(rows, minlength=v))
+            elif op == 2:
+                h = h.refresh(decay=bool(rng.integers(0, 2)))
+            else:
+                h = h.resize_hot(int(rng.integers(0, v + 2)))
+        composed = np.asarray(h.to_dense(), np.int64)
+        np.testing.assert_array_equal(composed, oracle)
+        assert composed.sum() == total
+
+    def test_random_residency_schedules_conserve_counts(self, tmp_path):
+        hyp = pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        v, k = 12, 3
+
+        @settings(max_examples=25, deadline=None)
+        @given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 2**16)),
+                        min_size=1, max_size=8),
+               st.integers(0, v + 1))
+        def run(schedule, hot):
+            oracle, h = _make(tmp_path, v=v, k=k, hot=hot, seed=3,
+                              name=f"hyp-{hot}-{len(schedule)}")
+            total = oracle.sum()
+            for op, seed in schedule:
+                if op == 0:
+                    re = _reassign(v, k, 16, seed=seed)
+                    h = h.push(re)
+                    _oracle_push(oracle, re)
+                elif op == 1:
+                    # traffic-only bump: steers promote/evict choices
+                    rng = np.random.default_rng(seed)
+                    rows = rng.integers(0, v, size=8)
+                    h.note_traffic(0, v, np.bincount(rows, minlength=v))
+                elif op == 2:
+                    h = h.refresh(decay=seed % 2 == 0)
+                else:
+                    h = h.resize_hot(seed % (v + 2))
+            composed = np.asarray(h.to_dense(), np.int64)
+            np.testing.assert_array_equal(composed, oracle)
+            assert composed.sum() == total   # reassignments conserve mass
+
+        run()
+
+
+class TestSnapshotComposition:
+    def test_publish_view_matches_dense_publish(self, tmp_path):
+        """The frozen model published from a tiered view is bitwise the
+        model published from the oracle dense table."""
+        from repro.core import lightlda as lda
+        from repro.infer.snapshot import SnapshotPublisher
+
+        v, k = 30, 5
+        oracle, h = _make(tmp_path, v=v, k=k, hot=6)
+        re = _reassign(v, k, 80, seed=11)
+        h = h.push(re).refresh()
+        _oracle_push(oracle, re)
+        nk = oracle.sum(axis=0).astype(np.int32)
+        client = ps.PSClient.create(num_shards=1)
+        cfg = lda.LDAConfig(num_topics=k, vocab_size=v)
+
+        snap_tier = SnapshotPublisher(cfg).publish_view(
+            h.read_view(), client.wrap_vector(jnp.asarray(nk)))
+        snap_dense = SnapshotPublisher(cfg).publish(
+            jnp.asarray(oracle.astype(np.int32)), jnp.asarray(nk))
+        np.testing.assert_array_equal(np.asarray(snap_tier.phi),
+                                      np.asarray(snap_dense.phi))
+        np.testing.assert_array_equal(np.asarray(snap_tier.model.nwk),
+                                      np.asarray(snap_dense.model.nwk))
+
+
+class TestHotTierSizing:
+    def test_size_hot_rows_covers_target_mass(self):
+        freq = np.array([100, 50, 20, 10, 5, 2, 1, 1], np.int64)
+        h = size_hot_rows(freq, num_topics=4, target_mass=0.9, min_rows=1)
+        assert freq[:h].sum() >= 0.9 * freq.sum()
+        assert size_hot_rows(freq, 4, target_mass=0.9, min_rows=1,
+                             budget_bytes=2 * 4 * 4) <= 2
+
+    def test_retune_doubles_until_target(self):
+        assert retune_hot_rows(64, 0.5, vocab_size=1000) == 128
+        assert retune_hot_rows(64, 0.95, vocab_size=1000) == 64
+        assert retune_hot_rows(800, 0.1, vocab_size=1000) == 1000
+
+
+def _fit_tiered_smoke():
+    from repro import api
+    rng = np.random.default_rng(0)
+    docs = [rng.integers(0, 120, size=int(n))
+            for n in rng.integers(20, 60, size=80)]
+    tokens = int(sum(d.size for d in docs))
+    job = api.LDAJob(docs=docs, num_topics=8, storage="tiered",
+                     hot_rows=16, model_blocks=4, sweeps=2,
+                     eval_every=0, seed=0)
+    model = api.APSLDA(job).fit()
+    assert int(np.asarray(model.nwk).sum()) == tokens
+    return model
+
+
+class TestTieredEndToEnd:
+    def test_fit_conserves_tokens(self):
+        model = _fit_tiered_smoke()
+        assert np.isfinite(np.asarray(model.nwk)).all()
+
+    @pytest.mark.multidevice(4)
+    def test_fit_conserves_tokens_forced_devices(self, tmp_path):
+        """Same estimator path and the composition invariant under forced
+        host devices (the CI forced-4 matrix entry)."""
+        _fit_tiered_smoke()
+        oracle, h = _make(tmp_path, v=24, k=4, hot=5, name="forced4")
+        re = _reassign(24, 4, 60, seed=4)
+        h = h.push(re).refresh()
+        _oracle_push(oracle, re)
+        _assert_composed(h, oracle)
+
+    def test_job_validation_rejects_bad_tiered_knobs(self):
+        from repro import api
+        docs = [np.array([0, 1, 2])]
+        with pytest.raises(api.JobValidationError):
+            api.LDAJob(docs=docs, num_topics=4, storage="tiered").validate()
+        with pytest.raises(api.JobValidationError):
+            api.LDAJob(docs=docs, num_topics=4, storage="lukewarm",
+                       model_blocks=2).validate()
+        with pytest.raises(api.JobValidationError):
+            api.LDAJob(docs=docs, num_topics=4, hot_rows=8,
+                       model_blocks=2).validate()

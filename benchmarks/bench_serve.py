@@ -1,0 +1,208 @@
+"""Serving-under-load benchmark: concurrent admission + live refresh.
+
+The "millions of users" axis made measurable (DESIGN.md section 14): K
+concurrent client threads submit Zipf-length documents through the
+``ConcurrentEngine`` admission queue while a background trainer keeps
+publishing fresh snapshots through the ``SnapshotPublisher`` -- the full
+production loop: train, publish, and serve at the same time.
+
+Reports QPS and p50/p95/p99 request latency from the existing
+``serve.request_ms`` histograms, the dual-trigger mix (full vs timeout
+flushes), and the number of zero-downtime snapshot swaps that landed
+under load.  Hard acceptance (asserted after the JSON is written):
+
+  * >= MIN_SWAPS snapshot swaps while clients were in flight;
+  * zero lost non-shed requests: every submitted request either returned
+    a ``Result`` or raised a typed ``DeadlineExceeded`` -- nothing
+    dropped, nothing wedged;
+  * deadline-shed requests surface as typed errors and are counted by
+    the ``serve.shed`` counter.
+
+Writes ``experiments/bench/BENCH_serve.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+
+import jax
+import numpy as np
+
+from repro import obs as _obs
+from repro.core import lightlda as lda
+from repro.data import corpus as corpus_mod
+from repro.infer.engine import DeadlineExceeded, EngineConfig
+from repro.infer.foldin import FoldInConfig
+from repro.serve.topic_service import TopicService
+
+OUT = "experiments/bench/BENCH_serve.json"
+OBS_DIR = "experiments/bench/serve_obs"
+MIN_SWAPS = 5        # zero-downtime swaps that must land under load
+CLIENTS = 8
+MAX_WAVES = 60       # per-client cap on extra waves while awaiting swaps
+
+
+def _service(fast: bool):
+    docs, vocab, k, sweeps = ((300, 500, 12, 6) if fast
+                              else (1000, 2000, 32, 15))
+    corp = corpus_mod.synthetic_corpus(docs, vocab, true_topics=8,
+                                       mean_doc_len=50, seed=0)
+    cfg = lda.LDAConfig(num_topics=k, vocab_size=vocab, block_tokens=4096)
+    ecfg = EngineConfig(max_batch=16, max_delay_ms=3.0,
+                        foldin=FoldInConfig(num_sweeps=8, burnin=3))
+    svc = TopicService(cfg, ecfg)
+    svc.init_from_corpus(corp, seed=0)
+    svc.train(sweeps, jax.random.PRNGKey(1), publish_every=0)
+    return svc, vocab
+
+
+def _zipf_doc(rng, vocab: int, max_len: int = 256) -> np.ndarray:
+    """One Zipf-length request document (heavy-tailed, like real queries:
+    mostly short, occasionally long enough to land in a big bucket)."""
+    n = int(min(3 + rng.zipf(1.4), max_len))
+    return rng.integers(0, vocab, size=n).astype(np.int32)
+
+
+def main(fast: bool = False):
+    per_client = 16 if fast else 48
+    wave = 4                      # tickets in flight per client at a time
+    svc, vocab = _service(fast)
+
+    session = _obs.ObsSession(_obs.ObsConfig(
+        enabled=True, trace=False, out_dir=OBS_DIR)).install()
+    try:
+        # warm the per-bucket jit cache off the clock: one flush per bucket
+        rng = np.random.default_rng(99)
+        svc.fold_in([rng.integers(0, vocab, size=n).astype(np.int32)
+                     for n in (8, 20, 40, 90, 200)])
+
+        svc.start_serving()
+        v0 = svc.version
+        stop_training = threading.Event()
+
+        def trainer():
+            # one publish per loop turn; keep refreshing while clients are
+            # in flight, and never stop before MIN_SWAPS swaps have landed
+            i = 0
+            while not stop_training.is_set() or svc.version - v0 < MIN_SWAPS:
+                svc.train(1, jax.random.PRNGKey(1000 + i), publish_every=0)
+                i += 1
+
+        lock = threading.Lock()
+        served, shed, errors = [], [], []
+
+        def client(ci: int) -> None:
+            rng = np.random.default_rng(500 + ci)
+            sent = 0
+            waves = 0
+            # keep the load up (in waves) until this client has pushed its
+            # quota AND enough live swaps have happened underneath it
+            while (sent < per_client
+                   or (svc.version - v0 < MIN_SWAPS and waves < MAX_WAVES)):
+                tickets = [svc.submit(_zipf_doc(rng, vocab),
+                                      seed=ci * 100_000 + sent + i)
+                           for i in range(wave)]
+                sent += wave
+                waves += 1
+                for t in tickets:
+                    try:
+                        r = t.result(timeout=300)
+                        with lock:
+                            served.append(r)
+                    except Exception as exc:  # noqa: BLE001 -- verdict below
+                        with lock:
+                            errors.append(exc)
+            with lock:
+                submitted[ci] = sent
+
+        submitted = [0] * CLIENTS
+        train_thread = threading.Thread(target=trainer, daemon=True)
+        train_thread.start()
+        t0 = time.time()
+        threads = [threading.Thread(target=client, args=(ci,), daemon=True)
+                   for ci in range(CLIENTS)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        dt = time.time() - t0
+        stop_training.set()
+        train_thread.join()
+        swaps = svc.version - v0
+
+        # typed-shed demonstration: already-expired deadlines must surface
+        # as DeadlineExceeded, never as lost requests or other errors
+        shed_wave = [svc.submit(_zipf_doc(np.random.default_rng(7), vocab),
+                                seed=10_000_000 + i, deadline_ms=0.001)
+                     for i in range(8)]
+        for t in shed_wave:
+            try:
+                r = t.result(timeout=300)
+                with lock:
+                    served.append(r)    # raced past its deadline: served
+            except DeadlineExceeded as exc:
+                shed.append(exc)
+            except Exception as exc:  # noqa: BLE001 -- verdict below
+                errors.append(exc)
+        svc.stop_serving()
+
+        reg = _obs.metrics_registry()
+        hist = reg.get("serve.request_ms")
+        lat = hist.summary() if hist is not None else {}
+        trig = {name.rsplit(".", 1)[-1]: c.value
+                for name, c in reg.all().items()
+                if name.startswith("serve.batch_trigger.")}
+        shed_counter = reg.get("serve.shed")
+        lag = reg.get("serve.version_lag")
+    finally:
+        session.close(save=True)
+
+    total = sum(submitted) + len(shed_wave)
+    qps = len(served) / dt
+    versions = sorted({r.version for r in served})
+    print(f"serve,clients,{CLIENTS},requests,{total}")
+    print(f"serve,qps,{qps:.1f},served,{len(served)},shed,{len(shed)},"
+          f"errors,{len(errors)}")
+    print(f"serve,latency_ms,p50,{lat.get('p50', 0):.2f},"
+          f"p95,{lat.get('p95', 0):.2f},p99,{lat.get('p99', 0):.2f}")
+    print(f"serve,swaps_under_load,{swaps},versions_served,"
+          f"{versions[0]}..{versions[-1]}")
+    print(f"serve,batch_trigger,{json.dumps(trig, sort_keys=True)}")
+
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        json.dump({
+            "config": {"clients": CLIENTS, "per_client": per_client,
+                       "vocab": vocab, "K": svc.cfg.K,
+                       "max_batch": svc.ecfg.max_batch,
+                       "max_delay_ms": svc.ecfg.max_delay_ms,
+                       "foldin_sweeps": svc.ecfg.foldin.num_sweeps},
+            "requests": total,
+            "served": len(served),
+            "shed": len(shed),
+            "errors": len(errors),
+            "qps": qps,
+            "latency_ms": {k: lat.get(k, 0.0)
+                           for k in ("p50", "p90", "p95", "p99", "mean",
+                                     "max", "count")},
+            "snapshot_swaps_under_load": swaps,
+            "versions_served": versions,
+            "version_lag_last": lag.value if lag is not None else None,
+            "batch_trigger": trig,
+            "shed_counter": shed_counter.value
+            if shed_counter is not None else 0,
+        }, f, indent=2)
+    print(f"serve,wrote,{OUT}")
+
+    assert not errors, f"non-typed serving failures: {errors[:3]}"
+    assert len(served) + len(shed) == total, (
+        f"lost requests: {total - len(served) - len(shed)}")
+    assert swaps >= MIN_SWAPS, f"only {swaps} swaps under load"
+    assert len(shed) == (shed_counter.value if shed_counter else 0), (
+        "serve.shed counter disagrees with typed DeadlineExceeded count")
+
+
+if __name__ == "__main__":
+    main(fast=True)

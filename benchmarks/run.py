@@ -20,6 +20,9 @@
   obs          telemetry plane: disabled-mode overhead bar (<1%) + a
                fully traced train/push/serve demo summarised by
                obs_report (emits BENCH_obs.json)
+  serve        production serving plane: concurrent clients through the
+               dual-trigger batcher against a live-refreshing service --
+               QPS, p50/p95/p99, swaps under load (emits BENCH_serve.json)
 
 ``python -m benchmarks.run`` runs everything at reduced ("fast") sizes and
 prints CSV-ish lines; ``--full`` uses the paper-ladder sizes; ``--only X``
@@ -34,8 +37,8 @@ import traceback
 
 from benchmarks import (bench_async, bench_comm, bench_convergence,
                         bench_infer, bench_kernels, bench_loadbalance,
-                        bench_obs, bench_ps, bench_roofline, bench_stream,
-                        bench_table1, bench_tiered)
+                        bench_obs, bench_ps, bench_roofline, bench_serve,
+                        bench_stream, bench_table1, bench_tiered)
 
 MODULES = {
     "table1": bench_table1.main,
@@ -50,6 +53,7 @@ MODULES = {
     "stream": bench_stream.main,
     "obs": bench_obs.main,
     "tiered": bench_tiered.main,
+    "serve": bench_serve.main,
 }
 
 

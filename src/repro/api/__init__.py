@@ -18,7 +18,8 @@ examples and benchmarks build jobs instead of hand-wiring executors
     pub   = model.publisher()                          # -> TopicService
 """
 from repro.api.callbacks import (Callback, CheckpointCallback, EvalCallback,
-                                 LogCallback, SweepView, TraceCallback)
+                                 LogCallback, PublishCallback, SweepView,
+                                 TraceCallback)
 from repro.api.estimator import APSLDA
 from repro.api.job import (CheckpointPolicy, JobValidationError, LDAJob,
                            IN_PROCESS, SPMD)
@@ -36,6 +37,6 @@ __all__ = [
     "APSLDA", "LDAJob", "TopicModel", "Session", "SessionResult",
     "CheckpointPolicy", "JobValidationError", "IN_PROCESS", "SPMD",
     "Callback", "CheckpointCallback", "EvalCallback", "LogCallback",
-    "SweepView", "TraceCallback", "ObsConfig",
+    "PublishCallback", "SweepView", "TraceCallback", "ObsConfig",
     "CooRoute", "DenseRoute", "HybridRoute", "PushRoute",
 ]

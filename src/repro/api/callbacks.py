@@ -21,7 +21,11 @@ Built-ins:
                             line: fit_start / sweep / fit_end);
   * ``TraceCallback``       attaches the ``repro.obs`` telemetry plane to
                             one fit (trace spans per visit + saved
-                            Chrome-trace/metrics files).
+                            Chrome-trace/metrics files);
+  * ``PublishCallback``     the continuous-learning handoff: publishes a
+                            serving snapshot through a
+                            ``SnapshotPublisher`` every N visits while
+                            the engine keeps serving (DESIGN.md sec. 14).
 """
 from __future__ import annotations
 
@@ -270,6 +274,51 @@ class LogCallback(Callback):
 
     def on_fit_end(self, view: Optional[SweepView]) -> None:
         self._emit({"event": "fit_end", "steps": self._steps})
+
+
+class PublishCallback(Callback):
+    """Publish a serving snapshot every ``every`` executor visits.
+
+    The continuous-learning handoff (DESIGN.md section 14): a training
+    fit keeps sweeping while this callback periodically freezes the
+    current counts into the given ``SnapshotPublisher``; a live
+    ``ConcurrentEngine`` reading that publisher picks the new version up
+    at its next batch -- zero-downtime refresh, with staleness bounded by
+    the publish cadence.
+
+    Publication is a pure *read* of the training handles
+    (``publish_view`` over ``nwk.read_view()`` + ``nk`` -- the sanctioned
+    pull-only serving read), so like every callback it observes without
+    perturbing: the trained model is bitwise identical with or without it
+    attached.  ``every`` counts visits (sweeps in memory mode, shard
+    visits in stream mode) on the same crossing-based cadence as
+    ``EvalCallback``; ``include_last`` additionally publishes the final
+    visit.  Published version numbers accumulate in ``.versions``.
+    """
+
+    def __init__(self, publisher, every: int = 1, *,
+                 include_last: bool = False):
+        if publisher is None:
+            raise ValueError("PublishCallback needs a SnapshotPublisher")
+        self.publisher = publisher
+        self.every = int(every)
+        self.include_last = include_last
+        self.versions: list = []
+        self._last_step = 0
+
+    def _publish(self, view: SweepView) -> None:
+        view.sync()
+        snap = self.publisher.publish_view(view.nwk.read_view(), view.nk)
+        self.versions.append(snap.version)
+
+    def on_sweep_end(self, view: SweepView) -> None:
+        last, self._last_step = self._last_step, view.step
+        if self.every and view.step // self.every > last // self.every:
+            self._publish(view)
+
+    def on_fit_end(self, view: Optional[SweepView]) -> None:
+        if self.include_last and view is not None:
+            self._publish(view)
 
 
 class TraceCallback(Callback):

@@ -8,14 +8,20 @@ Turns a trained LDA model into a serving endpoint:
   snapshot  -- double-buffered snapshot publication from the training sweep
                to the inference path (monotonic versions, bounded staleness);
   engine    -- request queue with padding-bucket batching returning per-doc
-               topic vectors θ plus topic-smoothed query-likelihood scores.
+               topic vectors θ plus topic-smoothed query-likelihood scores;
+               synchronous (``QueryEngine``) and concurrent
+               (``ConcurrentEngine``: admission tickets, dual-trigger
+               dynamic batching, deadline load-shedding; DESIGN.md
+               section 14).
 """
 from repro.infer.foldin import FoldInConfig, fold_in_batch, pack_docs
 from repro.infer.snapshot import Snapshot, SnapshotPublisher
-from repro.infer.engine import EngineConfig, QueryEngine
+from repro.infer.engine import (ConcurrentEngine, DeadlineExceeded,
+                                EngineConfig, QueryEngine, Ticket)
 
 __all__ = [
     "FoldInConfig", "fold_in_batch", "pack_docs",
     "Snapshot", "SnapshotPublisher",
-    "EngineConfig", "QueryEngine",
+    "ConcurrentEngine", "DeadlineExceeded", "EngineConfig", "QueryEngine",
+    "Ticket",
 ]

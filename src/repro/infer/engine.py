@@ -1,4 +1,4 @@
-"""Batched topic-inference query engine (DESIGN.md section 3).
+"""Batched topic-inference query engine (DESIGN.md sections 3 and 14).
 
 Serving requests arrive one document at a time; TPUs want dense, fixed
 shapes.  The engine bridges the two with *padding-bucket batching*: each
@@ -10,6 +10,17 @@ call serves the whole batch.  The jit cache therefore holds at most
 per-document (see infer/foldin.py) -- a request's θ is bit-identical no
 matter which batch it lands in or in which order requests arrived.
 
+Two serving disciplines share that batching core:
+
+  * ``QueryEngine``      -- synchronous: callers ``submit()`` then
+    ``flush()`` on one thread (offline/batch scoring, tests);
+  * ``ConcurrentEngine`` -- the production plane (DESIGN.md section 14):
+    a thread-safe admission queue whose ``submit()`` returns a waitable
+    ``Ticket``, drained by a background batcher under a dual trigger
+    (bucket full OR oldest request aged past ``max_delay_ms``), with
+    per-request SLO deadlines enforced by typed load-shedding
+    (``DeadlineExceeded``) instead of silent queue growth.
+
 Scoring implements the paper's IR smoothing use case: topic-smoothed query
 likelihood (the LDA-based document model of Wei & Croft 2006),
 
@@ -20,10 +31,13 @@ model; documents are ranked by Σ_{w∈q} log p(w|d).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import threading
 import time
 from functools import partial
-from typing import Dict, List, NamedTuple, Optional, Sequence, Union
+from typing import (Deque, Dict, List, NamedTuple, Optional, Sequence,
+                    Tuple, Union)
 
 import jax
 import jax.numpy as jnp
@@ -42,6 +56,16 @@ class EngineConfig:
     foldin: FoldInConfig = FoldInConfig()
     smooth_lambda: float = 0.7   # weight of the LDA term in p(w|d)
     smooth_mu: float = 100.0     # Dirichlet prior mass of the doc LM
+    # concurrent admission (ConcurrentEngine; DESIGN.md section 14)
+    max_delay_ms: float = 5.0    # oldest queued request before a forced flush
+    deadline_ms: float = 0.0     # default per-request SLO (0: no deadline)
+
+
+def _admit_tokens(tokens: Sequence[int], max_len: int) -> np.ndarray:
+    """Admission-time canonical form of a request's tokens: int32, truncated
+    to ``max_len`` (the longest supported doc; DESIGN.md section 3)."""
+    tok = np.asarray(tokens, np.int32)
+    return tok[:max_len] if tok.shape[0] > max_len else tok
 
 
 class Request(NamedTuple):
@@ -110,11 +134,17 @@ class QueryEngine:
         ``seed`` pins the request's fold-in randomness: same (snapshot,
         tokens, seed) -> bit-identical θ regardless of batching.  Defaults
         to the request id (unique, but arrival-order dependent).
+
+        Documents longer than ``max_len`` are truncated *here*, at
+        admission: the queue never holds more than ``max_len`` tokens per
+        request, and ``_run_batch`` always receives docs that fit their
+        bucket (``bucket_of`` promises exactly this).
         """
         rid = self._next_rid
         self._next_rid += 1
         self._queue.append(Request(
-            rid, np.asarray(tokens, np.int32), rid if seed is None else seed))
+            rid, _admit_tokens(tokens, self.ecfg.max_len),
+            rid if seed is None else seed))
         reg = _obs.metrics_for(self.ecfg.foldin.obs)
         if reg is not None:
             self._t_submit[rid] = time.perf_counter_ns()
@@ -164,11 +194,14 @@ class QueryEngine:
                 if reg is not None:
                     reg.histogram("serve.batch_occupancy", unit="reqs") \
                         .record(len(chunk))
-                    for req in chunk:
-                        t0 = self._t_submit.pop(req.rid, None)
-                        if t0 is not None:
-                            reg.histogram("serve.request_ms").record(
-                                (t_done - t0) / 1e6)
+                for req in chunk:
+                    # ALWAYS pop: a request served while metrics are off
+                    # (or toggled between submit and flush) must not pin
+                    # its submit timestamp forever in a long-lived server
+                    t0 = self._t_submit.pop(req.rid, None)
+                    if t0 is not None and reg is not None:
+                        reg.histogram("serve.request_ms").record(
+                            (t_done - t0) / 1e6)
         if reg is not None:
             reg.gauge("serve.queue_depth").set(len(self._queue))
             reg.gauge("serve.snapshot_version").set(snap.version)
@@ -209,6 +242,12 @@ class QueryEngine:
         (carried in ``Result.version``): mixing a v1 θ with a v2 φ would
         score against an inconsistent model.  Recently served versions are
         retained by the engine; scoring θs older than that raises.
+
+        Pack lengths are rounded up to the engine's power-of-two buckets
+        (``bucket_of``): packing at the exact max length would compile a
+        fresh ``topic_smoothed_scores`` program for every distinct
+        ``(ld, lq)`` pair -- unbounded retrace churn in a long-lived
+        server.  Bucketed, the jit cache is bounded by #buckets².
         """
         versions = {r.version for r in results}
         if len(versions) != 1:
@@ -222,8 +261,8 @@ class QueryEngine:
                 raise ValueError(
                     f"snapshot v{version} no longer available (current "
                     f"v{snap.version}); re-run fold-in before scoring")
-        ld = max(max((len(d) for d in docs), default=1), 1)
-        lq = max(max((len(q) for q in queries), default=1), 1)
+        ld = self.bucket_of(max(max((len(d) for d in docs), default=1), 1))
+        lq = self.bucket_of(max(max((len(q) for q in queries), default=1), 1))
         dw, dv = pack_docs(docs, ld)
         qw, qv = pack_docs(queries, lq)
         theta = jnp.asarray(np.stack([r.theta for r in results]))
@@ -260,3 +299,343 @@ def topic_smoothed_scores(theta: jax.Array, doc_w: jax.Array,
     p = lam * p_lda + (1.0 - lam) * p_dir
     logp = jnp.log(jnp.maximum(p, 1e-30))
     return jnp.sum(jnp.where(q_valid[:, :, None], logp, 0.0), axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Concurrent serving plane (DESIGN.md section 14).
+# ---------------------------------------------------------------------------
+
+class DeadlineExceeded(RuntimeError):
+    """Typed load-shed: the request aged past its SLO deadline while
+    queued, so the batcher refused it instead of serving it late.
+
+    Raised out of ``Ticket.result()`` on the submitter's thread; carries
+    the request id, how long it sat queued, and the deadline it missed.
+    Shedding is the back-pressure mechanism: under overload the queue
+    stays bounded and late requests fail *loudly and typed* rather than
+    silently stretching every other request's latency.
+    """
+
+    def __init__(self, rid: int, waited_ms: float, deadline_ms: float):
+        super().__init__(
+            f"request {rid} shed after {waited_ms:.2f} ms queued "
+            f"(deadline {deadline_ms:.2f} ms)")
+        self.rid = rid
+        self.waited_ms = waited_ms
+        self.deadline_ms = deadline_ms
+
+
+class Ticket:
+    """Waitable handle for one admitted request.
+
+    The submitter blocks on ``result()`` until the batcher either serves
+    the request (returns its ``Result``) or sheds it (raises
+    ``DeadlineExceeded``); any internal batch failure is re-raised as-is.
+    A ticket completes exactly once, always from the batcher thread.
+    """
+
+    __slots__ = ("rid", "_done", "_result", "_error")
+
+    def __init__(self, rid: int):
+        self.rid = rid
+        self._done = threading.Event()
+        self._result: Optional[Result] = None
+        self._error: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> Result:
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"request {self.rid} not served within "
+                               f"{timeout}s (still queued or in flight)")
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+    # -- batcher side (exactly-once completion) --------------------------
+    def _complete(self, result: Result) -> None:
+        self._result = result
+        self._done.set()
+
+    def _fail(self, exc: BaseException) -> None:
+        self._error = exc
+        self._done.set()
+
+
+class _Admitted(NamedTuple):
+    """One queued request: ticket + request + its admission bookkeeping."""
+    ticket: Ticket
+    request: Request
+    bucket: int
+    t_submit_ns: int
+    t_deadline_ns: Optional[int]   # absolute shed time (None: no deadline)
+
+
+class ConcurrentEngine:
+    """Thread-safe admission queue + latency-bounded background batcher.
+
+    Production model servers get throughput from *dynamic batching over
+    concurrent clients*: many independent submitters, one batcher thread
+    assembling dense [max_batch, bucket] fold-in calls.  The assembly
+    discipline is the classic dual trigger:
+
+      * **full**    -- a padding bucket reaches ``max_batch`` queued
+        requests: flush immediately (throughput trigger);
+      * **timeout** -- the oldest queued request has waited
+        ``max_delay_ms``: flush its bucket even part-full (latency
+        trigger -- no request waits unboundedly for co-batchees);
+      * **drain**   -- ``close(drain=True)``: flush the remainder.
+
+    Requests whose SLO deadline passes before their batch is assembled
+    are *shed*: their ticket raises ``DeadlineExceeded`` and the
+    ``serve.shed`` counter increments -- typed back-pressure instead of
+    silent queue growth.  Once a request makes it into a batch it is
+    always served, even if the device work completes past its deadline
+    (the deadline bounds *queueing*, the batcher never wastes done work).
+
+    θ determinism is inherited from the fold-in contract: per-request θ
+    is a pure function of (snapshot, tokens, seed), so however the
+    dynamic batches slice the arrival stream, a pinned request is
+    bit-identical to its synchronous ``QueryEngine`` serving.  Each batch
+    re-acquires the latest published snapshot, which is what makes
+    zero-downtime live refresh free: a publisher flip between two batches
+    simply routes the next batch to the new version.
+    """
+
+    def __init__(self, engine: QueryEngine,
+                 max_delay_ms: Optional[float] = None,
+                 deadline_ms: Optional[float] = None):
+        self.engine = engine
+        ecfg = engine.ecfg
+        self.max_delay_ms = (ecfg.max_delay_ms if max_delay_ms is None
+                             else float(max_delay_ms))
+        self.deadline_ms = (ecfg.deadline_ms if deadline_ms is None
+                            else float(deadline_ms))
+        self._cond = threading.Condition()
+        self._buckets: Dict[int, Deque[_Admitted]] = {}
+        self._pending = 0
+        self._next_rid = 0
+        self._stop = False
+        self._drain = True
+        self._thread: Optional[threading.Thread] = None
+        # lifetime outcome counters (mirrored into the obs registry when
+        # one is installed; kept here so callers can assert without obs)
+        self.served = 0
+        self.shed = 0
+        self.failed = 0
+
+    # -- lifecycle --------------------------------------------------------
+    def start(self) -> "ConcurrentEngine":
+        with self._cond:
+            if self._thread is not None:
+                raise RuntimeError("batcher already running")
+            self._stop = False
+            self._thread = threading.Thread(
+                target=self._serve_loop, name="repro-serve-batcher",
+                daemon=True)
+            self._thread.start()
+        return self
+
+    def close(self, drain: bool = True) -> None:
+        """Stop the batcher.  ``drain=True`` serves everything still
+        queued first; ``drain=False`` fails the remainder (each pending
+        ticket raises RuntimeError)."""
+        with self._cond:
+            if self._thread is None:
+                return
+            self._stop = True
+            self._drain = drain
+            self._cond.notify_all()
+            thread = self._thread
+        thread.join()
+        with self._cond:
+            self._thread = None
+
+    def __enter__(self) -> "ConcurrentEngine":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    @property
+    def pending(self) -> int:
+        with self._cond:
+            return self._pending
+
+    # -- admission (any thread) ------------------------------------------
+    def submit(self, tokens: Sequence[int], seed: Optional[int] = None,
+               deadline_ms: Optional[float] = None) -> Ticket:
+        """Admit one document; returns a waitable ``Ticket``.
+
+        ``seed`` pins fold-in randomness exactly as in
+        ``QueryEngine.submit``; ``deadline_ms`` overrides the engine-wide
+        SLO for this request (0 disables).  Tokens beyond ``max_len`` are
+        truncated at admission.
+        """
+        tok = _admit_tokens(tokens, self.engine.ecfg.max_len)
+        dl = self.deadline_ms if deadline_ms is None else float(deadline_ms)
+        now = time.perf_counter_ns()
+        with self._cond:
+            if self._thread is None or self._stop:
+                raise RuntimeError("serving is not running (start() first)")
+            rid = self._next_rid
+            self._next_rid += 1
+            ticket = Ticket(rid)
+            entry = _Admitted(
+                ticket, Request(rid, tok, rid if seed is None else seed),
+                self.engine.bucket_of(max(tok.shape[0], 1)), now,
+                now + int(dl * 1e6) if dl > 0 else None)
+            self._buckets.setdefault(entry.bucket,
+                                     collections.deque()).append(entry)
+            self._pending += 1
+            depth = self._pending
+            self._cond.notify()
+        reg = _obs.metrics_for(self.engine.ecfg.foldin.obs)
+        if reg is not None:
+            reg.gauge("serve.queue_depth").set(depth)
+        return ticket
+
+    # -- batcher thread ---------------------------------------------------
+    def _serve_loop(self) -> None:
+        while True:
+            with self._cond:
+                now = time.perf_counter_ns()
+                expired = self._pop_expired(now)
+                batch, trigger = self._assemble(now)
+                done = self._stop and batch is None and self._pending == 0
+                if batch is None and not expired and not done:
+                    self._cond.wait(timeout=self._wait_s(now))
+            for entry in expired:
+                self._shed_one(entry)
+            if batch is not None:
+                self._serve(batch, trigger)
+            elif done and not expired:
+                return
+
+    def _pop_expired(self, now_ns: int) -> List[_Admitted]:
+        """Remove every queued request whose deadline has passed (called
+        under the lock; tickets are failed outside it)."""
+        out: List[_Admitted] = []
+        for bucket, dq in self._buckets.items():
+            if any(e.t_deadline_ns is not None and e.t_deadline_ns <= now_ns
+                   for e in dq):
+                keep = collections.deque()
+                for e in dq:
+                    if (e.t_deadline_ns is not None
+                            and e.t_deadline_ns <= now_ns):
+                        out.append(e)
+                    else:
+                        keep.append(e)
+                self._buckets[bucket] = keep
+        self._pending -= len(out)
+        return out
+
+    def _assemble(self, now_ns: int) -> Tuple[Optional[List[_Admitted]],
+                                              Optional[str]]:
+        """Dual-trigger batch assembly (called under the lock).
+
+        Priority: any full bucket first (throughput), else the bucket
+        whose head has aged past ``max_delay_ms`` (latency), else -- when
+        stopping with ``drain`` -- the oldest bucket outright.
+        """
+        mb = self.engine.ecfg.max_batch
+        aged_ns = int(self.max_delay_ms * 1e6)
+        oldest_bucket, oldest_t = None, None
+        for bucket in sorted(self._buckets):
+            dq = self._buckets[bucket]
+            if not dq:
+                continue
+            if len(dq) >= mb:
+                return self._take(bucket, mb), "full"
+            if oldest_t is None or dq[0].t_submit_ns < oldest_t:
+                oldest_bucket, oldest_t = bucket, dq[0].t_submit_ns
+        if oldest_bucket is None:
+            return None, None
+        if now_ns - oldest_t >= aged_ns:
+            return self._take(oldest_bucket, mb), "timeout"
+        if self._stop:
+            if not self._drain:
+                for bucket in list(self._buckets):
+                    for e in self._take(bucket, self._pending + mb):
+                        e.ticket._fail(RuntimeError(
+                            f"request {e.request.rid} dropped: serving "
+                            f"stopped without drain"))
+                        self.failed += 1
+                return None, None
+            return self._take(oldest_bucket, mb), "drain"
+        return None, None
+
+    def _take(self, bucket: int, n: int) -> List[_Admitted]:
+        dq = self._buckets[bucket]
+        out = [dq.popleft() for _ in range(min(n, len(dq)))]
+        self._pending -= len(out)
+        return out
+
+    def _wait_s(self, now_ns: int) -> Optional[float]:
+        """Sleep until the next time-based trigger could fire: the oldest
+        head ageing out, or the earliest queued deadline (None: idle)."""
+        next_ns = None
+        aged_ns = int(self.max_delay_ms * 1e6)
+        for dq in self._buckets.values():
+            for e in dq:
+                cands = [e.t_submit_ns + aged_ns]
+                if e.t_deadline_ns is not None:
+                    cands.append(e.t_deadline_ns)
+                t = min(cands)
+                if next_ns is None or t < next_ns:
+                    next_ns = t
+        if next_ns is None:
+            return None
+        return max((next_ns - now_ns) / 1e9, 0.0)
+
+    def _shed_one(self, entry: _Admitted) -> None:
+        now = time.perf_counter_ns()
+        waited_ms = (now - entry.t_submit_ns) / 1e6
+        deadline_ms = (entry.t_deadline_ns - entry.t_submit_ns) / 1e6
+        entry.ticket._fail(DeadlineExceeded(entry.request.rid, waited_ms,
+                                            deadline_ms))
+        self.shed += 1
+        reg = _obs.metrics_for(self.engine.ecfg.foldin.obs)
+        if reg is not None:
+            reg.counter("serve.shed").inc()
+
+    def _serve(self, batch: List[_Admitted], trigger: str) -> None:
+        engine = self.engine
+        reqs = [e.request for e in batch]
+        bucket = batch[0].bucket
+        reg = _obs.metrics_for(engine.ecfg.foldin.obs)
+        tr = _obs.tracer_for(engine.ecfg.foldin.obs)
+        try:
+            snap = engine._retain(engine.snapshot())
+            sp = (tr.span("engine.batch", cat="serve", bucket=bucket,
+                          occupancy=len(batch), trigger=trigger,
+                          max_batch=engine.ecfg.max_batch)
+                  if tr is not None else _obs.NULL_SPAN)
+            with sp:
+                theta = engine._run_batch(snap, reqs, bucket)
+        except BaseException as exc:   # noqa: BLE001 -- fail the tickets,
+            for e in batch:            # never wedge their submitters
+                e.ticket._fail(exc)
+            self.failed += len(batch)
+            if reg is not None:
+                reg.counter("serve.batch_errors").inc(len(batch))
+            return
+        t_done = time.perf_counter_ns()
+        for j, e in enumerate(batch):
+            e.ticket._complete(Result(e.request.rid, theta[j], snap.version))
+        self.served += len(batch)
+        if reg is not None:
+            reg.counter(f"serve.batch_trigger.{trigger}").inc()
+            reg.histogram("serve.batch_occupancy", unit="reqs") \
+                .record(len(batch))
+            for e in batch:
+                reg.histogram("serve.request_ms").record(
+                    (t_done - e.t_submit_ns) / 1e6)
+            reg.gauge("serve.snapshot_version").set(snap.version)
+            src = engine._source
+            if isinstance(src, SnapshotPublisher):
+                # bounded staleness, made measurable: how many published
+                # versions the batch just served lags the newest
+                reg.gauge("serve.version_lag").set(src.version
+                                                   - snap.version)

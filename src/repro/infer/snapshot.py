@@ -139,9 +139,18 @@ class SnapshotPublisher:
                 jax.block_until_ready(snap.model.aprob)  # built pre-flip
             with _obs.span("snapshot.swap", cat="snapshot",
                            version=version):
+                # Order matters for lock-free readers: the slot is filled
+                # first, the active index flips second, and the version
+                # counter advances LAST.  A reader that observes
+                # ``publisher.version == N`` is therefore guaranteed that
+                # ``acquire()`` already returns version N (or newer) --
+                # the property the serving version-lag gauge and any
+                # refresh logic keyed on ``version`` rely on.  (With the
+                # old version-before-flip order, a concurrent reader
+                # could see version N while still acquiring N-1.)
                 self._slots[target] = snap
-                self._version = version
                 self._active = target    # the flip: one reference store
+                self._version = version
         reg = _obs.metrics_registry()
         if reg is not None:
             reg.gauge("snapshot.version").set(version)

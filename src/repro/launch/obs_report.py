@@ -20,7 +20,11 @@ Five sections, each skipped gracefully when its inputs are absent:
     runs;
   * **serving latency** -- p50/p90/p95/p99 for every ``serve.*`` (and any
     other) histogram in the metrics dump -- the SLO view over
-    ``QueryEngine`` requests.
+    ``QueryEngine`` requests;
+  * **serving admission** -- the concurrent plane's outcome mix (DESIGN.md
+    section 14): dual-trigger flush reasons (``serve.batch_trigger.*``),
+    typed sheds (``serve.shed``), batch errors, and the live-refresh
+    staleness gauge (``serve.version_lag``).
 
 ``render(trace_dir)`` returns the report string (used by tests and
 ``bench_obs``); ``main()`` prints it.
@@ -134,6 +138,29 @@ def tier_stats_rows(events: List[dict],
     }
 
 
+def admission_stats(metrics: List[dict]) -> Optional[dict]:
+    """Concurrent-admission summary: trigger mix, sheds, errors, lag.
+
+    None when the run never went through the ``ConcurrentEngine`` (no
+    ``serve.batch_trigger.*`` counters, sheds, or version-lag gauge).
+    """
+    triggers = {m["name"].rsplit(".", 1)[-1]: m.get("value", 0)
+                for m in metrics if m.get("kind") == "counter"
+                and m.get("name", "").startswith("serve.batch_trigger.")}
+    counters = {m["name"]: m.get("value", 0) for m in metrics
+                if m.get("kind") == "counter"}
+    gauges = {m["name"]: m.get("value") for m in metrics
+              if m.get("kind") == "gauge"}
+    shed = counters.get("serve.shed", 0)
+    errors = counters.get("serve.batch_errors", 0)
+    lag = gauges.get("serve.version_lag")
+    if not triggers and not shed and lag is None:
+        return None
+    return {"triggers": triggers, "shed": shed, "errors": errors,
+            "version_lag": lag,
+            "version": gauges.get("serve.snapshot_version")}
+
+
 def latency_rows(metrics: List[dict]) -> List[dict]:
     """Every histogram's percentile summary (serve.* first)."""
     rows = [m for m in metrics if m.get("kind") == "histogram"
@@ -218,6 +245,22 @@ def render(trace_dir: str, trace_file: str = "trace.json",
                        f"{m['max']:>9.3f}  {m.get('unit', 'ms')}")
     elif metrics:
         out += ["", "latency histograms: (no histogram samples)"]
+
+    adm = admission_stats(metrics)
+    if adm is not None:
+        out += ["", "serving admission (concurrent plane, DESIGN.md sec. 14)"]
+        if adm["triggers"]:
+            total = sum(adm["triggers"].values()) or 1
+            mix = "  ".join(
+                f"{name}={n} ({100.0 * n / total:.0f}%)"
+                for name, n in sorted(adm["triggers"].items()))
+            out.append(f"  batch triggers: {mix}")
+        parts = [f"shed={adm['shed']}", f"batch_errors={adm['errors']}"]
+        if adm["version_lag"] is not None:
+            parts.append(f"version_lag={int(adm['version_lag'])}")
+        if adm["version"] is not None:
+            parts.append(f"serving_version={int(adm['version'])}")
+        out.append("  " + "  ".join(parts))
 
     counters = [m for m in metrics if m.get("kind") == "counter"]
     if counters:

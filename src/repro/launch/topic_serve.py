@@ -1,6 +1,7 @@
 """Topic inference serving launcher: train -> snapshot -> serve.
 
-Self-contained smoke of the whole serving path (CPU, < 2 min):
+Self-contained smoke of the whole serving path (CPU, < 2 min),
+including the concurrent admission plane and live refresh:
 
   PYTHONPATH=src python -m repro.launch.topic_serve --selftest
 
@@ -8,16 +9,21 @@ Full control:
 
   PYTHONPATH=src python -m repro.launch.topic_serve --docs 2000 \
       --vocab 5000 -k 100 --sweeps 40 --publish-every 10 \
-      --serve-docs 64 --queries 4
+      --serve-docs 64 --queries 4 \
+      --clients 8 --max-delay-ms 5 --deadline-ms 200 --refresh-every 2
 
 Train a model with ``repro.launch.lda`` semantics, publish versioned
 snapshots while training (the bounded-stale handoff of DESIGN.md section
-3), fold in held-out documents through the batched query engine, and rank
-them with topic-smoothed query likelihood.
+3), fold in held-out documents through the batched query engine, rank
+them with topic-smoothed query likelihood -- then (``--clients`` > 0)
+serve concurrent client threads through the dual-trigger batcher while a
+background trainer live-refreshes the snapshot every ``--refresh-every``
+sweeps (DESIGN.md section 14).
 """
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 
 import jax
@@ -25,7 +31,7 @@ import numpy as np
 
 from repro.core import lightlda as lda
 from repro.data import corpus as corpus_mod
-from repro.infer.engine import EngineConfig
+from repro.infer.engine import DeadlineExceeded, EngineConfig
 from repro.infer.foldin import FoldInConfig
 from repro.serve.topic_service import TopicService
 from repro.train.async_exec import ExecConfig
@@ -67,6 +73,8 @@ def run(args) -> int:
                         use_kernels=args.kernels)
     ecfg = EngineConfig(
         max_batch=args.serve_batch,
+        max_delay_ms=args.max_delay_ms,
+        deadline_ms=args.deadline_ms,
         foldin=FoldInConfig(num_sweeps=args.foldin_sweeps,
                             burnin=args.foldin_burnin,
                             use_kernels=args.kernels))
@@ -112,6 +120,11 @@ def run(args) -> int:
         print(f"[topic_serve]   query {q.tolist()}: best docs "
               + ", ".join(f"{d} ({scores[qi, d]:.1f})" for d in rank))
 
+    # --- concurrent serving under live refresh (DESIGN.md section 14) ---
+    concurrent_ok = True
+    if args.clients > 0:
+        concurrent_ok = _serve_concurrent(svc, args)
+
     elapsed = time.time() - t_start
     print(f"[topic_serve] end-to-end {elapsed:.1f}s")
 
@@ -122,10 +135,72 @@ def run(args) -> int:
         ok = (svc.version >= expect_versions
               and len(results) == len(docs)
               and all(abs(r.theta.sum() - 1.0) < 1e-3 for r in results)
-              and np.isfinite(scores).all())
+              and np.isfinite(scores).all()
+              and concurrent_ok)
         print(f"[topic_serve] selftest {'OK' if ok else 'FAILED'}")
         return 0 if ok else 1
-    return 0
+    return 0 if concurrent_ok else 1
+
+
+def _serve_concurrent(svc: TopicService, args) -> bool:
+    """Drive ``--clients`` submitter threads through the dual-trigger
+    batcher while a background trainer live-refreshes the published
+    snapshot.  Returns True when every request was either served or
+    typed-shed and at least one zero-downtime swap landed under load."""
+    svc.start_serving()          # batching knobs come from the EngineConfig
+    v0 = svc.version
+    trainer = svc.train_async(args.refresh_sweeps,
+                              jax.random.PRNGKey(args.seed + 3),
+                              publish_every=args.refresh_every)
+
+    lock = threading.Lock()
+    served, shed, errors = [], [], []
+
+    def client(ci: int) -> None:
+        rng = np.random.default_rng(7000 + ci)
+        tickets = [svc.submit(
+            rng.integers(0, args.vocab,
+                         size=int(rng.integers(4, 80))).astype(np.int32),
+            seed=ci * 10_000 + i) for i in range(args.client_requests)]
+        for t in tickets:
+            try:
+                r = t.result(timeout=300)
+                with lock:
+                    served.append(r)
+            except DeadlineExceeded as exc:
+                with lock:
+                    shed.append(exc)
+            except Exception as exc:   # noqa: BLE001 -- selftest verdict
+                with lock:
+                    errors.append(exc)
+
+    t0 = time.time()
+    threads = [threading.Thread(target=client, args=(ci,), daemon=True)
+               for ci in range(args.clients)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    dt = time.time() - t0
+    trainer.join()
+    svc.stop_serving()
+
+    total = args.clients * args.client_requests
+    swaps = svc.version - v0
+    versions = sorted({r.version for r in served})
+    print(f"[topic_serve] concurrent: {len(served)} served / "
+          f"{len(shed)} shed / {len(errors)} errors of {total} requests "
+          f"from {args.clients} clients in {dt:.2f}s "
+          f"({len(served)/max(dt, 1e-9):.1f} req/s)")
+    print(f"[topic_serve] live refresh: {swaps} snapshot swaps under load "
+          f"(v{v0} -> v{svc.version}), served from versions {versions}")
+    ok = (not errors
+          and len(served) + len(shed) == total
+          and all(abs(r.theta.sum() - 1.0) < 1e-3 for r in served)
+          and swaps >= 1)
+    if not ok:
+        print("[topic_serve] concurrent phase FAILED")
+    return ok
 
 
 def main():
@@ -162,6 +237,26 @@ def main():
     ap.add_argument("--foldin-burnin", type=int, default=10)
     ap.add_argument("--queries", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)
+    # concurrent serving plane (DESIGN.md section 14)
+    ap.add_argument("--clients", type=int, default=0,
+                    help="concurrent client threads driving the admission "
+                         "queue (0: skip the concurrent phase; --selftest "
+                         "defaults to 4)")
+    ap.add_argument("--client-requests", type=int, default=8,
+                    help="requests each client thread submits")
+    ap.add_argument("--max-delay-ms", type=float, default=5.0,
+                    help="batcher latency bound: flush a part-full bucket "
+                         "once its oldest request has waited this long")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request SLO: requests still queued past this "
+                         "are shed with a typed DeadlineExceeded (0: off)")
+    ap.add_argument("--refresh-every", type=int, default=1,
+                    help="live-refresh cadence: the background trainer "
+                         "publishes a snapshot every N sweeps while the "
+                         "engine keeps serving")
+    ap.add_argument("--refresh-sweeps", type=int, default=10,
+                    help="sweeps the background trainer runs during the "
+                         "concurrent phase")
     args = ap.parse_args()
     if not 0 <= args.foldin_burnin < args.foldin_sweeps:
         ap.error(f"--foldin-burnin ({args.foldin_burnin}) must be in "
@@ -177,6 +272,10 @@ def main():
         args.sweeps = min(args.sweeps, 15)
         args.block_tokens = min(args.block_tokens, 4096)
         args.publish_every = min(args.publish_every, 5)
+        # the selftest always drives the concurrent path (CI smoke)
+        if args.clients == 0:
+            args.clients = 4
+        args.refresh_sweeps = min(args.refresh_sweeps, 6)
 
     raise SystemExit(run(args))
 

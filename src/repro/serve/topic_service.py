@@ -15,6 +15,13 @@ section 3) and wires them to a training state:
   * a ``QueryEngine`` folds in unseen documents against the latest
     snapshot and scores queries with topic-smoothed query likelihood.
 
+Under production traffic the service runs *concurrently* (DESIGN.md
+section 14): ``start_serving()`` attaches a ``ConcurrentEngine`` --
+thread-safe admission, latency-bounded dynamic batching, typed deadline
+shedding -- and ``train_async()`` keeps training on a background thread
+while ``PublishCallback`` hands a fresh snapshot to the live engine every
+N visits (zero-downtime refresh with bounded, measured staleness).
+
 This is the single-process shape of the production system: on a pod the
 sweep runs under shard_map on the training slice while the publisher hands
 snapshots to dedicated serving hosts; the object boundaries are the same.
@@ -22,6 +29,7 @@ snapshots to dedicated serving hosts; the object boundaries are the same.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import warnings
 from typing import List, Optional, Sequence
 
@@ -33,9 +41,37 @@ import jax.numpy as jnp
 from repro import obs as _obs
 from repro import ps
 from repro.core import lightlda as lda
-from repro.infer.engine import EngineConfig, QueryEngine, Result
+from repro.infer.engine import (ConcurrentEngine, EngineConfig, QueryEngine,
+                                Result, Ticket)
 from repro.infer.snapshot import Snapshot, SnapshotPublisher
 from repro.train.async_exec import ExecConfig
+
+
+class TrainingHandle:
+    """Join handle for a background ``train_async`` run.
+
+    ``join()`` blocks until the training thread finishes and returns the
+    final published snapshot (re-raising any training error on the
+    caller's thread, so failures in the continuous-learning loop never
+    pass silently).
+    """
+
+    def __init__(self):
+        self._thread: Optional[threading.Thread] = None
+        self._snapshot: Optional[Snapshot] = None
+        self._error: Optional[BaseException] = None
+
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def join(self, timeout: Optional[float] = None) -> Snapshot:
+        self._thread.join(timeout)
+        if self._thread.is_alive():
+            raise TimeoutError(f"training still running after {timeout}s")
+        if self._error is not None:
+            raise self._error
+        return self._snapshot
 
 
 @dataclasses.dataclass
@@ -66,6 +102,7 @@ class TopicService:
         if self.publisher is None:
             self.publisher = SnapshotPublisher(self.cfg)
         self.engine = QueryEngine(self.publisher, self.ecfg)
+        self._serving: Optional[ConcurrentEngine] = None
 
     # -- training side ---------------------------------------------------
     def init_from_corpus(self, corp, seed: int = 0) -> None:
@@ -79,24 +116,76 @@ class TopicService:
         publish every ``publish_every`` sweeps (and always once at the
         end).  Returns the final snapshot."""
         assert self.state is not None, "init_from_corpus / set state first"
-        from repro.api.callbacks import Callback
+        from repro.api.callbacks import PublishCallback
         from repro.api.session import memory_fit
 
-        service = self
-
-        class _Publish(Callback):
-            def on_sweep_end(self, view):
-                if publish_every and view.step % publish_every == 0:
-                    service.publisher.publish_state(view.state)
-
+        cbs = ([PublishCallback(self.publisher, every=publish_every)]
+               if publish_every else [])
         with _obs.span("service.train", cat="serve", sweeps=num_sweeps,
                        publish_every=publish_every):
             state, _, _ = memory_fit(
                 self.state, key, self.cfg, self.exec_cfg, num_sweeps,
-                eval_every=0, log_fn=lambda *a, **k: None,
-                callbacks=[_Publish()])
+                eval_every=0, log_fn=lambda *a, **k: None, callbacks=cbs)
             self.state = state
             return self.publisher.publish_state(state)
+
+    def train_async(self, num_sweeps: int, key: jax.Array,
+                    publish_every: int = 1) -> TrainingHandle:
+        """Continuous-learning mode (DESIGN.md section 14): run ``train``
+        on a background thread, publishing every ``publish_every`` sweeps
+        while the live engine keeps serving.  Each published version is
+        picked up by the next dynamic batch -- zero-downtime refresh --
+        and the ``serve.version_lag`` gauge measures how far serving ever
+        trails the newest publication.  Returns a ``TrainingHandle``;
+        ``join()`` yields the final snapshot."""
+        handle = TrainingHandle()
+
+        def _run():
+            try:
+                handle._snapshot = self.train(num_sweeps, key,
+                                              publish_every=publish_every)
+            except BaseException as exc:   # noqa: BLE001 -- re-raised at join
+                handle._error = exc
+
+        handle._thread = threading.Thread(
+            target=_run, name="repro-serve-trainer", daemon=True)
+        handle._thread.start()
+        return handle
+
+    # -- concurrent serving (DESIGN.md section 14) -----------------------
+    def start_serving(self, max_delay_ms: Optional[float] = None,
+                      deadline_ms: Optional[float] = None
+                      ) -> ConcurrentEngine:
+        """Attach and start the concurrent admission plane.  ``submit()``
+        becomes available from any thread; batching/deadline knobs
+        default to ``ecfg.max_delay_ms`` / ``ecfg.deadline_ms``."""
+        if self._serving is not None:
+            raise RuntimeError("already serving; stop_serving() first")
+        self._serving = ConcurrentEngine(
+            self.engine, max_delay_ms=max_delay_ms,
+            deadline_ms=deadline_ms).start()
+        return self._serving
+
+    def submit(self, tokens: Sequence[int], seed: Optional[int] = None,
+               deadline_ms: Optional[float] = None) -> Ticket:
+        """Admit one document to the live batcher; returns a waitable
+        ``Ticket`` (``result()`` -> ``Result`` or ``DeadlineExceeded``)."""
+        if self._serving is None:
+            raise RuntimeError("not serving; start_serving() first")
+        return self._serving.submit(tokens, seed=seed,
+                                    deadline_ms=deadline_ms)
+
+    def stop_serving(self, drain: bool = True) -> None:
+        """Stop the batcher (``drain=True``: serve the queued remainder
+        first).  Idempotent."""
+        if self._serving is not None:
+            self._serving.close(drain=drain)
+            self._serving = None
+
+    @property
+    def serving(self) -> Optional[ConcurrentEngine]:
+        """The live admission plane, or None when not started."""
+        return self._serving
 
     # -- serving side ----------------------------------------------------
     def fold_in(self, docs: Sequence[np.ndarray],

@@ -292,3 +292,123 @@ class TestQueryEngine:
         assert scores.shape == (2, 2)
         assert scores[0, 0] > scores[0, 1]
         assert scores[1, 1] > scores[1, 0]
+
+
+class TestServingBugfixes:
+    """Dedicated regressions for the serving-path bugfix sweep (PR 9)."""
+
+    def _setup(self, max_batch=4, max_len=1024):
+        cfg = lda.LDAConfig(num_topics=4, vocab_size=40)
+        model = _peaked_model(cfg)
+        pub = SnapshotPublisher(cfg)
+        pub.publish(model.nwk, model.nk)
+        eng = QueryEngine(pub, EngineConfig(
+            max_batch=max_batch, min_bucket=16, max_len=max_len,
+            foldin=FoldInConfig(num_sweeps=10, burnin=4)))
+        return cfg, eng
+
+    def test_t_submit_never_leaks_when_obs_toggles(self):
+        """Regression: submit-timestamp entries used to be popped only when
+        a metrics registry was present at flush time, so a server whose obs
+        session closed between submit and flush leaked one dict entry per
+        request forever."""
+        from repro import obs
+
+        cfg, eng = self._setup()
+        s = obs.ObsSession(obs.ObsConfig(enabled=True, trace=False)).install()
+        try:
+            for i in range(5):
+                eng.submit(np.arange(8, dtype=np.int32), seed=i)
+            assert len(eng._t_submit) == 5      # timestamps recorded
+        finally:
+            s.close(save=False)                 # obs OFF before the flush
+        results = eng.flush()
+        assert len(results) == 5
+        assert eng._t_submit == {}              # no leak
+
+    def test_t_submit_empty_with_obs_off(self):
+        cfg, eng = self._setup()
+        for i in range(3):
+            eng.submit(np.arange(8, dtype=np.int32), seed=i)
+        assert eng._t_submit == {}              # never recorded without obs
+        eng.flush()
+        assert eng._t_submit == {}
+
+    def test_publish_orders_version_after_flip(self):
+        """Regression: publish() used to bump ``_version`` before flipping
+        ``_active``, so a lock-free reader could observe version N while
+        ``acquire()`` still returned the N-1 slot.  Contract under stress:
+        a ``version`` read *before* ``acquire()`` is a lower bound on the
+        acquired snapshot's version, and acquired versions are monotonic
+        per reader."""
+        import threading
+
+        cfg = lda.LDAConfig(num_topics=4, vocab_size=40)
+        model = _peaked_model(cfg)
+        pub = SnapshotPublisher(cfg)
+        pub.publish(model.nwk, model.nk)
+        stop = threading.Event()
+        violations = []
+
+        def reader():
+            last = -1
+            while not stop.is_set():
+                v_before = pub.version
+                snap = pub.acquire()
+                if snap.version < v_before:
+                    violations.append((v_before, snap.version))
+                if snap.version < last:
+                    violations.append(("non-monotonic", last, snap.version))
+                last = snap.version
+
+        threads = [threading.Thread(target=reader, daemon=True)
+                   for _ in range(4)]
+        for t in threads:
+            t.start()
+        for _ in range(40):
+            pub.publish(model.nwk, model.nk)
+        stop.set()
+        for t in threads:
+            t.join(timeout=10)
+        assert not violations, violations[:5]
+
+    def test_submit_truncates_at_max_len_boundary(self):
+        """Regression: docs longer than ``max_len`` used to be queued
+        verbatim and only clipped later by ``pack_docs``; the queue now
+        never holds more than ``max_len`` tokens per request."""
+        cfg, eng = self._setup(max_len=32)
+        for n in (31, 32, 33):
+            eng.submit((np.arange(n) % cfg.V).astype(np.int32), seed=7)
+        lengths = [len(req.tokens) for req in eng._queue]
+        assert lengths == [31, 32, 32]
+        eng._queue.clear()
+
+        # θ of an over-long doc == θ of its max_len prefix (same seed):
+        # truncation at admission is the whole serving story for the tail
+        long_doc = (np.arange(33) % cfg.V).astype(np.int32)
+        r_long = eng.infer([long_doc], seeds=[3])[0]
+        r_pref = eng.infer([long_doc[:32]], seeds=[3])[0]
+        np.testing.assert_array_equal(r_long.theta, r_pref.theta)
+
+    def test_score_pack_lengths_bucketed_no_retrace(self):
+        """Regression: ``score()`` used to pack at the exact max doc/query
+        length, compiling a fresh program per distinct (ld, lq) pair.  Two
+        calls whose lengths differ but share padding buckets must reuse
+        one compiled shape."""
+        from repro.infer.engine import topic_smoothed_scores
+
+        cfg, eng = self._setup()
+        rng = np.random.default_rng(0)
+
+        def call(ld, lq):
+            docs = [rng.integers(0, cfg.V, size=ld).astype(np.int32)]
+            qs = [rng.integers(0, cfg.V, size=lq).astype(np.int32)]
+            eng.score(eng.infer(docs, seeds=[0]), docs, qs)
+
+        call(17, 5)                            # buckets (32, 16)
+        n_compiled = topic_smoothed_scores._cache_size()
+        call(25, 9)                            # same buckets, new lengths
+        call(30, 14)
+        assert topic_smoothed_scores._cache_size() == n_compiled
+        call(40, 5)                            # new doc bucket (64): +1
+        assert topic_smoothed_scores._cache_size() == n_compiled + 1

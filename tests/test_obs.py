@@ -525,3 +525,27 @@ def test_fit_lda_shims_warn_deprecation(lda_state, stream_dir):
         train_loop.fit_lda_stream(reader, scfg, ExecConfig(), epochs=1,
                                   max_shards=1,
                                   log_fn=lambda *a, **k: None)
+
+def test_obs_report_admission_section(tmp_path):
+    from repro.launch import obs_report
+
+    from repro.obs.metrics import MetricsRegistry
+    reg = MetricsRegistry()
+    reg.counter("serve.batch_trigger.full").inc(6)
+    reg.counter("serve.batch_trigger.timeout").inc(2)
+    reg.counter("serve.shed").inc(3)
+    reg.gauge("serve.version_lag").set(1)
+    reg.gauge("serve.snapshot_version").set(9)
+    reg.save(str(tmp_path / "metrics.jsonl"))
+
+    text = obs_report.render(str(tmp_path))
+    assert "serving admission" in text
+    assert "full=6 (75%)" in text and "timeout=2 (25%)" in text
+    assert "shed=3" in text and "version_lag=1" in text
+    assert "serving_version=9" in text
+    # a run that never went through the concurrent plane: no section
+    reg2 = MetricsRegistry()
+    reg2.counter("stream.prefetch_hit").inc(5)
+    reg2.save(str(tmp_path / "m2.jsonl"))
+    assert "serving admission" not in obs_report.render(
+        str(tmp_path), metrics_file="m2.jsonl")

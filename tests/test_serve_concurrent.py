@@ -1,0 +1,209 @@
+"""Concurrent serving plane tests (DESIGN.md section 14): thread-safe
+admission, dual-trigger batching, typed deadline shedding, zero-downtime
+live refresh, and θ determinism under dynamic batch composition."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import lightlda as lda
+from repro.infer.engine import (ConcurrentEngine, DeadlineExceeded,
+                                EngineConfig, QueryEngine)
+from repro.infer.foldin import FoldInConfig
+from repro.infer.snapshot import SnapshotPublisher
+from tests.test_infer import _peaked_model
+
+
+def _setup(max_batch=4, max_delay_ms=5.0, deadline_ms=0.0):
+    cfg = lda.LDAConfig(num_topics=4, vocab_size=40)
+    model = _peaked_model(cfg)
+    pub = SnapshotPublisher(cfg)
+    pub.publish(model.nwk, model.nk)
+    eng = QueryEngine(pub, EngineConfig(
+        max_batch=max_batch, min_bucket=16,
+        max_delay_ms=max_delay_ms, deadline_ms=deadline_ms,
+        foldin=FoldInConfig(num_sweeps=10, burnin=4)))
+    return cfg, model, pub, eng
+
+
+class TestConcurrentAdmission:
+    def test_exactly_one_result_per_request_under_load(self):
+        """N submitter threads + a live publisher thread: every admitted
+        request resolves to exactly one Result, nothing lost or wedged,
+        with >= 5 zero-downtime snapshot swaps landing underneath."""
+        cfg, model, pub, eng = _setup(max_batch=4, max_delay_ms=2.0)
+        n_threads, per_thread = 6, 10
+        results = [[] for _ in range(n_threads)]
+        errors = []
+        stop_pub = threading.Event()
+
+        def publisher():
+            while not stop_pub.is_set() or pub.version < 6:
+                pub.publish(model.nwk, model.nk)
+
+        def client(ci):
+            rng = np.random.default_rng(ci)
+            tickets = [serving.submit(
+                rng.integers(0, cfg.V, size=rng.integers(2, 40)
+                             ).astype(np.int32),
+                seed=ci * 1000 + i) for i in range(per_thread)]
+            for t in tickets:
+                try:
+                    results[ci].append(t.result(timeout=60))
+                except Exception as exc:   # noqa: BLE001 -- asserted below
+                    errors.append(exc)
+
+        with ConcurrentEngine(eng) as serving:
+            pt = threading.Thread(target=publisher, daemon=True)
+            pt.start()
+            threads = [threading.Thread(target=client, args=(ci,),
+                                        daemon=True)
+                       for ci in range(n_threads)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join(timeout=120)
+            stop_pub.set()
+            pt.join(timeout=60)
+
+        assert not errors, errors[:3]
+        assert [len(r) for r in results] == [per_thread] * n_threads
+        assert serving.served == n_threads * per_thread
+        assert serving.shed == 0 and serving.failed == 0
+        assert pub.version >= 6                   # >= 5 swaps under load
+        for rs in results:
+            for r in rs:
+                assert r.theta.shape == (cfg.K,)
+                assert abs(r.theta.sum() - 1.0) < 1e-4
+
+    def test_theta_bit_identical_to_sync_engine(self):
+        """θ is a pure function of (snapshot, tokens, seed): a pinned
+        request served through the dynamic batcher -- whatever batch it
+        landed in -- is bitwise equal to synchronous QueryEngine serving
+        of the same version."""
+        cfg, model, pub, eng = _setup(max_batch=3, max_delay_ms=1.0)
+        rng = np.random.default_rng(42)
+        docs = [rng.integers(0, cfg.V, size=n).astype(np.int32)
+                for n in (3, 17, 8, 30, 5, 12, 25, 9)]
+        seeds = list(range(100, 100 + len(docs)))
+
+        with ConcurrentEngine(eng) as serving:
+            tickets = [serving.submit(d, seed=s)
+                       for d, s in zip(docs, seeds)]
+            got = [t.result(timeout=60) for t in tickets]
+        assert {r.version for r in got} == {pub.version}
+
+        ref_eng = QueryEngine(pub.acquire(), eng.ecfg)   # frozen snapshot
+        ref = ref_eng.infer(docs, seeds=seeds)
+        for r, e in zip(got, ref):
+            np.testing.assert_array_equal(r.theta, e.theta)
+
+    def test_submit_after_close_raises(self):
+        cfg, model, pub, eng = _setup()
+        serving = ConcurrentEngine(eng).start()
+        serving.close()
+        with pytest.raises(RuntimeError, match="not running"):
+            serving.submit(np.arange(4, dtype=np.int32))
+
+
+class TestDualTrigger:
+    def test_full_and_timeout_triggers_counted(self):
+        """A full bucket flushes immediately (throughput trigger); a lone
+        straggler flushes once it ages past max_delay_ms (latency
+        trigger).  Both reasons surface as serve.batch_trigger.* counters."""
+        cfg, model, pub, eng = _setup(max_batch=4, max_delay_ms=30.0)
+        s = obs.ObsSession(obs.ObsConfig(enabled=True, trace=False)).install()
+        try:
+            with ConcurrentEngine(eng) as serving:
+                doc = np.arange(8, dtype=np.int32)
+                full = [serving.submit(doc, seed=i) for i in range(4)]
+                for t in full:
+                    t.result(timeout=60)
+                lone = serving.submit(doc, seed=99)
+                lone.result(timeout=60)
+            reg = obs.metrics_registry()
+            assert reg.get("serve.batch_trigger.full").value >= 1
+            assert reg.get("serve.batch_trigger.timeout").value >= 1
+        finally:
+            s.close(save=False)
+
+    def test_drain_on_close_serves_remainder(self):
+        cfg, model, pub, eng = _setup(max_batch=8, max_delay_ms=10_000.0)
+        serving = ConcurrentEngine(eng).start()
+        tickets = [serving.submit(np.arange(6, dtype=np.int32), seed=i)
+                   for i in range(3)]
+        serving.close(drain=True)              # nothing flushed yet: drain
+        for t in tickets:
+            assert t.result(timeout=60).theta.shape == (cfg.K,)
+        assert serving.served == 3
+
+    def test_close_without_drain_fails_pending_typed(self):
+        cfg, model, pub, eng = _setup(max_batch=8, max_delay_ms=10_000.0)
+        serving = ConcurrentEngine(eng).start()
+        tickets = [serving.submit(np.arange(6, dtype=np.int32), seed=i)
+                   for i in range(3)]
+        serving.close(drain=False)
+        for t in tickets:
+            with pytest.raises(RuntimeError, match="dropped"):
+                t.result(timeout=60)
+        assert serving.failed == 3
+
+
+class TestDeadlineShedding:
+    def test_shed_raises_typed_and_is_counted(self):
+        """Requests whose deadline lapses while queued raise
+        DeadlineExceeded from result() and increment serve.shed; they are
+        never silently dropped."""
+        cfg, model, pub, eng = _setup(max_batch=16, max_delay_ms=10_000.0)
+        s = obs.ObsSession(obs.ObsConfig(enabled=True, trace=False)).install()
+        try:
+            with ConcurrentEngine(eng) as serving:
+                doc = np.arange(8, dtype=np.int32)
+                tickets = [serving.submit(doc, seed=i, deadline_ms=0.5)
+                           for i in range(3)]
+                for t in tickets:
+                    with pytest.raises(DeadlineExceeded) as ei:
+                        t.result(timeout=60)
+                    assert ei.value.deadline_ms == pytest.approx(0.5)
+                    assert ei.value.waited_ms >= 0.0
+                assert serving.shed == 3 and serving.served == 0
+            assert obs.metrics_registry().get("serve.shed").value == 3
+        finally:
+            s.close(save=False)
+
+    def test_batched_request_always_served_past_deadline(self):
+        """The deadline bounds *queueing* only: a full bucket flushes
+        immediately, so requests admitted with a generous deadline that
+        make it into a batch are served even if the device work outlives
+        the deadline."""
+        cfg, model, pub, eng = _setup(max_batch=2, max_delay_ms=10_000.0)
+        with ConcurrentEngine(eng) as serving:
+            doc = np.arange(8, dtype=np.int32)
+            tickets = [serving.submit(doc, seed=i, deadline_ms=5_000.0)
+                       for i in range(2)]         # full trigger, instantly
+            for t in tickets:
+                assert t.result(timeout=60).theta.shape == (cfg.K,)
+        assert serving.served == 2 and serving.shed == 0
+
+
+class TestLiveRefresh:
+    def test_version_lag_gauge_and_monotonic_service_versions(self):
+        """Each dynamic batch re-acquires the newest snapshot; the
+        serve.version_lag gauge measures how far a served batch ever
+        trailed the publisher (bounded staleness, made visible)."""
+        cfg, model, pub, eng = _setup(max_batch=2, max_delay_ms=1.0)
+        s = obs.ObsSession(obs.ObsConfig(enabled=True, trace=False)).install()
+        try:
+            with ConcurrentEngine(eng) as serving:
+                versions = []
+                for i in range(6):
+                    t = serving.submit(np.arange(8, dtype=np.int32), seed=i)
+                    versions.append(t.result(timeout=60).version)
+                    pub.publish(model.nwk, model.nk)
+            assert versions == sorted(versions)       # never goes backwards
+            assert versions[-1] > versions[0]         # refresh observed
+            lag = obs.metrics_registry().get("serve.version_lag")
+            assert lag is not None and lag.value >= 0
+        finally:
+            s.close(save=False)

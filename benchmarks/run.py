@@ -23,6 +23,9 @@
   serve        production serving plane: concurrent clients through the
                dual-trigger batcher against a live-refreshing service --
                QPS, p50/p95/p99, swaps under load (emits BENCH_serve.json)
+  net          network PS: tokens/sec scaling 1 -> 4 worker subprocesses
+               against one server under emulated RTT, straggler
+               re-assignment on (emits BENCH_net.json)
 
 ``python -m benchmarks.run`` runs everything at reduced ("fast") sizes and
 prints CSV-ish lines; ``--full`` uses the paper-ladder sizes; ``--only X``
@@ -37,7 +40,7 @@ import traceback
 
 from benchmarks import (bench_async, bench_comm, bench_convergence,
                         bench_infer, bench_kernels, bench_loadbalance,
-                        bench_obs, bench_ps, bench_roofline, bench_serve,
+                        bench_net, bench_obs, bench_ps, bench_roofline, bench_serve,
                         bench_stream, bench_table1, bench_tiered)
 
 MODULES = {
@@ -54,6 +57,7 @@ MODULES = {
     "obs": bench_obs.main,
     "tiered": bench_tiered.main,
     "serve": bench_serve.main,
+    "net": bench_net.main,
 }
 
 

@@ -22,7 +22,7 @@ from repro.api.callbacks import (Callback, CheckpointCallback, EvalCallback,
                                  TraceCallback)
 from repro.api.estimator import APSLDA
 from repro.api.job import (CheckpointPolicy, JobValidationError, LDAJob,
-                           IN_PROCESS, SPMD)
+                           IN_PROCESS, NET, SPMD)
 from repro.api.model import TopicModel
 from repro.api.session import Session, SessionResult
 
@@ -35,7 +35,7 @@ from repro.ps import CooRoute, DenseRoute, HybridRoute, PushRoute
 
 __all__ = [
     "APSLDA", "LDAJob", "TopicModel", "Session", "SessionResult",
-    "CheckpointPolicy", "JobValidationError", "IN_PROCESS", "SPMD",
+    "CheckpointPolicy", "JobValidationError", "IN_PROCESS", "NET", "SPMD",
     "Callback", "CheckpointCallback", "EvalCallback", "LogCallback",
     "PublishCallback", "SweepView", "TraceCallback", "ObsConfig",
     "CooRoute", "DenseRoute", "HybridRoute", "PushRoute",

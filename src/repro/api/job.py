@@ -32,7 +32,9 @@ from repro.train.async_exec import ExecConfig
 
 IN_PROCESS = "in_process"
 SPMD = "spmd"
-_BACKENDS = (IN_PROCESS, SPMD)
+NET = "net"
+_BACKENDS = (IN_PROCESS, SPMD, NET)
+_NET_ASSIGN = ("dynamic", "static", "static_steal")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,6 +127,14 @@ class LDAJob:
     # --- backend ---
     backend: str = IN_PROCESS
     mesh_model: int = 2                   # SPMD: server-axis size
+    # net backend (repro.ps.net): a standalone PS process + a pool of
+    # worker subprocesses.  ``server`` is a running ``launch.ps_server``
+    # address (None: the session embeds one); ``workers`` the pool size;
+    # ``net_assign`` the shard re-assignment mode ("dynamic" /
+    # "static" / "static_steal" -- see data.leases).
+    server: Optional[str] = None
+    workers: int = 2
+    net_assign: str = "dynamic"
 
     # --- schedule ---
     sweeps: int = 50                      # in-memory source
@@ -226,6 +236,38 @@ class LDAJob:
                            "yet; drop checkpoint= (persist the final model "
                            "via TopicModel.save) or use "
                            "backend='in_process'")
+
+        if self.backend == NET:
+            if self.workers < 1:
+                out.append(f"workers must be >= 1 (got {self.workers})")
+            if self.net_assign not in _NET_ASSIGN:
+                out.append(f"net_assign must be one of {_NET_ASSIGN} (got "
+                           f"{self.net_assign!r})")
+            if self.num_shards != 1:
+                out.append(f"backend='net' requires num_shards=1 (got "
+                           f"{self.num_shards}); the standalone server "
+                           "holds the whole table")
+            if self.storage != "dense":
+                out.append("backend='net' requires storage='dense'; the "
+                           "server process keeps the table in host memory "
+                           "already")
+            if self.route == "auto" or self.staleness == "auto":
+                out.append("backend='net' does not support route/staleness "
+                           "'auto' (the autotuner measures in-process); "
+                           "pass concrete values")
+            if self.checkpoint.path:
+                out.append("checkpointing the net plane is not supported "
+                           "yet; the stream's z files plus the server "
+                           "counts are the durable state")
+            if self.server is not None and self.source_kind != "stream":
+                out.append("server= needs a streamed source: the external "
+                           "ps_server must be started on the same "
+                           "stream_dir the workers read; memory-source "
+                           "net jobs embed their own server")
+        elif self.server is not None:
+            out.append(f"server= only applies to backend='net' (got "
+                       f"server={self.server!r} with backend="
+                       f"{self.backend!r})")
 
         if self.sweeps < 1:
             out.append(f"sweeps must be >= 1 (got {self.sweeps})")

@@ -44,7 +44,7 @@ from repro import obs as _obs
 from repro import ps
 from repro.api.callbacks import (Callback, CheckpointCallback, EvalCallback,
                                  SweepView)
-from repro.api.job import SPMD, JobValidationError, LDAJob
+from repro.api.job import NET, SPMD, JobValidationError, LDAJob
 from repro.core import lightlda as lda
 from repro.core import perplexity as ppl
 from repro.data import stream as stream_mod
@@ -663,6 +663,238 @@ class _StreamPlane:
 
 
 # ---------------------------------------------------------------------------
+# Plane: stream (or materialised memory) source, network backend --
+# a standalone PS process + an elastic pool of worker subprocesses
+# (repro.ps.net, DESIGN.md section 15).
+# ---------------------------------------------------------------------------
+
+class _NetPlane:
+    """Training through the network parameter server.
+
+    The session process never samples: it seeds the stream
+    (``init_stream``), loads the initial counts into the server, installs
+    the visit schedule as a lease plan, spawns the worker pool and then
+    *supervises* -- each ``step`` waits for one more lease to commit,
+    reaping dead workers (their leases re-queue) along the way.  The
+    conservation law (server counts == histogram of the on-disk z) holds
+    at every commit boundary; a 1-worker run is bitwise identical to
+    ``_StreamPlane`` (same ``stream_sweep_key``, same executor).
+    """
+
+    kind = "net"
+
+    def __init__(self, source, cfg, exec_cfg, epochs, job, *, log_fn=print):
+        # source: a ShardedCorpusReader (stream job) or a Corpus
+        # (memory job -- materialised into a temp stream dir in setup)
+        self.source = source
+        self.cfg = cfg
+        self.exec_cfg = exec_cfg
+        self.epochs = int(epochs)
+        self.job = job
+        self.seed = int(job.seed)
+        self.log_fn = log_fn
+        self.info: dict = {}
+        self.t0 = time.time()
+        self.visit_timeout = 600.0
+        self._ready = False
+        self._tmp = None
+        self._server = None
+        self._final = None
+
+    # -- lifecycle ---------------------------------------------------------
+    def setup(self):
+        if self._ready:
+            return
+        self._ready = True
+        import tempfile
+
+        from repro.ps.net import (NetClient, PSServer, WorkerConfig,
+                                  WorkerPool, wire)
+        self._wire = wire
+        job, cfg = self.job, self.cfg
+        if isinstance(self.source, stream_mod.ShardedCorpusReader):
+            self.reader = self.source
+            self.stream_dir = job.stream_dir
+        else:
+            # materialise the in-memory corpus as a stream the worker
+            # processes can read; shard size targets ~2 visits per worker
+            # per epoch, rounded to the executor's block granularity
+            self._tmp = tempfile.mkdtemp(prefix="repro-net-")
+            corp = self.source
+            target = max(2 * job.workers, 4)
+            blocks = max(1, -(-corp.w.shape[0] //
+                              (cfg.block_tokens * target)))
+            stream_mod.write_sharded(self._tmp, corp,
+                                     tokens_per_shard=blocks
+                                     * cfg.block_tokens)
+            self.reader = stream_mod.ShardedCorpusReader(self._tmp)
+            self.stream_dir = self._tmp
+        meta = self.reader.meta
+        if (self.exec_cfg.model_blocks == 0
+                and meta.tokens_per_shard % cfg.block_tokens):
+            raise ValueError(
+                f"tokens_per_shard={meta.tokens_per_shard} must be a "
+                f"multiple of block_tokens={cfg.block_tokens} for the "
+                f"snapshot executor")
+
+        self._client = ps.PSClient.create(num_shards=1,
+                                          interpret=cfg.kernel_interpret)
+        nwk0, nk0 = init_stream(self.reader, cfg, self.seed,
+                                client=self._client)
+        if job.server:
+            self.address = job.server
+        else:
+            self._server = PSServer(cfg.V, cfg.K,
+                                    stream_dir=self.stream_dir,
+                                    log_fn=self.log_fn).start()
+            self.address = self._server.address
+        self.ctl = NetClient.connect(self.address, name="session-ctl",
+                                     role="ctl")
+        if self.ctl.meta["vocab"] != cfg.V or self.ctl.meta["topics"] != cfg.K:
+            raise ValueError(
+                f"server at {self.address} hosts a "
+                f"[{self.ctl.meta['vocab']}, {self.ctl.meta['topics']}] "
+                f"table; this job needs [{cfg.V}, {cfg.K}]")
+        self.ctl.push_dense_prefix(wire.MAT_NWK, np.asarray(nwk0.to_dense()))
+        self.ctl.push_dense_prefix(wire.MAT_NK, np.asarray(nk0.value))
+
+        loader = stream_mod.StreamingLoader(self.reader, seed=self.seed,
+                                            prefetch=False)
+        sched = [(c.epoch, c.pos, s) for c, s in
+                 loader.schedule(stream_mod.Cursor(0, 0), self.epochs)]
+        if job.max_shards is not None:
+            sched = sched[:job.max_shards]
+        self.sched = sched
+        self.total_visits = len(sched)
+        mode = job.net_assign
+        self.ctl.plan(sched, mode=mode,
+                      slots=job.workers if mode != "dynamic" else 0,
+                      expected_workers=job.workers)
+
+        base = WorkerConfig(
+            server=self.address, stream_dir=self.stream_dir,
+            num_topics=cfg.K, alpha=cfg.alpha, beta=cfg.beta,
+            mh_steps=cfg.mh_steps, block_tokens=cfg.block_tokens,
+            model_blocks=self.exec_cfg.model_blocks,
+            staleness=int(self.exec_cfg.staleness),
+            hot_words=self.exec_cfg.hot_words,
+            use_kernels=cfg.use_kernels, seed=self.seed,
+            commit_hot_rows=self.exec_cfg.hot_words or 0)
+        self.pool = WorkerPool(self.address, base, log_fn=self.log_fn)
+        self.pool.start(job.workers)
+        self._shard_tokens = [self.reader.shard(s, load_z=False).n_tokens
+                              for s in range(meta.num_shards)]
+        self.info = {"mode": "net", "workers": job.workers,
+                     "net_assign": mode, "server": self.address,
+                     "stream_shards": meta.num_shards,
+                     "tokens_per_shard": meta.tokens_per_shard,
+                     "num_tokens": meta.num_tokens,
+                     "total_visits": self.total_visits}
+        self.shards_done = 0
+        self.tokens_seen = 0
+        self.t0 = time.time()
+
+    def schedule(self):
+        return range(self.total_visits)
+
+    def step(self, i: int):
+        """Wait for the (i+1)-th lease commit, supervising the pool."""
+        deadline = time.time() + self.visit_timeout
+        while True:
+            self.pool.reap()
+            st = self.ctl.status()
+            leases = st.get("leases") or {}
+            if leases.get("done", 0) > i:
+                break
+            if self.pool.alive() == 0:
+                raise RuntimeError(
+                    f"all workers exited with "
+                    f"{self.total_visits - leases.get('done', 0)} visits "
+                    f"unfinished: {leases}")
+            if time.time() > deadline:
+                raise TimeoutError(
+                    f"no lease commit within {self.visit_timeout}s "
+                    f"(done={leases.get('done', 0)}/{self.total_visits})")
+            time.sleep(0.05)
+        self.shards_done = i + 1
+        self.tokens_seen += self._shard_tokens[self.sched[i][2]]
+
+    def view(self, i: int) -> SweepView:
+        e, p, s = self.sched[i]
+        return SweepView(self, step=self.shards_done, epoch=e, pos=p,
+                         shard_id=s,
+                         is_last=(self.shards_done >= self.total_visits),
+                         state=None, nwk=None, nk=None,
+                         tokens_seen=self.tokens_seen,
+                         cursor_next=stream_mod.Cursor(e, p).next(
+                             self.reader.meta.num_shards))
+
+    # -- observation hooks -------------------------------------------------
+    def sync(self, view):
+        pass
+
+    def perplexity(self, view) -> float:
+        """Live stream-wide eval: current server counts + persisted z.
+        Mid-training this reads *moving* state (atomic per shard); the
+        final call sees the quiesced model."""
+        nwk = self.ctl.pull_full(self._wire.MAT_NWK)
+        nk = self.ctl.pull_full(self._wire.MAT_NK)
+        return ppl.stream_training_perplexity(self.reader, nwk, nk,
+                                              self.cfg.alpha, self.cfg.beta)
+
+    def history_row(self, view, p: float) -> dict:
+        el = view.elapsed_s
+        return {"epoch": view.epoch, "pos": view.pos,
+                "shard": view.shard_id, "perplexity": p, "elapsed_s": el,
+                "tokens_per_s": self.tokens_seen / el}
+
+    def log_line(self, view, p: float) -> str:
+        el = view.elapsed_s
+        return (f"[net] visit {view.step}/{self.total_visits} "
+                f"(epoch {view.epoch})  perplexity {p:9.2f}  "
+                f"({self.tokens_seen / el:,.0f} tok/s)")
+
+    def checkpoint(self, view, path: str):
+        raise NotImplementedError(
+            "checkpointing the net plane is not supported (LDAJob "
+            "validation rejects it)")
+
+    # -- loop plumbing -----------------------------------------------------
+    def should_stop(self) -> bool:
+        return False
+
+    def final_view(self, last: Optional[SweepView]) -> Optional[SweepView]:
+        if last is not None:
+            return last
+        return SweepView(self, step=0, epoch=0, pos=0, shard_id=None,
+                         is_last=True, state=None, nwk=None, nk=None,
+                         tokens_seen=0,
+                         cursor_next=stream_mod.Cursor(0, 0))
+
+    def finish(self, stopped: bool):
+        status = self.pool.join(timeout=self.visit_timeout)
+        self._final = (self.ctl.pull_full(self._wire.MAT_NWK),
+                       self.ctl.pull_full(self._wire.MAT_NK))
+        self.info["server_status"] = status
+        self.pool.close()
+        if self._server is not None:
+            self.ctl.shutdown()      # embedded server dies with the run
+            self._server = None
+        self.ctl.close()
+        el = time.time() - self.t0
+        if self.shards_done:
+            self.log_fn(f"[net] done: {self.shards_done} shard visits over "
+                        f"{self.job.workers} workers in {el:.1f}s "
+                        f"({self.tokens_seen / el:,.0f} tok/s)")
+
+    def result(self) -> SessionResult:
+        nwk_np, nk_np = self._final
+        nwk = self._client.matrix_from_dense(jnp.asarray(nwk_np))
+        nk = self._client.wrap_vector(jnp.asarray(nk_np))
+        return SessionResult(nwk, nk, [], self.info, None, self.reader)
+
+
+# ---------------------------------------------------------------------------
 # SPMD planes share the mesh resolution (and its failure modes).
 # ---------------------------------------------------------------------------
 
@@ -1069,6 +1301,10 @@ class Session:
                                          seed=job.seed,
                                          mesh_model=job.mesh_model,
                                          log_fn=self.log_fn)
+            elif job.backend == NET:
+                # a sweep over the materialised corpus == one stream epoch
+                self._plane = _NetPlane(corp, cfg, exec_cfg, job.sweeps,
+                                        job, log_fn=self.log_fn)
             elif job.storage == "tiered":
                 self._plane = _TieredPlane(corp, cfg, exec_cfg, job.sweeps,
                                            job, log_fn=self.log_fn)
@@ -1092,6 +1328,9 @@ class Session:
                     reader, cfg, exec_cfg, job.epochs, seed=job.seed,
                     mesh_model=job.mesh_model, max_shards=job.max_shards,
                     log_fn=self.log_fn)
+            elif job.backend == NET:
+                self._plane = _NetPlane(reader, cfg, exec_cfg, job.epochs,
+                                        job, log_fn=self.log_fn)
             else:
                 self._plane = _StreamPlane(
                     reader, cfg, exec_cfg, job.epochs, seed=job.seed,

@@ -78,3 +78,40 @@ def training_perplexity(w, d, valid, ndk, nwk_dense, nk,
     ll = log_likelihood(w, d, valid, theta, phi, ndk.shape[0])
     n = jnp.maximum(valid.sum(), 1)
     return jnp.exp(-ll / n)
+
+
+def stream_training_perplexity(reader, nwk_dense, nk, alpha: float,
+                               beta: float) -> float:
+    """In-sample perplexity over a whole sharded stream.
+
+    ``phi`` comes from the global count tables; each shard contributes
+    its log-likelihood with ``theta`` rebuilt from the shard's persisted
+    assignments -- the same "assignments are data, counts are derived"
+    discipline the streamed trainer uses.  One pass, one shard resident
+    at a time; this is how planes without a resident ``SamplerState``
+    (the network plane) evaluate.
+    """
+    import numpy as np
+
+    phi = phi_from_counts(jnp.asarray(nwk_dense, jnp.float32),
+                          jnp.asarray(nk, jnp.float32), beta)
+    k = phi.shape[1]
+    meta = reader.meta
+    pos = np.arange(meta.tokens_per_shard)
+    total_ll, total_n = 0.0, 0
+    for sid in range(meta.num_shards):
+        shard = reader.shard(sid)
+        if shard.z is None:
+            raise FileNotFoundError(f"shard {sid} has no z file")
+        valid_np = pos < shard.n_tokens
+        d = np.asarray(shard.d)
+        ndk = np.zeros((meta.doc_cap, k), np.int32)
+        np.add.at(ndk, (d, np.asarray(shard.z)),
+                  valid_np.astype(np.int32))
+        theta = theta_from_counts(jnp.asarray(ndk, jnp.float32), alpha)
+        ll = log_likelihood(jnp.asarray(shard.w), jnp.asarray(d),
+                            jnp.asarray(valid_np), theta, phi,
+                            meta.doc_cap)
+        total_ll += float(ll)
+        total_n += int(shard.n_tokens)
+    return float(np.exp(-total_ll / max(total_n, 1)))

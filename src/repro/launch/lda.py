@@ -15,6 +15,13 @@ the model axis (cyclic rows of n_wk, paper section 2.2):
 Out-of-core: ``--stream-dir`` streams a sharded on-disk corpus through
 the PS client (optionally combined with ``--devices``: groups of stream
 shards feed the SPMD workers).
+
+Multi-process (network PS, DESIGN.md section 15): ``--backend net``
+spawns an elastic localhost worker pool against an embedded server, or
+against an already-running ``python -m repro.launch.ps_server`` when
+``--server host:port`` is given:
+  PYTHONPATH=src python -m repro.launch.lda --backend net --workers 4 \
+      --stream-dir experiments/stream ...
 """
 import argparse
 import os
@@ -65,6 +72,13 @@ def job_from_args(args) -> "api.LDAJob":
                   "backend uses the full-snapshot executor); ignoring")
         common.update(backend=api.SPMD, mesh_model=args.mesh_model,
                       model_blocks=0)
+    elif args.backend == api.NET:
+        common.update(backend=api.NET, workers=args.workers,
+                      server=args.server or None,
+                      net_assign=args.net_assign)
+    elif args.server:
+        ap_error = ("--server requires --backend net")
+        raise api.JobValidationError(ap_error)
 
     if args.stream_dir:
         if not os.path.exists(os.path.join(args.stream_dir,
@@ -75,7 +89,7 @@ def job_from_args(args) -> "api.LDAJob":
             print(f"[lda] sharded {meta.num_tokens} tokens into "
                   f"{meta.num_shards} shards at {args.stream_dir}")
         ckpt = api.CheckpointPolicy()
-        if not args.devices:
+        if not args.devices and args.backend != api.NET:
             path = args.checkpoint or os.path.join(args.out,
                                                    "stream_ckpt.npz")
             ckpt = api.CheckpointPolicy(path=path,
@@ -83,7 +97,7 @@ def job_from_args(args) -> "api.LDAJob":
                                         resume=args.resume)
         elif args.checkpoint or args.resume:
             print("[lda] note: checkpoint/resume is not supported on the "
-                  "streamed SPMD path; ignoring")
+                  "streamed SPMD/net paths; ignoring")
         return api.LDAJob(stream_dir=args.stream_dir, checkpoint=ckpt,
                           **common)
 
@@ -152,6 +166,19 @@ def main():
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host devices and run distributed")
     ap.add_argument("--mesh-model", type=int, default=2)
+    ap.add_argument("--backend", default="",
+                    choices=["", api.IN_PROCESS, api.SPMD, api.NET],
+                    help="parameter-server backend (default: inferred; "
+                         "'net' trains through worker subprocesses against "
+                         "a network PS, DESIGN.md sec. 15)")
+    ap.add_argument("--server", default="",
+                    help="net backend: address (host:port) of a running "
+                         "launch.ps_server process (default: embed one)")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="net backend: size of the localhost worker pool")
+    ap.add_argument("--net-assign", default="dynamic",
+                    choices=["dynamic", "static", "static_steal"],
+                    help="net backend: shard-to-worker assignment policy")
     ap.add_argument("--eval-every", type=int, default=10)
     ap.add_argument("--model-blocks", type=int, default=0,
                     help="blocked/pipelined sweep (paper sec 3.4): pull the "
@@ -206,7 +233,10 @@ def main():
         print(f"[lda] trace written to {job.obs.trace_path} (load in "
               f"Perfetto); summarise with: python -m "
               f"repro.launch.obs_report {args.trace_dir}")
-    if args.stream_dir and not args.devices:
+    if args.backend == api.NET:
+        print(f"[lda] net training done: {result.info.get('workers')} "
+              f"workers against {result.info.get('server')}")
+    elif args.stream_dir and not args.devices:
         print(f"[lda] stream training done ({result.info['mode']} "
               f"executor); checkpoint at {job.checkpoint.path}")
     elif args.checkpoint and not args.devices and not args.stream_dir:

@@ -18,6 +18,11 @@ Five sections, each skipped gracefully when its inputs are absent:
     (``ps.tier.*`` gauges) and the H2D cost of cold misses
     (``tier.miss_fetch`` spans), present only for ``storage="tiered"``
     runs;
+  * **network** -- the RPC transport's per-op cost table from the
+    ``ps.rpc.*`` counters (calls, bytes out/in per wire op) plus the
+    fault-tolerance tallies (retries, reconnects), present only for
+    ``backend="net"`` runs (DESIGN.md section 15); per-op latency
+    distributions appear with the other ``ps.rpc.ms.*`` histograms;
   * **serving latency** -- p50/p90/p95/p99 for every ``serve.*`` (and any
     other) histogram in the metrics dump -- the SLO view over
     ``QueryEngine`` requests;
@@ -161,6 +166,33 @@ def admission_stats(metrics: List[dict]) -> Optional[dict]:
             "version": gauges.get("serve.snapshot_version")}
 
 
+def network_rows(metrics: List[dict]) -> Optional[dict]:
+    """Per-op RPC traffic table + transport fault tallies.
+
+    Built from the ``ps.rpc.calls.<op>`` / ``ps.rpc.bytes_out.<op>`` /
+    ``ps.rpc.bytes_in.<op>`` counters the net transport emits, plus the
+    ``ps.rpc.retries`` / ``ps.rpc.reconnects`` totals.  None when the
+    run never used the network backend.
+    """
+    counters = {m["name"]: m.get("value", 0) for m in metrics
+                if m.get("kind") == "counter"
+                and m.get("name", "").startswith("ps.rpc.")}
+    if not counters:
+        return None
+    ops: Dict[str, dict] = {}
+    for name, value in counters.items():
+        parts = name.split(".")
+        if len(parts) != 4 or parts[2] not in ("calls", "bytes_out",
+                                               "bytes_in"):
+            continue
+        ops.setdefault(parts[3], {"op": parts[3], "calls": 0,
+                                  "bytes_out": 0,
+                                  "bytes_in": 0})[parts[2]] += value
+    return {"ops": sorted(ops.values(), key=lambda r: -r["calls"]),
+            "retries": counters.get("ps.rpc.retries", 0),
+            "reconnects": counters.get("ps.rpc.reconnects", 0)}
+
+
 def latency_rows(metrics: List[dict]) -> List[dict]:
     """Every histogram's percentile summary (serve.* first)."""
     rows = [m for m in metrics if m.get("kind") == "histogram"
@@ -232,6 +264,18 @@ def render(trace_dir: str, trace_file: str = "trace.json",
                 f"({tier['fetch_rows']} rows, "
                 f"{_fmt_bytes(tier['h2d_bytes']).strip()} H2D, "
                 f"{tier['fetch_ms']:.1f} ms total)")
+
+    net = network_rows(metrics)
+    if net is not None:
+        out += ["", "network (ps.rpc transport, DESIGN.md sec. 15)",
+                f"  {'op':<20} {'calls':>8} {'bytes out':>12} "
+                f"{'bytes in':>12}"]
+        for r in net["ops"]:
+            out.append(f"  {r['op']:<20} {r['calls']:>8} "
+                       f"{_fmt_bytes(r['bytes_out']):>12} "
+                       f"{_fmt_bytes(r['bytes_in']):>12}")
+        out.append(f"  retries={net['retries']}  "
+                   f"reconnects={net['reconnects']}")
 
     lats = latency_rows(metrics)
     if lats:

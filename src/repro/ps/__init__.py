@@ -18,7 +18,8 @@ underneath -- constructing ``DistributedMatrix`` / ``DistributedVector``
 directly outside this package is deprecated (CI-gated).
 """
 from repro.ps.backend import Backend, InProcessBackend, SpmdBackend
-from repro.ps.client import (MatrixHandle, PSClient, PullHandle,
+from repro.ps.client import (BACKEND_NAMES, BackendConfigError,
+                             MatrixHandle, PSClient, PullHandle,
                              ReadOnlyView, VectorHandle, client_for)
 from repro.ps.coldstore import ColdStore
 from repro.ps.routes import (CooRoute, DenseRoute, HybridRoute, PushRoute,
@@ -28,6 +29,9 @@ from repro.ps.tiered import (TieredBackend, TieredMatrix,
                              TieredMatrixHandle, TierStats,
                              tiered_matrix_from_dense)
 from repro.ps import autotune
+# net last: its backend/handles build on the route + client surfaces above
+from repro.ps import net
+from repro.ps.net import NetBackend, NetClient, NetMatrixHandle
 
 __all__ = [
     "Backend", "InProcessBackend", "SpmdBackend", "TieredBackend",
@@ -38,4 +42,6 @@ __all__ = [
     "CooRoute", "DenseRoute", "HybridRoute", "PushRoute", "Reassign",
     "RouteDelta", "partition_by_mask", "partition_reassign", "route_for",
     "autotune",
+    "net", "NetBackend", "NetClient", "NetMatrixHandle",
+    "BACKEND_NAMES", "BackendConfigError",
 ]

@@ -39,6 +39,21 @@ from repro.core.pserver import DistributedMatrix, DistributedVector
 from repro.ps.backend import Backend, InProcessBackend, SpmdBackend
 from repro.ps.routes import DenseRoute, PushRoute, Reassign, RouteDelta
 
+#: The backend names ``PSClient.create(backend=...)`` accepts.
+BACKEND_NAMES = ("in_process", "spmd", "tiered", "net")
+
+
+class BackendConfigError(ValueError):
+    """An unknown or mis-configured ``backend=`` selection.
+
+    Carries ``.valid`` -- the legal names -- so callers (and the error
+    message itself) can list the choices instead of guessing.
+    """
+
+    def __init__(self, msg: str, valid: Tuple[str, ...] = BACKEND_NAMES):
+        super().__init__(f"{msg}; valid backends: {', '.join(valid)}")
+        self.valid = tuple(valid)
+
 
 @jax.tree_util.register_pytree_node_class
 class PullHandle:
@@ -394,27 +409,68 @@ class PSClient:
     interpret: Optional[bool] = None
 
     @classmethod
-    def create(cls, num_shards: int = 1, *, mesh=None, axis_name=None,
+    def create(cls, num_shards: int = 1, *, backend=None, server=None,
+               mesh=None, axis_name=None,
                model_axis: Optional[str] = None,
                interpret: Optional[bool] = None) -> "PSClient":
-        """Build a client; the backend is inferred from the mesh arguments.
+        """Build a client.
 
-        No mesh/axes: ``InProcessBackend`` (single device).  Any of
-        ``mesh`` / ``axis_name`` / ``model_axis``: ``SpmdBackend`` for use
-        under ``shard_map`` -- ``axis_name`` defaults to all of the mesh's
-        axes (every shard is a worker), ``model_axis`` names the server
-        axis holding the cyclic ``n_wk`` rows.
+        ``backend`` selects by name (``BACKEND_NAMES``: ``"in_process"``,
+        ``"spmd"``, ``"tiered"``, ``"net"``) or takes a ``Backend``
+        instance directly; an unknown name raises ``BackendConfigError``
+        listing the choices.  ``backend=None`` keeps the historical
+        inference: no mesh/axes means ``InProcessBackend`` (single
+        device), any of ``mesh`` / ``axis_name`` / ``model_axis`` means
+        ``SpmdBackend`` for use under ``shard_map`` -- ``axis_name``
+        defaults to all of the mesh's axes (every shard is a worker),
+        ``model_axis`` names the server axis holding the cyclic ``n_wk``
+        rows.  ``backend="net"`` with ``server="host:port"`` connects a
+        ``NetClient`` to a running ``repro.launch.ps_server``; without
+        ``server`` the net backend is detached (structural use only).
         """
-        if mesh is None and axis_name is None and model_axis is None:
-            backend: Backend = InProcessBackend()
-        else:
-            if axis_name is None and mesh is not None:
-                axis_name = tuple(mesh.axis_names)
-            if isinstance(axis_name, list):
-                axis_name = tuple(axis_name)
-            backend = SpmdBackend(axis_name=axis_name, model_axis=model_axis)
+        if isinstance(backend, str):
+            backend = cls._backend_by_name(backend, server=server,
+                                           mesh=mesh, axis_name=axis_name,
+                                           model_axis=model_axis)
+        elif backend is None:
+            if mesh is None and axis_name is None and model_axis is None:
+                backend = InProcessBackend()
+            else:
+                backend = cls._spmd_backend(mesh, axis_name, model_axis)
+        elif not isinstance(backend, Backend):
+            raise BackendConfigError(
+                f"backend must be a name or a ps.Backend instance "
+                f"(got {type(backend).__name__})")
         return cls(backend=backend, num_shards=num_shards,
                    interpret=interpret)
+
+    @staticmethod
+    def _spmd_backend(mesh, axis_name, model_axis) -> SpmdBackend:
+        if axis_name is None and mesh is not None:
+            axis_name = tuple(mesh.axis_names)
+        if isinstance(axis_name, list):
+            axis_name = tuple(axis_name)
+        return SpmdBackend(axis_name=axis_name, model_axis=model_axis)
+
+    @classmethod
+    def _backend_by_name(cls, name: str, *, server, mesh, axis_name,
+                         model_axis) -> Backend:
+        if name == "in_process":
+            return InProcessBackend()
+        if name == "spmd":
+            if mesh is None and axis_name is None:
+                raise BackendConfigError(
+                    "backend='spmd' needs mesh= or axis_name= (the "
+                    "shard_map axes the collectives run over)")
+            return cls._spmd_backend(mesh, axis_name, model_axis)
+        if name == "tiered":
+            from repro.ps.tiered import TieredBackend
+            return TieredBackend()
+        if name == "net":
+            from repro.ps.net import NetBackend, NetClient
+            net = NetClient.connect(server) if server else None
+            return NetBackend(net=net)
+        raise BackendConfigError(f"unknown backend {name!r}")
 
     def with_backend(self, backend: Backend) -> "PSClient":
         return dataclasses.replace(self, backend=backend)

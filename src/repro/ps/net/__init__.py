@@ -1,0 +1,28 @@
+"""Network parameter server: the PS as a standalone process.
+
+The paper runs workers and parameter servers as independent processes
+joined only by an RPC key-value interface (section 2.1, Glint);
+``repro.ps.net`` is that plane: a TCP server hosting the count tables
+(``server``), a fault-tolerant exactly-once client transport
+(``transport``), the third ``Backend`` + net-backed handles
+(``backend``), the worker loop (``worker``) and the elastic localhost
+pool (``pool``).  Wire format and op codes live in ``wire``; DESIGN.md
+section 15 is the spec.
+"""
+from repro.ps.net import wire
+from repro.ps.net.backend import (NetBackend, NetMatrixHandle,
+                                  NetVectorHandle)
+from repro.ps.net.pool import WorkerPool
+from repro.ps.net.server import PSServer, TableStore
+from repro.ps.net.transport import (FaultInjector, NetClient, ServerError,
+                                    Transport, TransportConfig,
+                                    TransportError)
+from repro.ps.net.worker import WorkerConfig, run_worker
+
+__all__ = [
+    "wire", "PSServer", "TableStore",
+    "Transport", "TransportConfig", "TransportError", "ServerError",
+    "FaultInjector", "NetClient",
+    "NetBackend", "NetMatrixHandle", "NetVectorHandle",
+    "WorkerConfig", "run_worker", "WorkerPool",
+]

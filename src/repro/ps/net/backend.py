@@ -1,0 +1,147 @@
+"""``NetBackend`` -- the third ``Backend``: parameters live in a
+``PSServer`` process and every pull/push crosses the wire.
+
+Unlike ``SpmdBackend`` the merge point is not a collective but the
+server itself (plain integer adds under its lock), so from the local
+jit's point of view the protocol moments are identities -- exactly like
+``InProcessBackend`` -- and the network I/O happens at the *handle*
+boundary: ``NetMatrixHandle.push`` plans the route locally (the same
+``PushRoute`` plan the in-process handle applies) and ships the plan's
+two halves as the wire's two push ops, ``push_dense_prefix`` for the
+prefix-dense part and ``push_coo`` for the coordinate part.  Because
+both sides apply the same integer adds, any route is bitwise identical
+to the in-process handle -- the conformance law
+``tests/test_ps.py::TestNetBackendConformance`` pins.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ps.net import wire
+from repro.ps.net.transport import NetClient
+from repro.ps.routes import DenseRoute, PushRoute, Reassign
+
+
+@dataclasses.dataclass(frozen=True)
+class NetBackend:
+    """Backend whose authoritative storage is a remote ``PSServer``.
+
+    ``net=None`` is a detached backend (structural conformance only);
+    with a connected ``NetClient``, ``pull_full`` refreshes the local
+    mirror from the server.  ``reduce``/``gather_concat``/``localize``
+    are identities: worker contributions merge server-side.
+    """
+
+    net: Optional[NetClient] = None
+    axis_name = None
+    model_axis = None
+
+    def pull_full(self, storage):
+        if self.net is None:
+            return storage
+        dense = jnp.asarray(self.net.pull_full(wire.MAT_NWK))
+        from repro.core.pserver import DistributedMatrix
+        return DistributedMatrix.from_dense(dense, storage.num_shards)
+
+    def reduce(self, delta: jax.Array) -> jax.Array:
+        return delta
+
+    def gather_concat(self, x: jax.Array) -> jax.Array:
+        return x
+
+    def localize(self, full):
+        return full
+
+
+class NetMatrixHandle:
+    """Client handle for the server-resident ``[V, K]`` table.
+
+    Duck-types the read/push surface of ``ps.MatrixHandle``: pulls
+    return ``PullHandle`` futures over freshly fetched rows, pushes plan
+    through the handle's ``PushRoute`` and ship the plan over the wire.
+    Pushes mutate the *server*; the handle itself stays stateless, so
+    "push then pull" reads back the merged global state -- the network
+    analogue of the functional in-process update.
+    """
+
+    def __init__(self, net: NetClient, num_rows: int, cols: int, *,
+                 route: PushRoute = DenseRoute(),
+                 interpret: Optional[bool] = None):
+        self.net = net
+        self.num_rows = int(num_rows)
+        self.cols = int(cols)
+        self.route = route
+        self.interpret = interpret
+
+    # -- pulls ---------------------------------------------------------------
+    def pull_all(self):
+        from repro.ps.client import PullHandle
+        return PullHandle(jnp.asarray(self.net.pull_full(wire.MAT_NWK)))
+
+    def pull_block(self, block: int, rows_per_block: int):
+        from repro.ps.client import PullHandle
+        start = block * rows_per_block
+        nrows = min(rows_per_block, self.num_rows - start)
+        return PullHandle(jnp.asarray(
+            self.net.pull_block(wire.MAT_NWK, start, nrows)))
+
+    def to_dense(self) -> jax.Array:
+        return self.pull_all().result()
+
+    # -- pushes --------------------------------------------------------------
+    def push(self, re: Reassign, *, use_kernels: bool = False,
+             interpret: Optional[bool] = None,
+             hot_prefix: Optional[int] = None) -> "NetMatrixHandle":
+        interpret = self.interpret if interpret is None else interpret
+        plan = self.route.plan(re, self.num_rows, self.cols,
+                               use_kernels=use_kernels, prefix_rows=True,
+                               hot_prefix=hot_prefix, interpret=interpret)
+        if plan.dense is not None:
+            self.net.push_dense_prefix(wire.MAT_NWK,
+                                       np.asarray(plan.dense), start=0)
+        if plan.coo is not None:
+            rows, cols, vals = (np.asarray(x) for x in plan.coo)
+            self.net.push_coo(wire.MAT_NWK, rows, cols, vals)
+        return self
+
+    def push_dense(self, delta) -> "NetMatrixHandle":
+        self.net.push_dense_prefix(wire.MAT_NWK, np.asarray(delta), start=0)
+        return self
+
+    push_prefix = push_dense
+
+    def push_coo(self, rows, cols, vals, **_) -> "NetMatrixHandle":
+        self.net.push_coo(wire.MAT_NWK, np.asarray(rows),
+                          np.asarray(cols), np.asarray(vals))
+        return self
+
+
+class NetVectorHandle:
+    """Client handle for the server-resident ``[K]`` topic totals."""
+
+    def __init__(self, net: NetClient, n: int):
+        self.net = net
+        self.n = int(n)
+
+    def pull_all(self):
+        from repro.ps.client import PullHandle
+        return PullHandle(jnp.asarray(self.net.pull_full(wire.MAT_NK)))
+
+    @property
+    def value(self) -> jax.Array:
+        return self.pull_all().result()
+
+    def push_dense(self, delta) -> "NetVectorHandle":
+        self.net.push_dense_prefix(wire.MAT_NK, np.asarray(delta), start=0)
+        return self
+
+    def push(self, idx, deltas) -> "NetVectorHandle":
+        idx = np.asarray(idx, wire.I4)
+        self.net.push_coo(wire.MAT_NK, idx, np.zeros_like(idx),
+                          np.asarray(deltas))
+        return self

@@ -1,0 +1,237 @@
+"""The network worker: one member of the elastic pool.
+
+A worker owns no global state.  Per granted lease it (1) reads the
+shard's persisted assignments, (2) pulls a fresh count snapshot from the
+server, (3) runs the *existing* stream executor sweep against local
+in-process handles -- with ``stream_sweep_key(seed, epoch, pos)``, so
+the draw depends only on the schedule position, never on which worker
+runs it -- and (4) ships the transactional commit: the z-diff's count
+deltas plus the new assignments, applied/persisted atomically server
+side.  Because the deltas are plain integer adds, any interleaving of
+workers conserves counts; because redo is deterministic, a worker killed
+mid-lease costs only wall clock.
+
+The module doubles as the subprocess entry point
+(``python -m repro.ps.net.worker <config.json>``) the ``WorkerPool``
+spawns, and exports ``run_worker`` for in-thread use in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import sys
+import time
+from typing import Optional
+
+from repro.ps.net import wire
+from repro.ps.net.transport import FaultInjector, NetClient, TransportConfig
+
+
+@dataclasses.dataclass
+class WorkerConfig:
+    """Everything one worker process needs, JSON-serialisable."""
+
+    server: str                     # "host:port"
+    stream_dir: str
+    num_topics: int
+    alpha: float = 0.1
+    beta: float = 0.01
+    mh_steps: int = 2
+    block_tokens: int = 8192
+    model_blocks: int = 0
+    staleness: int = 0
+    hot_words: Optional[int] = None
+    use_kernels: bool = False
+    seed: int = 0
+    name: str = ""
+    commit_hot_rows: int = 0        # rows committed as a dense prefix
+    slow_ms: float = 0.0            # straggler emulation: sleep per visit
+    delay_ms: float = 0.0           # emulated per-op RTT (TransportConfig)
+    timeout_s: float = 15.0
+    retries: int = 6
+    fault: str = ""                 # FaultInjector.from_spec
+    poll_s: float = 0.05            # acquire back-off while waiting
+    warmup: bool = True             # jit-compile before registering
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self))
+
+    @classmethod
+    def from_json(cls, text: str) -> "WorkerConfig":
+        return cls(**json.loads(text))
+
+
+def _commit_deltas(w, z_old, z_new, changed, vocab, k, hot_rows):
+    """Host-side diff of one sweep: hot-prefix dense delta, cold COO
+    triple, and the nk delta -- the same +-1 integer adds every
+    ``PushRoute`` plans, computed from the assignment diff."""
+    import numpy as np
+
+    wc = w[changed]
+    zo = z_old[changed]
+    zn = z_new[changed]
+    hot = wc < hot_rows
+    dense = np.zeros((hot_rows, k), wire.I4)
+    if hot_rows and hot.any():
+        np.add.at(dense, (wc[hot], zo[hot]), -1)
+        np.add.at(dense, (wc[hot], zn[hot]), 1)
+    wcold = wc[~hot]
+    n = wcold.shape[0]
+    rows = np.concatenate([wcold, wcold]).astype(wire.I4)
+    cols = np.concatenate([zo[~hot], zn[~hot]]).astype(wire.I4)
+    vals = np.concatenate([np.full(n, -1, wire.I4),
+                           np.full(n, 1, wire.I4)])
+    nk_delta = (np.bincount(zn, minlength=k)
+                - np.bincount(zo, minlength=k)).astype(wire.I4)
+    return dense, (rows, cols, vals), nk_delta
+
+
+def run_worker(cfg: WorkerConfig, *, log_fn=None) -> dict:
+    """Join the pool at ``cfg.server`` and work the lease queue dry.
+
+    Returns run stats: ``{"worker", "visits", "superseded", "retries",
+    "reconnects"}``.
+    """
+    # jax import deferred so the subprocess pays it after connecting
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import lightlda as lda
+    from repro.data import stream as stream_mod
+    from repro.ps.client import PSClient
+    from repro.train import async_exec
+
+    log = log_fn or (lambda *a: None)
+    reader = stream_mod.ShardedCorpusReader(cfg.stream_dir)
+    meta = reader.meta
+    lcfg = lda.LDAConfig(num_topics=cfg.num_topics,
+                         vocab_size=meta.vocab_size, alpha=cfg.alpha,
+                         beta=cfg.beta, mh_steps=cfg.mh_steps,
+                         block_tokens=cfg.block_tokens, num_shards=1,
+                         use_kernels=cfg.use_kernels)
+    ecfg = async_exec.ExecConfig(staleness=cfg.staleness,
+                                 hot_words=cfg.hot_words,
+                                 model_blocks=cfg.model_blocks)
+    client = PSClient.create(num_shards=1)
+    k = lcfg.K
+    valid_np = np.arange(meta.tokens_per_shard)
+
+    # compile before registering: the server's start gate holds every
+    # worker until the pool is complete, so warming the executor here
+    # keeps one-time jit cost out of the training (and benchmark) window
+    step_fn = build_index = None
+    if cfg.warmup:
+        zeros_m = client.matrix_from_dense(
+            jnp.zeros((meta.vocab_size, k), jnp.int32))
+        step_fn, build_index, _ = async_exec.make_stream_executor(
+            lcfg, ecfg, zeros_m.layout)
+        n = meta.tokens_per_shard
+        wz = np.zeros(n, np.int32)
+        st0 = lda.SamplerState(
+            jnp.asarray(wz), jnp.asarray(wz), jnp.asarray(wz),
+            jnp.zeros(n, bool), jnp.zeros(meta.doc_cap, jnp.int32),
+            jnp.zeros(meta.doc_cap, jnp.int32), zeros_m,
+            client.wrap_vector(jnp.zeros((k,), jnp.int32)),
+            jnp.zeros((meta.doc_cap, k), jnp.int32))
+        key0 = jax.random.PRNGKey(0)
+        if build_index is not None:
+            idx0, bval0 = build_index(wz, np.zeros(n, bool))
+            jax.block_until_ready(step_fn(st0, key0, idx0, bval0).z)
+        else:
+            jax.block_until_ready(step_fn(st0, key0).z)
+
+    tcfg = TransportConfig(timeout=cfg.timeout_s, retries=cfg.retries,
+                           delay_ms=cfg.delay_ms)
+    fault = FaultInjector.from_spec(cfg.fault)
+    net = NetClient.connect(cfg.server, name=cfg.name, config=tcfg,
+                            fault=fault)
+    hello = net.meta
+    if hello["vocab"] != meta.vocab_size:
+        raise ValueError(f"server vocab {hello['vocab']} != stream vocab "
+                         f"{meta.vocab_size}")
+    visits = superseded = 0
+    while True:
+        st, lease = net.acquire()
+        if st == "done":
+            break
+        if st != "lease":
+            time.sleep(cfg.poll_s)
+            continue
+        shard = reader.shard(lease.shard_id)
+        if shard.z is None:
+            raise FileNotFoundError(
+                f"shard {lease.shard_id} has no z file; stream was never "
+                f"initialised")
+        z_old = np.array(shard.z)
+        nwk_np = net.pull_full(wire.MAT_NWK)
+        nk_np = net.pull_full(wire.MAT_NK)
+        nwk = client.matrix_from_dense(jnp.asarray(nwk_np))
+        nk = client.wrap_vector(jnp.asarray(nk_np))
+        if step_fn is None:
+            step_fn, build_index, _ = async_exec.make_stream_executor(
+                lcfg, ecfg, nwk.layout)
+        w = jnp.asarray(shard.w)
+        d = jnp.asarray(shard.d)
+        z = jnp.asarray(z_old)
+        valid = jnp.asarray(valid_np < shard.n_tokens)
+        ndk = jnp.zeros((meta.doc_cap, k), jnp.int32).at[d, z].add(
+            valid.astype(jnp.int32))
+        state = lda.SamplerState(w, d, z, valid,
+                                 jnp.asarray(shard.doc_start),
+                                 jnp.asarray(shard.doc_len), nwk, nk, ndk)
+        # the same (seed, schedule-position) key _StreamPlane uses -- the
+        # sweep is identical whichever worker runs it
+        from repro.api.session import stream_sweep_key
+        key = stream_sweep_key(cfg.seed, lease.epoch, lease.pos)
+        if build_index is not None:
+            idx, bval = build_index(shard.w, np.asarray(valid))
+            state = step_fn(state, key, idx, bval)
+        else:
+            state = step_fn(state, key)
+        z_new = np.asarray(state.z)
+        if cfg.slow_ms:
+            time.sleep(cfg.slow_ms / 1000.0)
+        changed = (z_new != z_old) & (valid_np < shard.n_tokens)
+        dense, coo, nk_delta = _commit_deltas(
+            np.asarray(shard.w), z_old, z_new, changed, meta.vocab_size, k,
+            cfg.commit_hot_rows)
+        applied = net.commit(lease.lease_id, dense, coo, nk_delta, z_new)
+        visits += 1
+        if not applied:
+            superseded += 1
+        log(f"[worker {net.t.worker_id}] visit epoch "
+            f"{lease.epoch} pos {lease.pos} shard {lease.shard_id} "
+            f"{'applied' if applied else 'SUPERSEDED'}")
+    out = {"worker": net.t.worker_id, "visits": visits,
+           "superseded": superseded, "retries": net.t.retries,
+           "reconnects": net.t.reconnects}
+    net.close()
+    return out
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if len(argv) != 1:
+        print("usage: python -m repro.ps.net.worker <config.json|json>",
+              file=sys.stderr)
+        return 2
+    text = argv[0]
+    if not text.lstrip().startswith("{"):
+        with open(text) as f:
+            text = f.read()
+    cfg = WorkerConfig.from_json(text)
+    # quiet by default: the pool reads stdout through a pipe only when the
+    # process exits, so unbounded per-visit chatter could fill the pipe
+    # and block the worker
+    import os
+    verbose = os.environ.get("REPRO_NET_WORKER_VERBOSE")
+    log = ((lambda *a: print(*a, flush=True)) if verbose
+           else (lambda *a: None))
+    stats = run_worker(cfg, log_fn=log)
+    print(json.dumps(stats), flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

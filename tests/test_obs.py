@@ -526,6 +526,38 @@ def test_fit_lda_shims_warn_deprecation(lda_state, stream_dir):
                                   max_shards=1,
                                   log_fn=lambda *a, **k: None)
 
+def test_obs_report_network_section(tmp_path):
+    from repro.launch import obs_report
+
+    from repro.obs.metrics import MetricsRegistry
+    reg = MetricsRegistry()
+    for op, n, bo, bi in (("pull_full", 10, 180, 4096000),
+                          ("commit", 8, 512000, 160),
+                          ("acquire", 12, 240, 600)):
+        reg.counter(f"ps.rpc.calls.{op}").inc(n)
+        reg.counter(f"ps.rpc.bytes_out.{op}").inc(bo)
+        reg.counter(f"ps.rpc.bytes_in.{op}").inc(bi)
+    reg.counter("ps.rpc.retries").inc(3)
+    reg.counter("ps.rpc.reconnects").inc(2)
+    for v in (0.5, 1.0, 8.0):
+        reg.histogram("ps.rpc.ms.pull_full").record(v)
+    reg.save(str(tmp_path / "metrics.jsonl"))
+
+    text = obs_report.render(str(tmp_path))
+    assert "network (ps.rpc transport" in text
+    # ops ordered by call volume; traffic columns rendered
+    assert text.index("acquire") < text.index("pull_full") < \
+        text.index("commit")
+    assert "retries=3" in text and "reconnects=2" in text
+    assert "ps.rpc.ms.pull_full" in text      # histogram table picks it up
+    # a run that never used the net backend: no section
+    reg2 = MetricsRegistry()
+    reg2.counter("stream.prefetch_hit").inc(5)
+    reg2.save(str(tmp_path / "m2.jsonl"))
+    assert "network (ps.rpc" not in obs_report.render(
+        str(tmp_path), metrics_file="m2.jsonl")
+
+
 def test_obs_report_admission_section(tmp_path):
     from repro.launch import obs_report
 

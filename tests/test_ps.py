@@ -517,7 +517,7 @@ class TestBackendProtocol:
 
     ALL = [ps.InProcessBackend(), ps.SpmdBackend(),
            ps.SpmdBackend(axis_name="data", model_axis="model"),
-           ps.TieredBackend()]
+           ps.TieredBackend(), ps.NetBackend()]
 
     @pytest.mark.parametrize("backend", ALL,
                              ids=lambda b: type(b).__name__)
@@ -538,7 +538,8 @@ class TestBackendProtocol:
 
     @pytest.mark.parametrize(
         "backend",
-        [ps.InProcessBackend(), ps.SpmdBackend(), ps.TieredBackend()],
+        [ps.InProcessBackend(), ps.SpmdBackend(), ps.TieredBackend(),
+         ps.NetBackend()],
         ids=lambda b: type(b).__name__)
     def test_single_process_moments_are_identity(self, backend):
         """Outside collectives every moment is the identity: pulls see
@@ -551,3 +552,74 @@ class TestBackendProtocol:
         delta = jnp.ones((5, 4), jnp.int32)
         assert backend.reduce(delta) is delta
         assert backend.gather_concat(delta) is delta
+
+
+class TestNetBackendConformance:
+    """Route invariance over the wire (DESIGN.md sec. 15): whatever
+    ``PushRoute`` plans, shipping the plan's dense/COO halves through a
+    loopback ``PSServer`` must land bitwise identically to applying the
+    same plan through ``InProcessBackend`` handles -- both sides are the
+    same integer adds, one applied locally, one under the server lock."""
+
+    V, K = 64, 8
+
+    @pytest.fixture()
+    def loopback(self):
+        from repro.ps.net import NetClient, PSServer
+
+        srv = PSServer(self.V, self.K).start()
+        net = NetClient.connect(srv.address, name="conformance")
+        yield net
+        net.close()
+        srv.stop()
+
+    def test_connected_backend_is_a_backend(self, loopback):
+        from repro.ps.net import NetBackend
+
+        b = NetBackend(loopback)
+        assert isinstance(b, ps.Backend)
+
+    def test_connected_pull_full_refreshes_from_server(self, loopback):
+        from repro.ps.net import NetBackend, wire
+
+        dense = np.arange(self.V * self.K, dtype=np.int32).reshape(
+            self.V, self.K)
+        loopback.push_dense_prefix(wire.MAT_NWK, dense)
+        stale = ps.PSClient.create(num_shards=1).matrix_from_dense(
+            jnp.zeros((self.V, self.K), jnp.int32)).storage
+        got = NetBackend(loopback).pull_full(stale)
+        np.testing.assert_array_equal(np.asarray(got.to_dense()), dense)
+
+    @pytest.mark.parametrize("route", [
+        ps.DenseRoute(), ps.CooRoute(),
+        ps.HybridRoute(hot_words=8)], ids=lambda r: r.label)
+    def test_route_invariance_vs_in_process(self, loopback, route):
+        from repro.ps.net import NetMatrixHandle, wire
+
+        rng = np.random.default_rng(3)
+        dense = rng.integers(1, 9, size=(self.V, self.K)).astype(np.int32)
+        loopback.push_dense_prefix(wire.MAT_NWK, dense)
+        local = ps.PSClient.create(num_shards=1).matrix_from_dense(
+            jnp.asarray(dense), route=route)
+        remote = NetMatrixHandle(loopback, self.V, self.K, route=route)
+
+        re = _reassign(self.V, self.K, 160, seed=11)
+        local = local.push(re)
+        remote.push(re)
+        np.testing.assert_array_equal(
+            loopback.pull_full(wire.MAT_NWK),
+            np.asarray(local.to_dense()))
+
+    def test_vector_handle_matches_in_process(self, loopback):
+        from repro.ps.net import NetVectorHandle, wire
+
+        nk0 = np.arange(self.K, dtype=np.int32) * 3
+        loopback.push_dense_prefix(wire.MAT_NK, nk0)
+        local = ps.PSClient.create(num_shards=1).wrap_vector(
+            jnp.asarray(nk0))
+        remote = NetVectorHandle(loopback, self.K)
+        delta = np.array([1, -1, 0, 2, 0, 0, -2, 0], np.int32)
+        local = local.push_dense(jnp.asarray(delta))
+        remote.push_dense(delta)
+        np.testing.assert_array_equal(loopback.pull_full(wire.MAT_NK),
+                                      np.asarray(local.value))
